@@ -1,0 +1,37 @@
+"""Shared state for the benchmark suite: one trained traffic model reused by
+every table (the paper trains once and evaluates PTQ variants of it)."""
+
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import jax.numpy as jnp
+
+from repro.data.traffic import make_traffic_dataset
+from repro.models.lstm_model import evaluate_mse, train_traffic_model
+
+
+@lru_cache(maxsize=1)
+def trained_traffic_model(seed: int = 0, epochs: int = 30):
+    """Train the paper model (§5.1 recipe) once per process."""
+    data = make_traffic_dataset(seed=seed)
+    t0 = time.time()
+    params, history = train_traffic_model(data, seed=seed, epochs=epochs)
+    train_s = time.time() - t0
+    fp_mse = evaluate_mse(params, data.x_test, data.y_test)
+    return data, params, fp_mse, train_s
+
+
+def timeit(fn, *args, n: int = 5, warmup: int = 2):
+    """us per call (best of n after warmup; results block via jnp)."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jnp.asarray(r[0] if isinstance(r, tuple) else r).block_until_ready()
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jnp.asarray(r[0] if isinstance(r, tuple) else r).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6

@@ -1,0 +1,22 @@
+"""Paper Fig. 3 / Fig. 5: time breakdown of one recursion, sequential vs
+parallel.  Claims: the four gate equations take ~97.1 % of a sequential
+recursion; four parallel ALUs + the pipelined elementwise tail squeeze a
+recursion to 860 cycles (model: 882) — a ~4.1x speedup."""
+
+from repro.core import timing_model as tm
+
+
+def run():
+    s = tm.PAPER_MODEL
+    br = tm.recursion_breakdown(s)
+    ew = tm._elementwise_cycles(s)
+    rows = [
+        {"name": "fig3/sequential_recursion", "us_per_call": br["sequential_cycles"] / 100,
+         "derived": f"cycles={br['sequential_cycles']:.0f} "
+                    f"gate_fraction={br['gate_fraction_sequential']*100:.1f}%(paper 97.1%) "
+                    f"eq34={ew['eq34']}cyc eq35={ew['eq35']}cyc"},
+        {"name": "fig5/parallel_recursion", "us_per_call": br["parallel_cycles"] / 100,
+         "derived": f"cycles={br['parallel_cycles']:.0f}(paper measures 860) "
+                    f"speedup={br['speedup']:.2f}x(paper 4.1x)"},
+    ]
+    return rows

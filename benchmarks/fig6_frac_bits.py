@@ -1,0 +1,33 @@
+"""Paper Fig. 6: test-set MSE vs fractional bits (4..12, 16-bit total,
+activations full precision).  Paper claim: MSE stops improving beyond x=8
+(their 0.1722 plateau) -> (8,16) is the chosen config."""
+
+import jax.numpy as jnp
+
+from benchmarks.common import trained_traffic_model
+from repro.core.fxp import FxpFormat
+from repro.core.quantize import quantize_lstm_model, quantized_lstm_forward
+
+
+def run():
+    data, params, fp_mse, _ = trained_traffic_model()
+    xs, ys = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    rows = []
+    mses = {}
+    for fb in (4, 5, 6, 7, 8, 10, 12):
+        qm = quantize_lstm_model(params, FxpFormat(fb, 16), lut_depth=None)
+        mse = float(jnp.mean((quantized_lstm_forward(qm, xs) - ys) ** 2))
+        mses[fb] = mse
+        rows.append({
+            "name": f"fig6/frac_bits_{fb}",
+            "us_per_call": 0.0,
+            "derived": f"mse={mse:.6f} over_float={mse / fp_mse:.3f}x",
+        })
+    plateau = mses[8] / mses[12]
+    rows.append({
+        "name": "fig6/plateau_check",
+        "us_per_call": 0.0,
+        "derived": f"mse8/mse12={plateau:.3f} "
+                   f"paper_claim_plateau_at_8={'PASS' if plateau < 1.1 else 'FAIL'}",
+    })
+    return rows

@@ -1,0 +1,55 @@
+"""Kernel micro-benchmarks: us/call of the jnp reference paths (the CPU
+runtime) + the analytic VMEM/MXU tiling of the Pallas targets.
+
+Pallas interpret mode executes the kernel body in Python per grid cell —
+meaningful for correctness, meaningless for wall time — so timings here are
+the ref paths; the kernels' TPU performance model is the roofline story in
+EXPERIMENTS.md."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.core.lut import LutSpec, build_table
+from repro.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def run():
+    rows = []
+    # fused LSTM step at paper scale (hidden 20) and at a TPU-tile scale
+    for b, f, h, tag in [(1, 21, 20, "paper"), (256, 256, 128, "tile")]:
+        xh = jnp.asarray(RNG.normal(size=(b, f)).astype(np.float32))
+        w = jnp.asarray(RNG.normal(size=(4, f, h)).astype(np.float32))
+        bias = jnp.zeros((4, h), jnp.float32)
+        c = jnp.zeros((b, h), jnp.float32)
+        fn = jax.jit(ref.lstm_step_ref)
+        us = timeit(fn, xh, w, bias, c, n=5)
+        flops = 2 * b * f * 4 * h
+        rows.append({"name": f"kernel/lstm_step_{tag}", "us_per_call": round(us, 1),
+                     "derived": f"gflops_host={flops/us/1e3:.2f}"})
+
+    spec = LutSpec("sigmoid", 256)
+    table = build_table(spec)
+    x = jnp.asarray(RNG.normal(size=(1 << 16,)).astype(np.float32))
+    fn = jax.jit(lambda x: ref.lut_act_ref(x, table, *spec.bounds))
+    rows.append({"name": "kernel/lut_act_64k", "us_per_call": round(timeit(fn, x, n=5), 1),
+                 "derived": "depth=256"})
+
+    aq = jnp.asarray(RNG.integers(-8000, 8000, (256, 256)), jnp.int32)
+    bq = jnp.asarray(RNG.integers(-8000, 8000, (256, 256)), jnp.int32)
+    fn = jax.jit(lambda a, b: ref.fxp_matmul_ref(a, b, None, 8, 16))
+    rows.append({"name": "kernel/fxp_matmul_256", "us_per_call": round(timeit(fn, aq, bq, n=5), 1),
+                 "derived": "int32-accum (8,16)"})
+
+    x = jnp.asarray(RNG.normal(size=(2, 512, 8, 64)).astype(np.float32))
+    a = -jnp.abs(jnp.asarray(RNG.normal(size=(2, 512, 8)).astype(np.float32))) * 0.1
+    b = jnp.asarray(RNG.normal(size=(2, 512, 8, 64)).astype(np.float32)) * 0.3
+    c = jnp.asarray(RNG.normal(size=(2, 512, 8, 64)).astype(np.float32)) * 0.3
+    from repro.models.ssm import ssd_chunked
+    fn = jax.jit(lambda *args: ssd_chunked(*args, 128))
+    rows.append({"name": "kernel/ssd_chunked_512", "us_per_call": round(timeit(fn, x, a, b, c, n=3), 1),
+                 "derived": "chunked SSD (B2,T512,H8,P64,N64)"})
+    return rows

@@ -1,0 +1,39 @@
+"""Aggregate the dry-run sweep into the §Roofline table rows (deliverable g).
+Reads experiments/dryrun/summary.json if the sweep has been run."""
+
+import json
+from pathlib import Path
+
+_DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+
+
+def run():
+    rows = []
+    files = sorted(_DRYRUN.glob("*.json"))
+    recs = []
+    for f in files:
+        if f.name == "summary.json":
+            continue
+        recs.append(json.loads(f.read_text()))
+    if not recs:
+        return [{"name": "roofline/no_dryrun_yet", "us_per_call": 0.0,
+                 "derived": "run: python -m repro.launch.dryrun --all"}]
+    ok = [r for r in recs if r.get("status") == "ok"]
+    for r in ok:
+        if r.get("mesh") != "16x16":
+            continue
+        rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}",
+            "us_per_call": round(max(r["t_compute_s"], r["t_memory_s"],
+                                     r["t_collective_s"]) * 1e6, 1),
+            "derived": (f"comp={r['t_compute_s']*1e3:.1f}ms "
+                        f"mem={r['t_memory_s']*1e3:.1f}ms "
+                        f"coll={r['t_collective_s']*1e3:.1f}ms "
+                        f"bott={r['bottleneck']} useful={r['useful_ratio']:.2f} "
+                        f"hbm={r['bytes_per_device']/1e9:.1f}GB"),
+        })
+    n_skip = sum(1 for r in recs if r.get("status") == "skipped")
+    n_fail = sum(1 for r in recs if r.get("status") in ("failed", "timeout"))
+    rows.append({"name": "roofline/summary", "us_per_call": 0.0,
+                 "derived": f"ok={len(ok)} skipped={n_skip} failed={n_fail}"})
+    return rows

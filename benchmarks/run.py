@@ -1,0 +1,39 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus a human table to stderr).
+"""
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig6_frac_bits, fig35_breakdown, kernel_bench,
+                            roofline_report, table1_lut_depth,
+                            table2_resources, table3_throughput)
+
+    modules = [
+        ("table1", table1_lut_depth),
+        ("fig6", fig6_frac_bits),
+        ("table2", table2_resources),
+        ("table3", table3_throughput),
+        ("fig35", fig35_breakdown),
+        ("kernels", kernel_bench),
+        ("roofline", roofline_report),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for tag, mod in modules:
+        try:
+            for row in mod.run():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']},{derived}")
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"{tag}/ERROR,0,{type(e).__name__}: {str(e)[:120]}".replace(",", ";"))
+            print(f"[bench] {tag} failed: {e}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: the paper's pipeline in 40 lines.
+
+Trains the traffic-speed LSTM (paper §5.1 recipe), applies (8,16)
+post-training quantisation with depth-256 LUT activations (paper §5.2), and
+compares MSEs + the timing model's throughput estimate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+
+from repro.configs.lstm_pems import CONFIG
+from repro.core import timing_model as tm
+from repro.core.fxp import FxpFormat
+from repro.core.quantize import quantize_lstm_model, quantized_lstm_forward
+from repro.data.traffic import make_traffic_dataset
+from repro.models.lstm_model import evaluate_mse, train_traffic_model
+
+def main():
+    print("1) data: synthetic PeMS-4W-like series, 6-step windows, 3:1 split")
+    data = make_traffic_dataset(seed=0, n_seq=CONFIG.n_seq)
+    print(f"   train={data.n_train} test={data.n_test}")
+
+    print("2) train full precision (Adam b=(0.9,0.98), lr 0.01, StepLR(3,0.5))")
+    params, history = train_traffic_model(data, epochs=CONFIG.epochs)
+    fp_mse = evaluate_mse(params, data.x_test, data.y_test)
+    print(f"   final train loss {history[-1]:.5f}, test MSE {fp_mse:.5f}")
+
+    print("3) PTQ to (8,16) fixed point + depth-256 LUTs (the bitstream path)")
+    qmodel = quantize_lstm_model(params, FxpFormat(CONFIG.frac_bits, CONFIG.total_bits),
+                                 lut_depth=CONFIG.lut_depth)
+    pred = quantized_lstm_forward(qmodel, jnp.asarray(data.x_test))
+    q_mse = float(jnp.mean((pred - jnp.asarray(data.y_test)) ** 2))
+    print(f"   quantised test MSE {q_mse:.5f} ({q_mse / fp_mse:.2f}x float)")
+
+    print("4) timing model (paper Eq. 5.1-5.3) on the XC7S15 @ 100 MHz")
+    s = CONFIG.shape
+    print(f"   n_total={tm.total_cycles(s)} cycles -> "
+          f"{tm.model_time_s(s)*1e6:.2f} us/inference, "
+          f"{tm.inferences_per_second(s):.0f} inf/s, "
+          f"{tm.throughput_gops(s, tm.inferences_per_second(s)):.3f} GOP/s")
+    e = tm.energy_per_inference_uj(71.0, tm.model_time_s(s))
+    print(f"   at 71 mW -> {e:.2f} uJ/inference "
+          f"({tm.energy_efficiency_gopj(tm.throughput_gops(s, 17534), 71.0):.2f} GOP/J)")
+
+
+if __name__ == "__main__":
+    main()

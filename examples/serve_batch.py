@@ -1,0 +1,54 @@
+"""Batched LM serving with continuous batching: more requests than cache
+slots; finished sequences release slots mid-flight and new prompts join.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch jamba-1.5-large-398b
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import build
+from repro.parallel.sharding import RunContext
+from repro.serving.engine import Request, ServingEngine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=12)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ctx = RunContext(mesh=None)
+    engine = ServingEngine(model, params, ctx, batch_slots=args.slots,
+                           max_len=args.prompt_len + args.new_tokens + 8,
+                           prompt_len=args.prompt_len)
+
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, args.prompt_len),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+
+    t0 = time.time()
+    engine.run(reqs)
+    dt = time.time() - t0
+    tokens = sum(len(r.output) for r in reqs)
+    print(f"arch={cfg.name}: {len(reqs)} requests through {args.slots} slots")
+    for r in reqs[:4]:
+        print(f"  req {r.rid}: {r.output}")
+    print(f"{tokens} tokens in {dt:.2f}s -> {tokens/dt:.1f} tok/s "
+          f"(reduced config on CPU; continuous batching verified token-exact "
+          f"against teacher forcing in tests/test_serving.py)")
+
+
+if __name__ == "__main__":
+    main()

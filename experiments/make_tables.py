@@ -1,0 +1,67 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the sweep
+records.  Usage: python experiments/make_tables.py > experiments/tables.md"""
+
+import json
+from pathlib import Path
+
+DRY = Path(__file__).parent / "dryrun"
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def load():
+    rows = []
+    for f in sorted(DRY.glob("*.json")):
+        if f.name == "summary.json":
+            continue
+        rows.append(json.loads(f.read_text()))
+    return rows
+
+
+def main():
+    rows = load()
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    other = [r for r in rows if r.get("status") not in ("ok", "skipped")]
+
+    print("### Dry-run table (per device; 16x16 = 256 chips, 2x16x16 = 512 chips)\n")
+    print("| arch | shape | mesh | mode | HBM GB/dev | fits 16GB | HLO GFLOP/dev | "
+          "coll GB/dev | compile s |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('mode','')} | "
+              f"{fmt_bytes(r['bytes_per_device'])} | "
+              f"{'YES' if r['bytes_per_device'] < 16e9 else 'NO'} | "
+              f"{r['hlo_flops_per_chip']/1e9:.0f} | "
+              f"{r['collective_bytes_per_chip']/1e9:.2f} | "
+              f"{r.get('t_compile_s','')} |")
+    print("\n### Skipped cells (assignment rules)\n")
+    for r in sorted(skipped, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"- {r['arch']} × {r['shape']} × {r['mesh']}: {r['reason']}")
+    if other:
+        print("\n### Failures\n")
+        for r in other:
+            print(f"- {r['arch']} × {r['shape']} × {r['mesh']}: {r['status']}")
+
+    print("\n### Roofline table (single-pod 16x16, per-chip terms, v5e: "
+          "197 TF/s bf16, 819 GB/s HBM, 50 GB/s ICI)\n")
+    print("| arch | shape | t_comp ms | t_mem ms | t_coll ms | bottleneck | "
+          "MODEL_FLOPs/HLO | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "16x16":
+            continue
+        tc, tm, tl = r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]
+        dom = max(tc, tm, tl)
+        # roofline fraction: useful compute time / achievable step time bound
+        useful_t = r["model_flops"] / r["chips"] / 197e12
+        frac = useful_t / dom if dom else 0.0
+        print(f"| {r['arch']} | {r['shape']} | {tc*1e3:.1f} | {tm*1e3:.1f} | "
+              f"{tl*1e3:.1f} | {r['bottleneck']} | {r['useful_ratio']:.2f} | "
+              f"{frac:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

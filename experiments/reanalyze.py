@@ -1,0 +1,52 @@
+"""Re-derive roofline fields for every dry-run cell from its saved HLO text
+(parser improvements don't require recompilation).  Rewrites the JSONs."""
+
+import gzip
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.analysis.hlo import analyze_hlo  # noqa: E402
+from repro.analysis.roofline import V5E  # noqa: E402
+
+DRY = Path(__file__).parent / "dryrun"
+
+
+def main():
+    for f in sorted(DRY.glob("*.json")):
+        if f.name == "summary.json":
+            continue
+        rec = json.loads(f.read_text())
+        if rec.get("status") != "ok":
+            continue
+        gz = f.with_suffix("").with_suffix("")  # strip .json
+        gz = DRY / (f.stem + ".hlo.txt.gz")
+        if not gz.exists():
+            continue
+        a = analyze_hlo(gzip.open(gz, "rt").read())
+        rec["hlo_flops_per_chip"] = a.flops
+        rec["hlo_bytes_per_chip"] = a.traffic_bytes
+        rec["collective_bytes_per_chip"] = a.collective_bytes
+        rec["collective_breakdown"] = a.collective_breakdown
+        rec["collective_counts"] = a.collective_counts
+        rec["t_compute_s"] = a.flops / V5E.peak_flops
+        rec["t_memory_s"] = a.traffic_bytes / V5E.hbm_bw
+        rec["t_collective_s"] = a.collective_bytes / V5E.ici_bw
+        terms = {"compute": rec["t_compute_s"], "memory": rec["t_memory_s"],
+                 "collective": rec["t_collective_s"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        tot = a.flops * rec["chips"]
+        rec["useful_ratio"] = rec["model_flops"] / tot if tot else 0.0
+        f.write_text(json.dumps(rec, indent=1, default=float))
+        print(f"reanalyzed {f.stem}")
+    # regenerate summary
+    rows = [json.loads(p.read_text()) for p in sorted(DRY.glob("*.json"))
+            if p.name != "summary.json"]
+    (DRY / "summary.json").write_text(json.dumps(rows, indent=1, default=float))
+    print(f"summary: {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Analytic MODEL_FLOPS (the 'useful compute' yardstick).
+
+MODEL_FLOPS = 6·N·D for training (2·N fwd + 4·N bwd per token) and
+2·N·D for forward-only serving, with N = *active* parameters for MoE.
+The ratio MODEL_FLOPS / HLO_FLOPs in the roofline table shows how much of
+the compiled compute is useful — attention quadratic terms, MoE capacity
+padding, and remat recompute all show up as ratio < 1.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import LayerSpec, ModelConfig, ShapeSpec
+
+__all__ = ["param_count", "active_param_count", "model_flops"]
+
+
+def _attn_params(cfg: ModelConfig) -> int:
+    hd = cfg.head_dim
+    return cfg.d_model * hd * (2 * cfg.n_heads + 2 * cfg.n_kv_heads)
+
+
+def _mlp_params(cfg: ModelConfig) -> int:
+    mult = 3 if cfg.mlp_gated else 2
+    return mult * cfg.d_model * cfg.d_ff
+
+
+def _expert_params(cfg: ModelConfig) -> int:
+    mult = 3 if cfg.mlp_gated else 2
+    return mult * cfg.d_model * cfg.expert_d_ff
+
+
+def _mamba_params(cfg: ModelConfig) -> int:
+    d, d_in, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    return d * (2 * d_in + 2 * n + h) + d_in * d  # projections + out
+
+
+def _layer_params(cfg: ModelConfig, spec: LayerSpec, active: bool) -> int:
+    p = 0
+    if spec.mixer == "attn":
+        p += _attn_params(cfg)
+    elif spec.mixer == "mamba":
+        p += _mamba_params(cfg)
+    if spec.ffn == "dense":
+        p += _mlp_params(cfg)
+    elif spec.ffn == "moe":
+        n_e = cfg.top_k if active else cfg.n_experts
+        p += n_e * _expert_params(cfg) + cfg.d_model * cfg.n_experts
+    return p
+
+
+def _stack_params(cfg: ModelConfig, active: bool) -> int:
+    per_period = sum(_layer_params(cfg, s, active) for s in cfg.pattern)
+    total = per_period * cfg.n_repeats
+    total += cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    return total
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return _stack_params(cfg, active=False)
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    return _stack_params(cfg, active=True)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """6·N_active·D (train) or 2·N_active·D (serve); D = tokens processed by
+    the lowered step (decode steps process global_batch tokens)."""
+    n = active_param_count(cfg)
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n * shape.global_batch

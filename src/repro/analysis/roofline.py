@@ -1,0 +1,121 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+    compute term    = HLO_FLOPs        / (chips × 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes        / (chips × 819e9  B/s HBM)
+    collective term = collective_bytes / (chips × 50e9   B/s ICI)
+
+FLOPs/bytes come from two sources that are cross-checked:
+  * ``compiled.cost_analysis()`` — authoritative but counts while bodies
+    once (undercounts scan-over-layers),
+  * ``analysis.hlo.analyze_hlo(compiled.as_text())`` — our parser with
+    while-trip-count multipliers (see hlo.py).
+The reported terms use the trip-count-corrected parser values; both are
+recorded.  cost_analysis/HLO values are per-partition (per-device) in SPMD
+modules, so terms divide by 1 (already per-chip), not by `chips` — the
+formulas above are equivalent since global = per_chip × chips.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.hlo import analyze_hlo
+
+__all__ = ["HW", "RooflineReport", "analyze_compiled"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    """TPU v5e per-chip envelope."""
+
+    peak_flops: float = 197e12     # bf16 FLOP/s
+    hbm_bw: float = 819e9          # B/s
+    ici_bw: float = 50e9           # B/s per link (given constant)
+    hbm_bytes: float = 16e9        # capacity
+
+
+V5E = HW()
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device numbers
+    hlo_flops: float               # trip-count corrected (parser)
+    hlo_flops_raw: float           # cost_analysis (body-once)
+    hlo_bytes: float
+    hlo_bytes_raw: float
+    collective_bytes: float
+    collective_breakdown: dict
+    collective_counts: dict
+    # memory analysis
+    bytes_per_device: float
+    argument_bytes: float
+    output_bytes: float
+    temp_bytes: float
+    # derived
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0       # 6ND / 2ND, global
+    useful_ratio: float = 0.0      # model_flops / (hlo_flops * chips)
+    while_trip_counts: dict = dataclasses.field(default_factory=dict)
+
+    def finalize(self, hw: HW = V5E):
+        self.t_compute = self.hlo_flops / hw.peak_flops
+        self.t_memory = self.hlo_bytes / hw.hbm_bw
+        self.t_collective = self.collective_bytes / hw.ici_bw
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        total_flops = self.hlo_flops * self.chips
+        self.useful_ratio = (self.model_flops / total_flops) if total_flops else 0.0
+        return self
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "bottleneck": self.bottleneck,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "bytes_per_device": self.bytes_per_device,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "collective_breakdown": self.collective_breakdown,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def analyze_compiled(compiled, *, arch: str, shape: str, mesh_name: str,
+                     chips: int, model_flops: float, hw: HW = V5E) -> RooflineReport:
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    hlo = analyze_hlo(compiled.as_text())
+
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=hlo.flops,
+        hlo_flops_raw=float(cost.get("flops", 0.0)),
+        hlo_bytes=hlo.traffic_bytes,
+        hlo_bytes_raw=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes=hlo.collective_bytes,
+        collective_breakdown=hlo.collective_breakdown,
+        collective_counts=hlo.collective_counts,
+        bytes_per_device=float(
+            mem.argument_size_in_bytes + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes
+        ),
+        argument_bytes=float(mem.argument_size_in_bytes),
+        output_bytes=float(mem.output_size_in_bytes),
+        temp_bytes=float(mem.temp_size_in_bytes),
+        model_flops=model_flops,
+        while_trip_counts=hlo.while_trip_counts,
+    )
+    return rep.finalize(hw)

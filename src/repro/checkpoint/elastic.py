@@ -1,0 +1,48 @@
+"""Elastic scaling: resume a job on a different device pool.
+
+Node failures shrink the pool; repaired nodes grow it.  Because checkpoints
+store unsharded arrays (checkpoint.py) and the data loader is index-based
+(data/tokens.py), a restart only needs a *policy* for choosing the new mesh
+and re-deriving shardings — this module is that policy.
+
+``choose_mesh_shape(n)`` keeps the model axis as close to the original TP
+degree as divisibility allows and gives the rest to data parallelism: TP
+degree is dictated by per-op shardability (heads/ffn divisibility), DP by
+whatever is left — the standard operating rule at scale.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.parallel.sharding import RunContext, param_shardings
+
+__all__ = ["choose_mesh_shape", "make_elastic_mesh", "elastic_restore"]
+
+
+def choose_mesh_shape(n_devices: int, prefer_model: int = 16) -> tuple[int, int]:
+    """(data, model) for an arbitrary device count."""
+    model = min(prefer_model, n_devices)
+    while n_devices % model:
+        model -= 1
+    return (n_devices // model, model)
+
+
+def make_elastic_mesh(prefer_model: int = 16):
+    devs = jax.devices()
+    data, model = choose_mesh_shape(len(devs), prefer_model)
+    return jax.sharding.Mesh(
+        np.array(devs[: data * model]).reshape(data, model), ("data", "model"))
+
+
+def elastic_restore(manager, template, *, prefer_model: int = 16,
+                    step: int | None = None):
+    """Restore the latest checkpoint onto a mesh built from the devices that
+    are alive *now*.  Returns (state, extra, step, mesh, ctx)."""
+    mesh = make_elastic_mesh(prefer_model)
+    ctx = RunContext(mesh=mesh, dp_axes=("data",), tp_axis="model",
+                     fsdp_axes=("data",))
+    shardings = param_shardings(template, ctx)
+    state, extra, step = manager.restore(template, step=step, shardings=shardings)
+    return state, extra, step, mesh, ctx

@@ -1,0 +1,47 @@
+"""Architecture registry: the 10 assigned configs + the paper's own model.
+
+``get_config(name)`` returns the exact assigned configuration;
+``get_smoke_config(name)`` the reduced same-family version for CPU tests.
+"""
+
+from __future__ import annotations
+
+from repro.configs.base import LM_SHAPES, LayerSpec, ModelConfig, ShapeSpec, smoke_version
+from repro.configs import archs as _archs
+
+__all__ = [
+    "ARCH_NAMES",
+    "get_config",
+    "get_smoke_config",
+    "shapes_for",
+    "LM_SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "LayerSpec",
+]
+
+ARCH_NAMES = list(_archs.CONFIGS.keys())
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _archs.CONFIGS:
+        raise KeyError(f"unknown arch {name!r}; available: {ARCH_NAMES}")
+    return _archs.CONFIGS[name]
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return smoke_version(get_config(name))
+
+
+def shapes_for(name: str) -> dict[str, ShapeSpec | None]:
+    """The assigned shape cells for an arch, with skip reasons (DESIGN.md §5)."""
+    cfg = get_config(name)
+    out: dict[str, object] = {}
+    for sname, spec in LM_SHAPES.items():
+        reason = None
+        if not cfg.causal and spec.kind == "decode":
+            reason = "encoder-only: no decode step (assignment rule)"
+        elif sname == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+            reason = "full-attention arch: long_500k needs sub-quadratic attention (assignment rule)"
+        out[sname] = reason if reason else spec
+    return out

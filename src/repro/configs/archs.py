@@ -1,0 +1,25 @@
+"""Aggregated registry of the assigned architectures."""
+
+from repro.configs.gemma2_2b import CONFIG as _gemma2
+from repro.configs.glm4_9b import CONFIG as _glm4
+from repro.configs.granite_moe import CONFIG as _granite
+from repro.configs.hubert_xlarge import CONFIG as _hubert
+from repro.configs.jamba_1_5_large import CONFIG as _jamba
+from repro.configs.kimi_k2 import CONFIG as _kimi
+from repro.configs.mamba2_780m import CONFIG as _mamba2
+from repro.configs.phi3_vision import CONFIG as _phi3v
+from repro.configs.qwen3_4b import CONFIG as _qwen3
+from repro.configs.yi_9b import CONFIG as _yi
+
+CONFIGS = {
+    "glm4-9b": _glm4,
+    "gemma2-2b": _gemma2,
+    "yi-9b": _yi,
+    "qwen3-4b": _qwen3,
+    "hubert-xlarge": _hubert,
+    "kimi-k2-1t-a32b": _kimi,
+    "granite-moe-3b-a800m": _granite,
+    "phi-3-vision-4.2b": _phi3v,
+    "mamba2-780m": _mamba2,
+    "jamba-1.5-large-398b": _jamba,
+}

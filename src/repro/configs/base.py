@@ -1,0 +1,155 @@
+"""Config dataclasses for every architecture and run shape.
+
+A model is a periodic stack: ``pattern`` is a list of ``LayerSpec`` (the
+period); the stack is ``pattern`` repeated ``n_layers / len(pattern)`` times.
+Parameters for each period position are stacked over repetitions and the
+forward pass is a ``lax.scan`` over repetitions — heterogeneous layers
+(jamba's 1 attention : 7 mamba, gemma2's local/global alternation) stay
+compact in HLO, which keeps 512-way SPMD compiles tractable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+__all__ = ["LayerSpec", "ModelConfig", "ShapeSpec", "LM_SHAPES", "smoke_version"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer = a sequence mixer + a channel mixer."""
+
+    mixer: Literal["attn", "mamba", "none"] = "attn"
+    window: int | None = None          # sliding-window size for local attention
+    ffn: Literal["dense", "moe", "none"] = "dense"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense | moe | ssm | hybrid | audio | vlm
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    pattern: tuple[LayerSpec, ...] = (LayerSpec(),)
+
+    # attention
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    rope_theta: float = 10000.0
+    qk_norm: bool = False
+    attn_softcap: float | None = None   # gemma2: 50.0
+    causal: bool = True                 # False => encoder (hubert)
+
+    # mlp
+    d_ff: int = 0
+    mlp_activation: str = "silu"
+    mlp_gated: bool = True
+
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # mamba2 / SSD
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+
+    # embeddings / head
+    tie_embeddings: bool = False
+    final_softcap: float | None = None  # gemma2: 30.0
+    norm_eps: float = 1e-6
+    post_norm: bool = False             # gemma2 sandwich norms
+    embed_scale: bool = False           # gemma2 scales embeddings by sqrt(d)
+
+    # modality frontend stubs (assignment: frontend is a STUB)
+    frontend: Literal["none", "audio_stub", "vision_stub"] = "none"
+    n_frontend_tokens: int = 0          # e.g. 576 CLIP patches for phi3-vision
+
+    # numerics
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+
+    # which paper techniques apply (DESIGN.md §5)
+    technique_applicability: dict = dataclasses.field(
+        default_factory=lambda: {"fused_recurrence": False, "lut_act": True, "fxp": True},
+        hash=False, compare=False,
+    )
+
+    def __post_init__(self):
+        if self.n_layers % len(self.pattern):
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} not divisible by "
+                f"pattern period {len(self.pattern)}"
+            )
+
+    @property
+    def n_repeats(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def d_inner(self) -> int:
+        """Mamba inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim if self.ssm_head_dim else 0
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+# The four LM shapes every assigned architecture is paired with.
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def smoke_version(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests: few layers, narrow
+    width, few experts, tiny vocab — structure preserved (same pattern kinds,
+    same GQA ratio direction, same frontend)."""
+    period = len(cfg.pattern)
+    n_layers = period * min(2, cfg.n_repeats)
+    kv = max(1, min(cfg.n_kv_heads, 2)) if cfg.n_heads else 0
+    heads = max(kv * 2, 4) if cfg.n_heads else 0
+    return cfg.with_(
+        name=cfg.name + "-smoke",
+        vocab_size=min(cfg.vocab_size, 128),
+        d_model=64,
+        n_layers=n_layers,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=16 if cfg.n_heads else 0,
+        d_ff=128 if cfg.d_ff else 0,
+        n_experts=min(cfg.n_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        expert_d_ff=64 if cfg.n_experts else 0,
+        ssm_state=min(cfg.ssm_state, 16),
+        ssm_head_dim=16 if cfg.ssm_state else 0,
+        ssm_chunk=16,
+        n_frontend_tokens=8 if cfg.frontend != "none" else 0,
+        param_dtype="float32",
+        compute_dtype="float32",
+    )

@@ -1,0 +1,36 @@
+"""gemma2-2b [dense] — 26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000.
+Local+global alternating attention, logit softcaps, sandwich norms, tied
+embeddings.  [arXiv:2408.00118; hf]
+
+Note: the attention softcap (50) and final softcap (30) are ``tanh`` shapes —
+the paper's C3 LUT activation applies to them directly (benchmarks/lut ablation).
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b",
+    family="dense",
+    vocab_size=256000,
+    d_model=2304,
+    n_layers=26,
+    # local (sliding window 4096) and global layers alternate
+    pattern=(
+        LayerSpec(mixer="attn", window=4096, ffn="dense"),
+        LayerSpec(mixer="attn", window=None, ffn="dense"),
+    ),
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    rope_theta=10000.0,
+    attn_softcap=50.0,
+    final_softcap=30.0,
+    d_ff=9216,
+    mlp_activation="gelu",
+    mlp_gated=True,
+    tie_embeddings=True,
+    post_norm=True,
+    embed_scale=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

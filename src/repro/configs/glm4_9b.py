@@ -1,0 +1,23 @@
+"""glm4-9b [dense] — 40L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=151552.
+RoPE, GQA.  [hf:THUDM/glm-4-9b; hf]"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="glm4-9b",
+    family="dense",
+    vocab_size=151552,
+    d_model=4096,
+    n_layers=40,
+    pattern=(LayerSpec(mixer="attn", ffn="dense"),),
+    n_heads=32,
+    n_kv_heads=2,
+    head_dim=128,
+    rope_theta=10000.0,
+    d_ff=13696,
+    mlp_activation="silu",
+    mlp_gated=True,
+    norm_eps=1e-5,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,31 @@
+"""granite-moe-3b-a800m [moe] — 32L d_model=1536 24H (GQA kv=8) expert
+d_ff=512 vocab=49155, MoE 40 experts top-8.
+[hf:ibm-granite/granite-3.0-1b-a400m-base; hf]
+
+40 experts are padded to 48 for expert parallelism over the 16-way model
+axis (models/transformer._experts_padded); the 8 dummies receive no tokens.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    vocab_size=49155,
+    d_model=1536,
+    n_layers=32,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+    n_heads=24,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=0,
+    expert_d_ff=512,
+    n_experts=40,
+    top_k=8,
+    capacity_factor=1.25,
+    mlp_activation="silu",
+    mlp_gated=True,
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,25 @@
+"""hubert-xlarge [audio] — 48L d_model=1280 16H (kv=16, MHA) d_ff=5120
+vocab=504.  Encoder-only (same backbone as wav2vec2); the CNN feature
+extractor is a STUB per the assignment — ``input_specs()`` provides
+precomputed frame embeddings of width d_model.  [arXiv:2106.07447]"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    vocab_size=504,                  # masked-prediction cluster units
+    d_model=1280,
+    n_layers=48,
+    pattern=(LayerSpec(mixer="attn", ffn="dense"),),
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    causal=False,                    # bidirectional encoder
+    d_ff=5120,
+    mlp_activation="gelu",
+    mlp_gated=False,
+    frontend="audio_stub",
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,45 @@
+"""jamba-1.5-large-398b [hybrid] — 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16 experts top-2, Mamba:attention 1:7
+interleave.  [arXiv:2403.19887; hf]
+
+Period of 8 layers: attention at position 4 (1 attn : 7 mamba), MoE on odd
+positions (every other layer), dense FFN on even positions — the Jamba
+block layout.  Total params ≈ 398 B, active ≈ 94 B.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+_PERIOD = tuple(
+    LayerSpec(
+        mixer="attn" if i == 4 else "mamba",
+        ffn="moe" if i % 2 == 1 else "dense",
+    )
+    for i in range(8)
+)
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b",
+    family="hybrid",
+    vocab_size=65536,
+    d_model=8192,
+    n_layers=72,
+    pattern=_PERIOD,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    expert_d_ff=24576,
+    n_experts=16,
+    top_k=2,
+    capacity_factor=1.25,
+    mlp_activation="silu",
+    mlp_gated=True,
+    ssm_state=16,               # jamba uses mamba-1 style small state
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=128,
+    technique_applicability={"fused_recurrence": True, "lut_act": True, "fxp": True},
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

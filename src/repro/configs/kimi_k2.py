@@ -1,0 +1,32 @@
+"""kimi-k2-1t-a32b [moe] — 61L d_model=7168 64H (GQA kv=8) expert d_ff=2048
+vocab=163840, MoE 384 experts top-8.  Trillion-parameter MoE (paper-table
+config).  [arXiv:2501.kimi2]
+
+Scale notes (EXPERIMENTS.md §Dry-run): total params ≈ 1.03 T; active ≈ 32 B.
+Training state fits 512 v5e chips only with int8 Adam moments
+(training/optimizer.py) — the paper's C4 applied to optimizer state.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    vocab_size=163840,
+    d_model=7168,
+    n_layers=61,
+    pattern=(LayerSpec(mixer="attn", ffn="moe"),),
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    rope_theta=50000.0,
+    d_ff=0,
+    expert_d_ff=2048,
+    n_experts=384,
+    top_k=8,
+    capacity_factor=1.25,
+    mlp_activation="silu",
+    mlp_gated=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,34 @@
+"""The paper's own model (Fig. 1): 1 LSTM layer (input 1, hidden 20) + dense
+head, 6-step windows, traffic-speed regression on PeMS-4W.
+
+Not a ``ModelConfig`` (different family); consumed by core/, benchmarks/ and
+the batched-serving example (serving all 11 160 PeMS sensors on one pod).
+"""
+
+import dataclasses
+
+from repro.core.timing_model import LstmModelShape
+
+
+@dataclasses.dataclass(frozen=True)
+class LstmPemsConfig:
+    input_size: int = 1
+    hidden_size: int = 20
+    out_size: int = 1
+    n_seq: int = 6
+    epochs: int = 30
+    lr0: float = 0.01
+    lr_step: int = 3
+    lr_gamma: float = 0.5
+    frac_bits: int = 8
+    total_bits: int = 16
+    lut_depth: int = 256
+    n_sensors: int = 11160        # full PeMS-4W deployment batch
+
+    @property
+    def shape(self) -> LstmModelShape:
+        return LstmModelShape(self.n_seq, self.input_size, self.hidden_size,
+                              self.hidden_size, self.out_size)
+
+
+CONFIG = LstmPemsConfig()

@@ -1,0 +1,27 @@
+"""mamba2-780m [ssm] — 48L d_model=1536 (attention-free) vocab=50280,
+ssm_state=128.  SSD (state-space duality).  [arXiv:2405.21060]
+
+This is the arch where the paper's technique is first-class (DESIGN.md §5):
+the SSD recurrence is a gated recurrent cell; our fused/chunked SSD kernel
+(kernels/ssd_scan.py) is C1+C2+C5 re-derived for it.
+"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-780m",
+    family="ssm",
+    vocab_size=50280,
+    d_model=1536,
+    n_layers=48,
+    pattern=(LayerSpec(mixer="mamba", ffn="none"),),
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=128,
+    tie_embeddings=True,
+    technique_applicability={"fused_recurrence": True, "lut_act": True, "fxp": True},
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

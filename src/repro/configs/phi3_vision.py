@@ -1,0 +1,27 @@
+"""phi-3-vision-4.2b [vlm] — 32L d_model=3072 32H (kv=32, MHA) d_ff=8192
+vocab=32064.  phi3-mini backbone + CLIP frontend; the CLIP tower is a STUB
+per the assignment — ``input_specs()`` provides 576 precomputed patch
+embeddings per image, prepended to the token sequence.
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    vocab_size=32064,
+    d_model=3072,
+    n_layers=32,
+    pattern=(LayerSpec(mixer="attn", ffn="dense"),),
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    rope_theta=10000.0,
+    d_ff=8192,
+    mlp_activation="silu",
+    mlp_gated=True,
+    frontend="vision_stub",
+    n_frontend_tokens=576,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

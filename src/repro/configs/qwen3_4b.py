@@ -1,0 +1,24 @@
+"""qwen3-4b [dense] — 36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936.
+qk_norm, GQA, tied embeddings.  [hf:Qwen/Qwen3-8B; hf]"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="dense",
+    vocab_size=151936,
+    d_model=2560,
+    n_layers=36,
+    pattern=(LayerSpec(mixer="attn", ffn="dense"),),
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    rope_theta=1e6,
+    qk_norm=True,
+    d_ff=9728,
+    mlp_activation="silu",
+    mlp_gated=True,
+    tie_embeddings=True,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,23 @@
+"""yi-9b [dense] — 48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+Llama-architecture GQA.  [arXiv:2403.04652; hf]"""
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    vocab_size=64000,
+    d_model=4096,
+    n_layers=48,
+    pattern=(LayerSpec(mixer="attn", ffn="dense"),),
+    n_heads=32,
+    n_kv_heads=4,
+    head_dim=128,
+    rope_theta=5e6,
+    d_ff=11008,
+    mlp_activation="silu",
+    mlp_gated=True,
+    norm_eps=1e-5,
+    param_dtype="bfloat16",
+    compute_dtype="bfloat16",
+)

@@ -1,0 +1,15 @@
+"""Core paper contributions: fixed point (C4), LUT activations (C3), the
+throughput-optimised LSTM cell (C1+C2+C5), PTQ, and the timing model (C6)."""
+
+from repro.core.fxp import FxpFormat, quantize, dequantize, fxp_matmul  # noqa: F401
+from repro.core.lut import LutSpec, build_table, lut_apply, lut_sigmoid, lut_tanh  # noqa: F401
+from repro.core.lstm import (  # noqa: F401
+    LSTMParams,
+    init_lstm_params,
+    lstm_cell_sequential,
+    lstm_cell_fused,
+    lstm_cell_fxp,
+    lstm_layer,
+)
+from repro.core.quantize import quantize_lstm_model, quantized_lstm_forward  # noqa: F401
+from repro.core import timing_model  # noqa: F401

@@ -1,0 +1,150 @@
+"""Fixed-point arithmetic simulation (paper contribution C4).
+
+The paper quantises the trained LSTM post-training to a fixed-point
+representation described as ``(x, y)`` where ``x`` is the number of
+fractional bits and ``y`` the total width in bits (sign included); the
+evaluated configuration is ``(8, 16)``.  On the FPGA the DSP48 slices
+operate directly on these integers; on TPU the analogue is int8/int16
+multiplies with int32 accumulation on the MXU.  This module is the exact
+bit-level simulator (the paper, §5.2, uses "a custom Python simulator with
+all parameters and variables at the corresponding fixed-point width") —
+every op stores values as int32 holding a two's-complement ``y``-bit
+number with ``x`` fractional bits.
+
+All functions are pure jnp and jit-friendly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "FxpFormat",
+    "quantize",
+    "dequantize",
+    "saturate",
+    "fxp_add",
+    "fxp_mul",
+    "fxp_matmul",
+    "fxp_matvec",
+    "quantize_tree",
+    "dequantize_tree",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FxpFormat:
+    """``(x, y)`` fixed point: ``frac_bits`` fractional of ``total_bits`` total."""
+
+    frac_bits: int = 8
+    total_bits: int = 16
+
+    def __post_init__(self):
+        if not (0 <= self.frac_bits < self.total_bits <= 32):
+            raise ValueError(f"invalid fixed-point format ({self.frac_bits},{self.total_bits})")
+
+    @property
+    def scale(self) -> float:
+        """Value of one LSB: 2**-frac_bits."""
+        return 2.0 ** (-self.frac_bits)
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.total_bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.total_bits - 1)) - 1
+
+    @property
+    def min_value(self) -> float:
+        return self.qmin * self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax * self.scale
+
+    @property
+    def resolution(self) -> float:
+        return self.scale
+
+    def describe(self) -> str:
+        return (
+            f"({self.frac_bits},{self.total_bits}) fixed point: "
+            f"range [{self.min_value}, {self.max_value}], lsb {self.scale}"
+        )
+
+
+def saturate(q: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Clamp an integer tensor into the representable ``y``-bit range."""
+    return jnp.clip(q, fmt.qmin, fmt.qmax)
+
+
+def quantize(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """float -> fixed point integers (round to nearest even, saturating)."""
+    q = jnp.round(jnp.asarray(x, jnp.float32) * (1 << fmt.frac_bits))
+    return saturate(q.astype(jnp.int32), fmt)
+
+
+def dequantize(q: jax.Array, fmt: FxpFormat) -> jax.Array:
+    return q.astype(jnp.float32) * fmt.scale
+
+
+def _rescale(acc: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Rounding right-shift of a product/accumulator back to ``frac_bits``.
+
+    Products of two ``(x, y)`` numbers carry ``2x`` fractional bits; the FPGA
+    ALU shifts right by ``x`` with round-half-up (add half LSB then shift).
+    """
+    half = 1 << (fmt.frac_bits - 1) if fmt.frac_bits > 0 else 0
+    return saturate((acc + half) >> fmt.frac_bits, fmt)
+
+
+def fxp_add(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
+    return saturate(a + b, fmt)
+
+
+def fxp_mul(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
+    prod = a.astype(jnp.int32) * b.astype(jnp.int32)
+    return _rescale(prod, fmt).astype(jnp.int32)
+
+
+# Accumulation width note: the DSP48 accumulator is 48-bit; TPU int8 MXU
+# accumulates in int32.  We accumulate in int32, which is exact as long as
+# |sum of products| < 2**31 — for a (x, y<=16) format that holds whenever
+# sum_k |a_k b_k| * 2**(2x) < 2**31, amply true for the paper-scale models
+# (normalised [0,1] data, |w| < 4, reductions of a few hundred terms).
+
+
+def fxp_matmul(a: jax.Array, b: jax.Array, fmt: FxpFormat, bias: jax.Array | None = None) -> jax.Array:
+    """Fixed-point ``a @ b (+ bias)`` with int32 accumulation.
+
+    Mirrors both the FPGA ALU (full-width accumulate) and the TPU int8 MXU
+    (int32 accumulate): products carry ``2x`` fractional bits, one rounding
+    shift at the end.  ``bias`` is fixed point at ``frac_bits``; it is
+    pre-shifted so it adds into the 2x-fractional accumulator.
+    """
+    acc = jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+    if bias is not None:
+        acc = acc + (bias.astype(jnp.int32) << fmt.frac_bits)
+    return _rescale(acc, fmt).astype(jnp.int32)
+
+
+def fxp_matvec(w: jax.Array, x: jax.Array, fmt: FxpFormat, bias: jax.Array | None = None) -> jax.Array:
+    """``w @ x`` for 2-D ``w`` and 1-D ``x`` (the FPGA mat-vec primitive)."""
+    acc = jnp.matmul(w.astype(jnp.int32), x.astype(jnp.int32))
+    if bias is not None:
+        acc = acc + (bias.astype(jnp.int32) << fmt.frac_bits)
+    return _rescale(acc, fmt).astype(jnp.int32)
+
+
+def quantize_tree(tree: Any, fmt: FxpFormat) -> Any:
+    return jax.tree.map(lambda x: quantize(x, fmt), tree)
+
+
+def dequantize_tree(tree: Any, fmt: FxpFormat) -> Any:
+    return jax.tree.map(lambda q: dequantize(q, fmt), tree)

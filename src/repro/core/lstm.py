@@ -1,0 +1,271 @@
+"""The paper's LSTM cell — sequential baseline and throughput-optimised form.
+
+Paper equations (§3.1, standard LSTM; ``*`` = Hadamard, ``[h, x]`` = concat):
+
+    f_t = sigmoid(W_f [h_{t-1}, x_t] + b_f)          (3.1)
+    i_t = sigmoid(W_i [h_{t-1}, x_t] + b_i)          (3.2)
+    g_t = tanh   (W_g [h_{t-1}, x_t] + b_g)          (3.3)
+    C_t = f_t * C_{t-1} + i_t * g_t                  (3.4)
+    h_t = o_t * tanh(C_t)                            (3.5)
+    o_t = sigmoid(W_o [h_{t-1}, x_t] + b_o)          (3.6)
+
+Three functionally-identical cell implementations live here:
+
+* ``lstm_cell_sequential`` — four *separate* gate mat-vecs executed one after
+  another; this mirrors the FPGA baseline the paper's Fig. 3 profiles (and is
+  the numerical oracle for everything else).
+* ``lstm_cell_fused`` — the paper's optimisation C1+C2 adapted to TPU: the
+  four gate weight matrices are stacked into one ``(n_i+n_h, 4 n_h)`` operand
+  so a single MXU matmul computes all four gates "in parallel", and the
+  elementwise state update (3.4)/(3.5) fuses behind it (one kernel, no HBM
+  round-trip; see ``repro.kernels.lstm_step`` for the Pallas version).
+* ``lstm_cell_fxp`` — the full quantised inference path: ``(x, y)`` fixed
+  point (C4) + shared LUT activations (C3), exactly the arithmetic the
+  bitstream executes.
+
+Gate order everywhere is ``i, f, g, o`` along the stacked ``4*n_h`` axis.
+Weights act on ``[x_t, h_{t-1}]`` (input features first, then hidden).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fxp as fxp_mod
+from repro.core import lut as lut_mod
+from repro.core.fxp import FxpFormat
+
+__all__ = [
+    "LSTMParams",
+    "init_lstm_params",
+    "split_gate_params",
+    "lstm_cell_sequential",
+    "lstm_cell_fused",
+    "lstm_cell_fxp",
+    "lstm_layer",
+    "lstm_layer_fxp",
+]
+
+GATE_ORDER = ("i", "f", "g", "o")
+
+
+@dataclasses.dataclass
+class LSTMParams:
+    """Stacked-gate parameters: ``w: (n_in + n_h, 4*n_h)``, ``b: (4*n_h,)``."""
+
+    w: jax.Array
+    b: jax.Array
+
+    @property
+    def hidden_size(self) -> int:
+        return self.w.shape[1] // 4
+
+    @property
+    def input_size(self) -> int:
+        return self.w.shape[0] - self.hidden_size
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        return (self.w, self.b), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):  # pragma: no cover
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    LSTMParams, LSTMParams.tree_flatten, LSTMParams.tree_unflatten
+)
+
+
+def init_lstm_params(
+    key: jax.Array, input_size: int, hidden_size: int, dtype=jnp.float32,
+    forget_bias: float = 1.0,
+) -> LSTMParams:
+    """Glorot-uniform weights; forget-gate bias initialised to +1 (standard)."""
+    k_w, _ = jax.random.split(key)
+    fan_in = input_size + hidden_size
+    fan_out = 4 * hidden_size
+    limit = (6.0 / (fan_in + fan_out)) ** 0.5
+    w = jax.random.uniform(k_w, (fan_in, fan_out), dtype, -limit, limit)
+    b = jnp.zeros((fan_out,), dtype)
+    # gate order i, f, g, o -> forget block is [h : 2h)
+    b = b.at[hidden_size : 2 * hidden_size].set(forget_bias)
+    return LSTMParams(w=w, b=b)
+
+
+def split_gate_params(params: LSTMParams) -> dict[str, tuple[jax.Array, jax.Array]]:
+    """Unstack into the four per-gate ``(w, b)`` pairs (the FPGA view: one
+    weight memory placed next to each ALU)."""
+    h = params.hidden_size
+    out = {}
+    for k, name in enumerate(GATE_ORDER):
+        sl = slice(k * h, (k + 1) * h)
+        out[name] = (params.w[:, sl], params.b[sl])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Float cells
+# ---------------------------------------------------------------------------
+
+
+def lstm_cell_sequential(
+    params: LSTMParams, x_t: jax.Array, h: jax.Array, c: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Baseline cell: the four gate mat-vecs issued as four separate matmuls,
+    then the elementwise update strictly afterwards — the schedule the paper's
+    Fig. 3 shows is 97.1 % bound on (3.1)-(3.3),(3.6)."""
+    gates = split_gate_params(params)
+    xh = jnp.concatenate([x_t, h], axis=-1)
+    i_t = jax.nn.sigmoid(xh @ gates["i"][0] + gates["i"][1])
+    f_t = jax.nn.sigmoid(xh @ gates["f"][0] + gates["f"][1])
+    g_t = jnp.tanh(xh @ gates["g"][0] + gates["g"][1])
+    o_t = jax.nn.sigmoid(xh @ gates["o"][0] + gates["o"][1])
+    c_t = f_t * c + i_t * g_t
+    h_t = o_t * jnp.tanh(c_t)
+    return h_t, c_t
+
+
+def lstm_cell_fused(
+    params: LSTMParams,
+    x_t: jax.Array,
+    h: jax.Array,
+    c: jax.Array,
+    sigmoid_fn: Callable[[jax.Array], jax.Array] = jax.nn.sigmoid,
+    tanh_fn: Callable[[jax.Array], jax.Array] = jnp.tanh,
+) -> tuple[jax.Array, jax.Array]:
+    """Paper-optimised cell (C1+C2): one stacked matmul for all four gates.
+
+    ``sigmoid_fn``/``tanh_fn`` are injectable so the LUT variants (C3) slot in
+    without touching the dataflow — mirroring the FPGA design where the LUT
+    modules sit behind a shared bus.
+    """
+    hdim = params.hidden_size
+    xh = jnp.concatenate([x_t, h], axis=-1)
+    z = xh @ params.w + params.b  # (..., 4h): the single MXU pass
+    zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
+    i_t = sigmoid_fn(zi)
+    f_t = sigmoid_fn(zf)
+    g_t = tanh_fn(zg)
+    o_t = sigmoid_fn(zo)
+    c_t = f_t * c + i_t * g_t
+    h_t = o_t * tanh_fn(c_t)
+    del hdim
+    return h_t, c_t
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point + LUT cell (the bitstream-exact inference path)
+# ---------------------------------------------------------------------------
+
+
+def _lut_fxp(table: jax.Array, spec: lut_mod.LutSpec, q: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Apply a LUT to fixed-point inputs, returning fixed point.
+
+    The FPGA addresses the LUT with the top bits of the fixed-point value;
+    we reproduce that by dequantising the index computation only (exact —
+    it is integer arithmetic either way) and re-quantising the table output.
+    """
+    x = fxp_mod.dequantize(q, fmt)
+    y = lut_mod.lut_apply(x, table, spec)
+    return fxp_mod.quantize(y, fmt)
+
+
+def lstm_cell_fxp(
+    qparams: LSTMParams,
+    qx_t: jax.Array,
+    qh: jax.Array,
+    qc: jax.Array,
+    fmt: FxpFormat,
+    luts: dict[str, tuple[jax.Array, lut_mod.LutSpec]] | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantised cell: fixed-point matmul (int accumulate + rounding shift),
+    shared sigmoid/tanh LUTs.  ``luts=None`` keeps activations full precision
+    (the paper's Fig. 6 sweep quantises data but not activations)."""
+    h4 = qparams.w.shape[1]
+    hdim = h4 // 4
+    qxh = jnp.concatenate([qx_t, qh], axis=-1)
+    z = fxp_mod.fxp_matmul(qxh, qparams.w, fmt, bias=qparams.b)
+    zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
+    if luts is None:
+        act_sig = lambda q: fxp_mod.quantize(jax.nn.sigmoid(fxp_mod.dequantize(q, fmt)), fmt)
+        act_tanh = lambda q: fxp_mod.quantize(jnp.tanh(fxp_mod.dequantize(q, fmt)), fmt)
+    else:
+        sig_table, sig_spec = luts["sigmoid"]
+        tanh_table, tanh_spec = luts["tanh"]
+        act_sig = lambda q: _lut_fxp(sig_table, sig_spec, q, fmt)
+        act_tanh = lambda q: _lut_fxp(tanh_table, tanh_spec, q, fmt)
+    i_t = act_sig(zi)
+    f_t = act_sig(zf)
+    g_t = act_tanh(zg)
+    o_t = act_sig(zo)
+    c_t = fxp_mod.fxp_add(fxp_mod.fxp_mul(f_t, qc, fmt), fxp_mod.fxp_mul(i_t, g_t, fmt), fmt)
+    h_t = fxp_mod.fxp_mul(o_t, act_tanh(c_t), fmt)
+    del hdim
+    return h_t, c_t
+
+
+# ---------------------------------------------------------------------------
+# Layers: scan over the time dimension
+# ---------------------------------------------------------------------------
+
+
+def lstm_layer(
+    params: LSTMParams,
+    xs: jax.Array,
+    h0: jax.Array | None = None,
+    c0: jax.Array | None = None,
+    cell: Callable = lstm_cell_fused,
+    return_sequence: bool = False,
+    **cell_kwargs,
+):
+    """Run the cell over ``xs: (..., n_seq, n_in)`` via ``lax.scan``.
+
+    The recurrence is inherently sequential in t (paper §3.2: "increasing the
+    number of LSTM cells in the LSTM layer cannot help") — throughput comes
+    from making each step cheap, which is exactly what the fused cell does.
+    """
+    n_h = params.hidden_size
+    batch_shape = xs.shape[:-2]
+    dtype = xs.dtype
+    h = h0 if h0 is not None else jnp.zeros((*batch_shape, n_h), dtype)
+    c = c0 if c0 is not None else jnp.zeros((*batch_shape, n_h), dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = cell(params, x_t, h, c, **cell_kwargs)
+        return (h, c), (h if return_sequence else None)
+
+    xs_t = jnp.moveaxis(xs, -2, 0)  # (n_seq, ..., n_in)
+    (h, c), seq = jax.lax.scan(step, (h, c), xs_t)
+    if return_sequence:
+        return jnp.moveaxis(seq, 0, -2), (h, c)
+    return h, c
+
+
+def lstm_layer_fxp(
+    qparams: LSTMParams,
+    qxs: jax.Array,
+    fmt: FxpFormat,
+    luts: dict | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Quantised layer scan: int32 state carried step to step (C5: the FPGA
+    keeps h/C in the shared BRAM between recursions — here they stay in
+    registers/VMEM across the scan)."""
+    n_h = qparams.hidden_size
+    batch_shape = qxs.shape[:-2]
+    qh = jnp.zeros((*batch_shape, n_h), jnp.int32)
+    qc = jnp.zeros((*batch_shape, n_h), jnp.int32)
+
+    def step(carry, qx_t):
+        qh, qc = carry
+        qh, qc = lstm_cell_fxp(qparams, qx_t, qh, qc, fmt, luts)
+        return (qh, qc), None
+
+    qxs_t = jnp.moveaxis(qxs, -2, 0)
+    (qh, qc), _ = jax.lax.scan(step, (qh, qc), qxs_t)
+    return qh, qc

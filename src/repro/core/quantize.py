@@ -1,0 +1,130 @@
+"""Post-training quantisation (paper §5.2) and the quantisation simulator.
+
+The paper trains in full precision, then quantises every parameter and
+variable to ``(x, y)`` fixed point and evaluates MSE on a Python simulator
+while sweeping the fractional width ``x`` (Fig. 6) and the LUT depth
+(Table 1).  ``quantized_lstm_forward`` is that simulator; the sweeps in
+``benchmarks/`` drive it.
+
+Beyond-paper: ``int8_channelwise`` implements the per-channel int8 weight
+quantisation used by the LM serving path (same C4 idea, modern scaling).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fxp as fxp_mod
+from repro.core import lut as lut_mod
+from repro.core.fxp import FxpFormat
+from repro.core.lstm import LSTMParams, lstm_layer_fxp
+
+__all__ = [
+    "QuantizedLstmModel",
+    "quantize_lstm_model",
+    "quantized_lstm_forward",
+    "Int8Tensor",
+    "int8_channelwise",
+    "int8_matmul",
+]
+
+
+@dataclasses.dataclass
+class QuantizedLstmModel:
+    """Fixed-point snapshot of the traffic model (LSTM + dense head)."""
+
+    lstm: LSTMParams            # int32 storage of (x,y) fixed point
+    dense_w: jax.Array
+    dense_b: jax.Array
+    fmt: FxpFormat
+    lut_depth: int | None       # None = full-precision activations
+
+    def tree_flatten(self):
+        return (self.lstm, self.dense_w, self.dense_b), (self.fmt, self.lut_depth)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedLstmModel, QuantizedLstmModel.tree_flatten, QuantizedLstmModel.tree_unflatten
+)
+
+
+def quantize_lstm_model(params: Any, fmt: FxpFormat, lut_depth: int | None) -> QuantizedLstmModel:
+    """PTQ of the trained float model (params as produced by
+    ``repro.models.lstm_model.init_traffic_model``)."""
+    return QuantizedLstmModel(
+        lstm=LSTMParams(
+            w=fxp_mod.quantize(params["lstm"].w, fmt),
+            b=fxp_mod.quantize(params["lstm"].b, fmt),
+        ),
+        dense_w=fxp_mod.quantize(params["dense"]["w"], fmt),
+        dense_b=fxp_mod.quantize(params["dense"]["b"], fmt),
+        fmt=fmt,
+        lut_depth=lut_depth,
+    )
+
+
+def quantized_lstm_forward(qmodel: QuantizedLstmModel, xs: jax.Array) -> jax.Array:
+    """Bitstream-exact inference: float input -> quantise -> fixed-point LSTM
+    scan (+ LUT activations) -> fixed-point dense -> dequantise.
+
+    ``xs``: (..., n_seq, n_i) float.  Returns (..., n_o) float predictions.
+    """
+    fmt = qmodel.fmt
+    luts = lut_mod.make_lut_pair(qmodel.lut_depth) if qmodel.lut_depth else None
+    qxs = fxp_mod.quantize(xs, fmt)
+    qh, _ = lstm_layer_fxp(qmodel.lstm, qxs, fmt, luts)
+    qy = fxp_mod.fxp_matmul(qh, qmodel.dense_w, fmt, bias=qmodel.dense_b)
+    return fxp_mod.dequantize(qy, fmt)
+
+
+# ---------------------------------------------------------------------------
+# Beyond-paper: per-channel int8 for LM serving (C4 at scale)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Int8Tensor:
+    """int8 values + per-output-channel float scales (symmetric)."""
+
+    q: jax.Array        # int8, same shape as the float original
+    scale: jax.Array    # float32, shape (..., 1, out) broadcastable over rows
+
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+jax.tree_util.register_pytree_node(
+    Int8Tensor, Int8Tensor.tree_flatten, Int8Tensor.tree_unflatten
+)
+
+
+def int8_channelwise(w: jax.Array, axis: int = -1) -> Int8Tensor:
+    """Symmetric per-channel quantisation along ``axis`` (output channels)."""
+    amax = jnp.max(jnp.abs(w), axis=tuple(i for i in range(w.ndim) if i != axis % w.ndim),
+                   keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return Int8Tensor(q=q, scale=scale.astype(jnp.float32))
+
+
+def int8_matmul(x: jax.Array, w8: Int8Tensor) -> jax.Array:
+    """``x @ dequant(w8)`` computed as int8-weight matmul with float rescale —
+    on TPU this hits the MXU int8 path; weights stay int8 in HBM (half the
+    bytes: the serving-path win the paper's C4 points at)."""
+    y = jnp.matmul(x, w8.q.astype(x.dtype))
+    return y * w8.scale.reshape((1,) * (y.ndim - 1) + (-1,)).astype(y.dtype)

@@ -1,0 +1,2 @@
+from repro.data.traffic import make_pems_like_series, make_windows, train_test_split  # noqa: F401
+from repro.data.tokens import TokenDataset  # noqa: F401

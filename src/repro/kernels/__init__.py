@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+kernel            | paper idea            | oracle
+------------------|-----------------------|---------------------------
+lstm_step.py      | C1+C2 fused cell      | ref.lstm_step_ref
+lstm_step.py(seq) | C5 VMEM-resident scan | ref.lstm_sequence_ref
+lut_act.py        | C3 shared LUT         | ref.lut_act_ref
+fxp_matmul.py     | C4 fixed-point ALU    | ref.fxp_matmul_ref
+ssd_scan.py       | C1/C2/C5 for SSD      | ref.ssd_chunk_scan_ref
+
+All kernels validate in interpret mode on CPU; ``ops.py`` is the public
+dispatch layer.
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,80 @@
+"""Fixed-point matmul — Pallas TPU kernel (paper C4).
+
+``(x, y)`` fixed-point operands (stored int32, int8/int16-ranged) multiply
+with int32 accumulation — the MXU's int8 path / the DSP48's wide
+accumulator — followed by one round-half-up shift back to ``x`` fractional
+bits and saturation to the ``y``-bit range.  Bias is pre-shifted into the
+2x-fractional accumulator, exactly as ``repro.core.fxp.fxp_matmul`` (the
+oracle) does.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["fxp_matmul_pallas"]
+
+
+def _fxp_mm_kernel(a_ref, b_ref, bias_ref, out_ref, *, frac_bits: int,
+                   qmin: int, qmax: int):
+    a = a_ref[...]          # (bm, K) int32
+    b = b_ref[...]          # (K, bn) int32
+    bias = bias_ref[...]    # (1, bn) int32
+    acc = jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    acc = acc + (bias << frac_bits)
+    half = (1 << (frac_bits - 1)) if frac_bits > 0 else 0
+    shifted = (acc + half) >> frac_bits
+    out_ref[...] = jnp.clip(shifted, qmin, qmax)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("frac_bits", "total_bits", "block_m", "block_n", "interpret"),
+)
+def fxp_matmul_pallas(
+    a_q: jax.Array,                 # (M, K) int32 fixed point
+    b_q: jax.Array,                 # (K, N) int32 fixed point
+    bias_q: jax.Array | None = None,  # (N,) int32 fixed point
+    *,
+    frac_bits: int = 8,
+    total_bits: int = 16,
+    block_m: int = 128,
+    block_n: int = 128,
+    interpret: bool = False,
+):
+    M, K = a_q.shape
+    _, N = b_q.shape
+    if bias_q is None:
+        bias_q = jnp.zeros((N,), jnp.int32)
+    bm, bn = min(block_m, M), min(block_n, N)
+    pad_m, pad_n = (-M) % bm, (-N) % bn
+    if pad_m:
+        a_q = jnp.pad(a_q, ((0, pad_m), (0, 0)))
+    if pad_n:
+        b_q = jnp.pad(b_q, ((0, 0), (0, pad_n)))
+        bias_q = jnp.pad(bias_q, (0, pad_n))
+    Mp, Np = M + pad_m, N + pad_n
+
+    qmin, qmax = -(1 << (total_bits - 1)), (1 << (total_bits - 1)) - 1
+    kernel = functools.partial(
+        _fxp_mm_kernel, frac_bits=frac_bits, qmin=qmin, qmax=qmax
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(Mp // bm, Np // bn),
+        in_specs=[
+            pl.BlockSpec((bm, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
+        interpret=interpret,
+    )(a_q, b_q, bias_q.reshape(1, Np))
+    return out[:M, :N]

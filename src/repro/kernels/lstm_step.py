@@ -1,0 +1,191 @@
+"""Fused LSTM cell — Pallas TPU kernels (paper C1+C2+C5 on the MXU).
+
+Two kernels:
+
+* ``lstm_step_kernel``  — one time step: a single fused pass computes all
+  four gate matmuls (C1: the four "ALUs" become one stacked MXU operand),
+  the activations, and the elementwise state update (C2: the (3.4)/(3.5)
+  tail never leaves VMEM, the TPU analogue of the row-pipelined ALU5).
+  Grid tiles (batch × hidden); the hidden tile of every gate is co-resident.
+
+* ``lstm_sequence_kernel`` — the whole recurrence: weights are loaded into
+  VMEM once and ``h``/``c`` live in VMEM for all ``n_seq`` steps (C5: the
+  FPGA keeps x/h in one shared BRAM and weights in the bitstream — here HBM
+  traffic is O(1) in sequence length instead of O(n_seq)).
+
+Weight layout is ``(4, F, H)`` with gate order i,f,g,o and ``F = n_in + n_h``
+(inputs first).  Oracles: ``repro.kernels.ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lstm_step_pallas", "lstm_sequence_pallas"]
+
+
+def _dot(a, b):
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single fused step
+# ---------------------------------------------------------------------------
+
+
+def _lstm_step_kernel(xh_ref, w_ref, b_ref, c_ref, h_out_ref, c_out_ref):
+    xh = xh_ref[...]                      # (bb, F)
+    w = w_ref[...]                        # (4, F, bh)
+    b = b_ref[...]                        # (4, bh)
+    c = c_ref[...].astype(jnp.float32)    # (bb, bh)
+
+    # C1: all four gates in one flight — on TPU the gate axis is just more
+    # MXU columns; on the FPGA it was four concurrent DSP ALUs.
+    zi = _dot(xh, w[0]) + b[0][None, :]
+    zf = _dot(xh, w[1]) + b[1][None, :]
+    zg = _dot(xh, w[2]) + b[2][None, :]
+    zo = _dot(xh, w[3]) + b[3][None, :]
+
+    i_t = jax.nn.sigmoid(zi)
+    f_t = jax.nn.sigmoid(zf)
+    g_t = jnp.tanh(zg)
+    o_t = jax.nn.sigmoid(zo)
+
+    # C2: the elementwise tail runs on the VPU against VMEM-resident tiles.
+    c_t = f_t * c + i_t * g_t
+    h_t = o_t * jnp.tanh(c_t)
+
+    h_out_ref[...] = h_t.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_t.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_h", "interpret"))
+def lstm_step_pallas(
+    xh: jax.Array,      # (B, F)
+    w: jax.Array,       # (4, F, H)
+    b: jax.Array,       # (4, H)
+    c: jax.Array,       # (B, H)
+    *,
+    block_b: int = 128,
+    block_h: int = 128,
+    interpret: bool = False,
+):
+    B, F = xh.shape
+    H = w.shape[-1]
+    bb, bh = min(block_b, B), min(block_h, H)
+
+    pad_b, pad_h = (-B) % bb, (-H) % bh
+    if pad_b or pad_h:
+        xh = jnp.pad(xh, ((0, pad_b), (0, 0)))
+        c = jnp.pad(c, ((0, pad_b), (0, pad_h)))
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, pad_h)))
+        b = jnp.pad(b, ((0, 0), (0, pad_h)))
+    Bp, Hp = B + pad_b, H + pad_h
+
+    grid = (Bp // bb, Hp // bh)
+    h_out, c_out = pl.pallas_call(
+        _lstm_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, F), lambda i, j: (i, 0)),
+            pl.BlockSpec((4, F, bh), lambda i, j: (0, 0, j)),
+            pl.BlockSpec((4, bh), lambda i, j: (0, j)),
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+            pl.BlockSpec((bb, bh), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, Hp), xh.dtype),
+            jax.ShapeDtypeStruct((Bp, Hp), xh.dtype),
+        ],
+        interpret=interpret,
+    )(xh, w, b, c)
+    return h_out[:B, :H], c_out[:B, :H]
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence kernel: weights + state stay in VMEM across the recurrence
+# ---------------------------------------------------------------------------
+
+
+def _lstm_sequence_kernel(xs_ref, w_ref, b_ref, h0_ref, c0_ref,
+                          h_out_ref, c_out_ref, *, n_seq: int):
+    w = w_ref[...]                         # (4, F, H) — loaded once (C5)
+    b = b_ref[...]                         # (4, H)
+    H = w.shape[-1]
+
+    def step(t, hc):
+        h, c = hc
+        x_t = xs_ref[:, t, :]              # (bb, n_in) dynamic time slice
+        xh = jnp.concatenate([x_t.astype(jnp.float32), h], axis=-1)
+        zi = _dot(xh, w[0]) + b[0][None, :]
+        zf = _dot(xh, w[1]) + b[1][None, :]
+        zg = _dot(xh, w[2]) + b[2][None, :]
+        zo = _dot(xh, w[3]) + b[3][None, :]
+        i_t = jax.nn.sigmoid(zi)
+        f_t = jax.nn.sigmoid(zf)
+        g_t = jnp.tanh(zg)
+        o_t = jax.nn.sigmoid(zo)
+        c = f_t * c + i_t * g_t
+        h = o_t * jnp.tanh(c)
+        return (h, c)
+
+    h0 = h0_ref[...].astype(jnp.float32)
+    c0 = c0_ref[...].astype(jnp.float32)
+    h, c = jax.lax.fori_loop(0, n_seq, step, (h0, c0))
+    del H
+    h_out_ref[...] = h.astype(h_out_ref.dtype)
+    c_out_ref[...] = c.astype(c_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def lstm_sequence_pallas(
+    xs: jax.Array,     # (B, T, n_in)
+    w: jax.Array,      # (4, F, H), F = n_in + H
+    b: jax.Array,      # (4, H)
+    h0: jax.Array,     # (B, H)
+    c0: jax.Array,     # (B, H)
+    *,
+    block_b: int = 128,
+    interpret: bool = False,
+):
+    B, T, n_in = xs.shape
+    H = w.shape[-1]
+    bb = min(block_b, B)
+    pad_b = (-B) % bb
+    if pad_b:
+        xs = jnp.pad(xs, ((0, pad_b), (0, 0), (0, 0)))
+        h0 = jnp.pad(h0, ((0, pad_b), (0, 0)))
+        c0 = jnp.pad(c0, ((0, pad_b), (0, 0)))
+    Bp = B + pad_b
+
+    kernel = functools.partial(_lstm_sequence_kernel, n_seq=T)
+    h_out, c_out = pl.pallas_call(
+        kernel,
+        grid=(Bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, T, n_in), lambda i: (i, 0, 0)),
+            pl.BlockSpec((4, n_in + H, H), lambda i: (0, 0, 0)),
+            pl.BlockSpec((4, H), lambda i: (0, 0)),
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bp, H), xs.dtype),
+            jax.ShapeDtypeStruct((Bp, H), xs.dtype),
+        ],
+        interpret=interpret,
+    )(xs, w, b, h0, c0)
+    return h_out[:B], c_out[:B]

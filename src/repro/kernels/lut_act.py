@@ -1,0 +1,93 @@
+"""LUT activation — Pallas TPU kernel (paper C3).
+
+The table (depth 64–1024) lives in VMEM — the analogue of the FPGA's shared
+LUTRAM module — and every element of the input tile is mapped to
+``table[clip(floor((x - lo) / step))]``.
+
+Two gather strategies:
+
+* ``mxu_onehot=True`` (default): the lookup is computed as
+  ``one_hot(idx) @ table`` — a (tile × depth) · (depth) matmul.  Dynamic
+  per-lane gathers are awkward on the TPU vector unit; a one-hot matmul
+  runs on the MXU at full tilt for the depths the paper uses, and is the
+  TPU-idiomatic translation of "a BRAM port per consumer".
+* ``mxu_onehot=False``: direct ``jnp.take`` (fine in interpret mode and on
+  newer TPU generations with dynamic-gather support).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lut_act_pallas"]
+
+_LANES = 128
+
+
+def _lut_kernel(x_ref, table_ref, out_ref, *, lo: float, step: float,
+                depth: int, mxu_onehot: bool):
+    x = x_ref[...].astype(jnp.float32)            # (bm, 128)
+    table = table_ref[...]                        # (1, depth)
+    idx = jnp.clip(jnp.floor((x - lo) / step).astype(jnp.int32), 0, depth - 1)
+    if mxu_onehot:
+        # (bm, 128, depth) one-hot contracted with (depth,) on the MXU.
+        iota = jax.lax.broadcasted_iota(jnp.int32, (*idx.shape, depth), 2)
+        onehot = (iota == idx[..., None]).astype(jnp.float32)
+        y = jax.lax.dot_general(
+            onehot, table[0].astype(jnp.float32),
+            (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+        )
+    else:
+        y = jnp.take(table[0], idx, axis=0)
+    out_ref[...] = y.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lo", "hi", "block_rows", "mxu_onehot", "interpret")
+)
+def lut_act_pallas(
+    x: jax.Array,
+    table: jax.Array,       # (depth,)
+    *,
+    lo: float,
+    hi: float,
+    block_rows: int = 256,
+    mxu_onehot: bool = True,
+    interpret: bool = False,
+):
+    """Shape-preserving LUT activation.  The wrapper flattens to a
+    (rows, 128)-lane layout, pads, and tiles rows across the grid."""
+    depth = table.shape[0]
+    step = (hi - lo) / depth
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % _LANES
+    flat = jnp.pad(flat, (0, pad))
+    rows = flat.shape[0] // _LANES
+    xm = flat.reshape(rows, _LANES)
+    bm = min(block_rows, rows)
+    pad_r = (-rows) % bm
+    if pad_r:
+        xm = jnp.pad(xm, ((0, pad_r), (0, 0)))
+    rows_p = rows + pad_r
+
+    kernel = functools.partial(
+        _lut_kernel, lo=lo, step=step, depth=depth, mxu_onehot=mxu_onehot
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows_p // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, _LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, depth), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, _LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, _LANES), x.dtype),
+        interpret=interpret,
+    )(xm, table.reshape(1, depth))
+    return out.reshape(-1)[:n].reshape(orig_shape)

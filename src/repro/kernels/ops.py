@@ -1,0 +1,71 @@
+"""Public jit'd wrappers over the Pallas kernels.
+
+Every op dispatches between the Pallas kernel (TPU target; interpret mode on
+CPU for validation) and the pure-jnp oracle in ``ref.py``.  The default
+backend policy: on TPU run the compiled kernel, anywhere else run the oracle
+— so models can call these unconditionally and dry-runs lower the jnp path.
+
+``impl`` overrides: "pallas" (compiled), "interpret" (kernel body on CPU),
+"ref" (oracle).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.fxp_matmul import fxp_matmul_pallas
+from repro.kernels.lstm_step import lstm_sequence_pallas, lstm_step_pallas
+from repro.kernels.lut_act import lut_act_pallas
+from repro.kernels.ssd_scan import ssd_chunk_scan_pallas
+
+__all__ = ["lstm_step", "lstm_sequence", "lut_act", "fxp_matmul", "ssd_chunk_scan"]
+
+
+def _auto_impl(impl: str | None) -> str:
+    if impl is not None:
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def lstm_step(xh, w, b, c, impl: str | None = None, **kw):
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return _ref.lstm_step_ref(xh, w, b, c)
+    return lstm_step_pallas(xh, w, b, c, interpret=(impl == "interpret"), **kw)
+
+
+def lstm_sequence(xs, w, b, h0, c0, impl: str | None = None, **kw):
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return _ref.lstm_sequence_ref(xs, w, b, h0, c0)
+    return lstm_sequence_pallas(xs, w, b, h0, c0, interpret=(impl == "interpret"), **kw)
+
+
+def lut_act(x, table, lo: float, hi: float, impl: str | None = None, **kw):
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return _ref.lut_act_ref(x, table, lo, hi)
+    return lut_act_pallas(x, table, lo=lo, hi=hi, interpret=(impl == "interpret"), **kw)
+
+
+def fxp_matmul(a_q, b_q, bias_q=None, frac_bits: int = 8, total_bits: int = 16,
+               impl: str | None = None, **kw):
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return _ref.fxp_matmul_ref(a_q, b_q, bias_q, frac_bits, total_bits)
+    return fxp_matmul_pallas(a_q, b_q, bias_q, frac_bits=frac_bits,
+                             total_bits=total_bits,
+                             interpret=(impl == "interpret"), **kw)
+
+
+def ssd_chunk_scan(x, a_log, b, c, h0=None, chunk: int = 128,
+                   impl: str | None = None, **kw):
+    impl = _auto_impl(impl)
+    if impl == "ref":
+        return _ref.ssd_chunk_scan_ref(x, a_log, b, c, chunk, h0)
+    return ssd_chunk_scan_pallas(x, a_log, b, c, h0, chunk=chunk,
+                                 interpret=(impl == "interpret"), **kw)

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the bit-level specification its kernel is tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes and asserts allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "lstm_step_ref",
+    "lstm_sequence_ref",
+    "lut_act_ref",
+    "fxp_matmul_ref",
+    "ssd_chunk_scan_ref",
+]
+
+
+def lstm_step_ref(xh: jax.Array, w: jax.Array, b: jax.Array, c: jax.Array):
+    """Fused LSTM step oracle.
+
+    xh: (B, F) pre-concatenated [x_t, h_{t-1}];  w: (4, F, H) stacked gates
+    in i,f,g,o order;  b: (4, H);  c: (B, H).  Returns (h', c').
+    """
+    z = jnp.einsum("bf,gfh->gbh", xh, w) + b[:, None, :]
+    i_t = jax.nn.sigmoid(z[0])
+    f_t = jax.nn.sigmoid(z[1])
+    g_t = jnp.tanh(z[2])
+    o_t = jax.nn.sigmoid(z[3])
+    c_t = f_t * c + i_t * g_t
+    h_t = o_t * jnp.tanh(c_t)
+    return h_t, c_t
+
+
+def lstm_sequence_ref(xs: jax.Array, w: jax.Array, b: jax.Array,
+                      h0: jax.Array, c0: jax.Array):
+    """Full-sequence oracle.  xs: (B, T, n_in); w: (4, n_in+H, H); b: (4, H);
+    h0/c0: (B, H).  Returns (h_T, c_T)."""
+
+    def step(carry, x_t):
+        h, c = carry
+        xh = jnp.concatenate([x_t, h], axis=-1)
+        h, c = lstm_step_ref(xh, w, b, c)
+        return (h, c), None
+
+    (h, c), _ = jax.lax.scan(step, (h0, c0), jnp.moveaxis(xs, 1, 0))
+    return h, c
+
+
+def lut_act_ref(x: jax.Array, table: jax.Array, lo: float, hi: float):
+    """LUT activation oracle: clamp -> bin index -> gather."""
+    depth = table.shape[0]
+    step = (hi - lo) / depth
+    idx = jnp.clip(jnp.floor((x - lo) / step).astype(jnp.int32), 0, depth - 1)
+    return jnp.take(table, idx, axis=0)
+
+
+def fxp_matmul_ref(a_q: jax.Array, b_q: jax.Array, bias_q: jax.Array | None,
+                   frac_bits: int, total_bits: int):
+    """Fixed-point matmul oracle: int32 accumulate, pre-shifted bias,
+    round-half-up shift, saturate."""
+    acc = jnp.matmul(a_q.astype(jnp.int32), b_q.astype(jnp.int32))
+    if bias_q is not None:
+        acc = acc + (bias_q.astype(jnp.int32) << frac_bits)
+    half = 1 << (frac_bits - 1) if frac_bits > 0 else 0
+    shifted = (acc + half) >> frac_bits
+    qmin, qmax = -(1 << (total_bits - 1)), (1 << (total_bits - 1)) - 1
+    return jnp.clip(shifted, qmin, qmax).astype(jnp.int32)
+
+
+def ssd_chunk_scan_ref(x: jax.Array, a_log: jax.Array, b: jax.Array, c: jax.Array,
+                       chunk: int, h0: jax.Array | None = None):
+    """Mamba-2 SSD oracle — naive sequential scan (exact).
+
+    x: (B, T, H, P)   inputs per head (P = head dim)
+    a_log: (B, T, H)  per-step log decay (<= 0)
+    b: (B, T, H, N)   input projection onto state (N = d_state)
+    c: (B, T, H, N)   output projection
+    h0: (B, H, P, N)  initial state
+    Returns y: (B, T, H, P), h_T: (B, H, P, N).
+
+    ``chunk`` is unused here (the oracle is the O(T) recurrence); the kernel
+    must match it for every chunk size.
+    """
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+    h = h0 if h0 is not None else jnp.zeros((B, H, P, N), x.dtype)
+
+    def step(h, inp):
+        x_t, a_t, b_t, c_t = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(a_t)[..., None, None]          # (B,H,1,1)
+        h = decay * h + x_t[..., None] * b_t[..., None, :]  # outer product
+        y_t = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y_t
+
+    inputs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(a_log, 1, 0),
+              jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    h, ys = jax.lax.scan(step, h, inputs)
+    return jnp.moveaxis(ys, 0, 1), h

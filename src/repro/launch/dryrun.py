@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # LICM hoists dtype-converts of remat residual stacks OUT of backward
+    # while loops, materialising a full fp32 copy of every per-layer
+    # residual (measured: +7.9 GB/device on gemma2 train_4k).  Disabling it
+    # converts per-slice inside the loop instead.  See EXPERIMENTS.md §Perf.
+    "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax-importing import: jax locks the device count at
+# first init.  This flag lives ONLY here (and in tests/spmd subprocesses);
+# smoke tests and benchmarks see the real single CPU device.
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input-shape × mesh) cell this lowers and compiles
+the *real* step function — train_step for train shapes, prefill/encode for
+prefill shapes, serve_step (decode) for decode shapes — against the
+production mesh (16×16 single-pod, 2×16×16 multi-pod), prints
+``memory_analysis()`` and ``cost_analysis()``, and writes a JSON record with
+the three roofline terms (analysis/roofline.py).
+
+Usage:
+    python -m repro.launch.dryrun --arch glm4-9b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all [--mesh both] [--timeout 2400]
+"""
+
+import argparse
+import gzip
+import json
+import sys
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.flops import model_flops, param_count, active_param_count
+from repro.analysis.roofline import analyze_compiled
+from repro.configs import ARCH_NAMES, get_config, shapes_for
+from repro.configs.base import LM_SHAPES, ShapeSpec
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (batch_struct, cache_struct, make_context,
+                                params_struct, train_state_struct)
+from repro.models.transformer import build
+from repro.training.optimizer import adam, adamw, cosine_warmup_schedule
+from repro.training.trainer import make_train_step
+
+DEFAULT_OUT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# Memory-motivated per-arch training recipes (recorded in EXPERIMENTS.md):
+# trillion/hundreds-of-B models need int8 Adam moments (paper C4 applied to
+# optimizer state) to fit 16 GiB/chip; gradient accumulation (sequential
+# microbatches) is the per-step activation-memory lever.
+TRAIN_RECIPES = {
+    "kimi-k2-1t-a32b": {"moment_dtype": "int8", "accum_steps": 4},
+    "jamba-1.5-large-398b": {"moment_dtype": "int8", "accum_steps": 4},
+    # ZeRO-1 (§Perf yi hillclimb): params fit HBM replicated-over-data for
+    # the <=10B dense archs — drops the per-layer FSDP gathers.
+    "yi-9b": {"zero1": True},
+}
+DEFAULT_ACCUM = 4  # 1M-token global batches: 256k tokens per microbatch
+
+
+def _mode_for(shape: ShapeSpec, cfg) -> str:
+    if shape.kind == "train":
+        return "train"
+    if shape.kind == "prefill":
+        return "encode" if not cfg.causal else "prefill"
+    return "decode"
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, *,
+               remat: str = "full", moment_dtype: str | None = None,
+               use_ep: bool | None = None, zero1: bool | None = None):
+    """Build + lower + compile one cell; returns (compiled, meta)."""
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.kind != "train":
+        remat = "none"   # activation checkpointing is a training-only lever
+    if zero1 is None:
+        zero1 = TRAIN_RECIPES.get(arch, {}).get("zero1", False) and shape.kind == "train"
+    ctx = make_context(mesh, cfg, remat=remat, use_ep=use_ep, zero1=zero1)
+    model = build(cfg)
+    mode = _mode_for(shape, cfg)
+    chips = mesh.size
+
+    t0 = time.time()
+    if mode == "train":
+        recipe = dict(TRAIN_RECIPES.get(arch, {}))
+        if moment_dtype:
+            recipe["moment_dtype"] = moment_dtype
+        opt = adamw(moment_dtype=recipe.get("moment_dtype", "float32"))
+        sched = cosine_warmup_schedule(3e-4, 2000, 100_000)
+        state_s = train_state_struct(model, ctx, opt)
+        step = make_train_step(model, ctx, opt, sched,
+                               accum_steps=recipe.get("accum_steps", DEFAULT_ACCUM),
+                               param_shardings=jax.tree.map(
+                                   lambda s: s.sharding, state_s.params))
+        batch_s = batch_struct(cfg, shape, ctx, "train")
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state_s, batch_s)
+    elif mode == "encode":  # encoder-only archs: prefill == full encode
+        def encode_step(params, batch):
+            from repro.models.transformer import forward
+            logits, _ = forward(params, batch, cfg, ctx, "train")
+            return logits
+        params_s = params_struct(model, ctx)
+        batch_s = batch_struct(cfg, shape, ctx, "prefill")
+        with mesh:
+            lowered = jax.jit(encode_step).lower(params_s, batch_s)
+    elif mode == "prefill":
+        def prefill_step(params, batch, caches):
+            return model.prefill(params, batch, caches, ctx)
+        params_s = params_struct(model, ctx)
+        batch_s = batch_struct(cfg, shape, ctx, "prefill")
+        cache_s = cache_struct(model, shape.global_batch, shape.seq_len, ctx)
+        with mesh:
+            lowered = jax.jit(prefill_step, donate_argnums=(2,)).lower(
+                params_s, batch_s, cache_s)
+    else:  # decode
+        def serve_step(params, batch, caches, cur_len):
+            return model.decode(params, batch, caches, cur_len, ctx)
+        params_s = params_struct(model, ctx)
+        batch_s = batch_struct(cfg, shape, ctx, "decode")
+        cache_s = cache_struct(model, shape.global_batch, shape.seq_len, ctx)
+        cur_s = jax.ShapeDtypeStruct((), jnp.int32)
+        with mesh:
+            lowered = jax.jit(serve_step, donate_argnums=(2,)).lower(
+                params_s, batch_s, cache_s, cur_s)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "mode": mode, "remat": remat,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "params_total": param_count(cfg), "params_active": active_param_count(cfg),
+        "model_flops": model_flops(cfg, shape),
+    }
+    return compiled, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             save_hlo: bool = True, **kw) -> dict:
+    shape_info = shapes_for(arch)[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}__{shape_name}__{mesh_name}"
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if isinstance(shape_info, str):  # assignment-mandated skip
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped", "reason": shape_info}
+        (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1))
+        print(f"[dryrun] SKIP {tag}: {shape_info}")
+        return rec
+
+    compiled, meta = lower_cell(arch, shape_name, multi_pod, **kw)
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    print(f"[dryrun] {tag}: memory_analysis "
+          f"arg={mem.argument_size_in_bytes/1e9:.2f}GB "
+          f"out={mem.output_size_in_bytes/1e9:.2f}GB "
+          f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+          f"alias={mem.alias_size_in_bytes/1e9:.2f}GB")
+    print(f"[dryrun] {tag}: cost_analysis flops={cost.get('flops',0):.3e} "
+          f"bytes={cost.get('bytes accessed',0):.3e}")
+
+    rep = analyze_compiled(
+        compiled, arch=arch, shape=shape_name, mesh_name=meta["mesh"],
+        chips=meta["chips"], model_flops=meta["model_flops"])
+    rec = {"status": "ok", **meta, **rep.row(),
+           "hbm_util_fraction": rep.bytes_per_device / 16e9,
+           "t_lower_s": meta["t_lower_s"], "t_compile_s": meta["t_compile_s"]}
+    (out_dir / f"{tag}.json").write_text(json.dumps(rec, indent=1, default=float))
+    if save_hlo:
+        with gzip.open(out_dir / f"{tag}.hlo.txt.gz", "wt") as f:
+            f.write(compiled.as_text())
+    print(f"[dryrun] {tag}: t_comp={rep.t_compute*1e3:.2f}ms "
+          f"t_mem={rep.t_memory*1e3:.2f}ms t_coll={rep.t_collective*1e3:.2f}ms "
+          f"bottleneck={rep.bottleneck} useful={rep.useful_ratio:.2f} "
+          f"bytes/dev={rep.bytes_per_device/1e9:.2f}GB")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(LM_SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", type=Path, default=DEFAULT_OUT)
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args(argv)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if not args.all:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        for mp in meshes:
+            run_cell(args.arch, args.shape, mp, args.out,
+                     save_hlo=not args.no_hlo, remat=args.remat)
+        return
+
+    # sweep: one subprocess per cell so a failure can't kill the sweep
+    import subprocess
+    results = []
+    for arch in ARCH_NAMES:
+        for shape_name in LM_SHAPES:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                tag = f"{arch}__{shape_name}__{mesh_name}"
+                if (args.out / f"{tag}.json").exists():
+                    print(f"[dryrun] cached {tag}")
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--mesh", "multi" if mp else "single",
+                       "--out", str(args.out), "--remat", args.remat]
+                if args.no_hlo:
+                    cmd.append("--no-hlo")
+                t0 = time.time()
+                try:
+                    r = subprocess.run(cmd, capture_output=True, text=True,
+                                       timeout=args.timeout)
+                    ok = r.returncode == 0
+                    if not ok:
+                        err = (r.stderr or "")[-2000:]
+                        (args.out / f"{tag}.json").write_text(json.dumps(
+                            {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                             "status": "failed", "error": err}, indent=1))
+                        print(f"[dryrun] FAIL {tag}\n{err}")
+                except subprocess.TimeoutExpired:
+                    (args.out / f"{tag}.json").write_text(json.dumps(
+                        {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                         "status": "timeout", "timeout_s": args.timeout}, indent=1))
+                    print(f"[dryrun] TIMEOUT {tag}")
+                print(f"[dryrun] {tag} done in {time.time()-t0:.0f}s")
+    # aggregate
+    rows = []
+    for f in sorted(args.out.glob("*.json")):
+        if f.name != "summary.json":
+            rows.append(json.loads(f.read_text()))
+    (args.out / "summary.json").write_text(json.dumps(rows, indent=1, default=float))
+    print(f"[dryrun] aggregated {len(rows)} cells -> {args.out/'summary.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod: 2 pods x 256 chips as (pod=2, data=16, model=16) — the ``pod``
+axis carries pure data parallelism (optionally with int8 gradient
+compression, training/compression.py) or GPipe stages (parallel/pipeline.py).
+
+Functions, not module constants: importing this module never touches jax
+device state (the dry-run sets the 512-device XLA flag before first init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_mesh_shape", "dp_axes_for"]
+
+
+def make_mesh_shape(*, multi_pod: bool = False):
+    if multi_pod:
+        return (2, 16, 16), ("pod", "data", "model")
+    return (16, 16), ("data", "model")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape, axes = make_mesh_shape(multi_pod=multi_pod)
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, found {len(devices)} — the "
+            "dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count"
+            " before any jax import (launch/dryrun.py does)")
+    import numpy as _np
+    return jax.sharding.Mesh(_np.array(devices[:n]).reshape(shape), axes)
+
+
+def dp_axes_for(mesh) -> tuple:
+    """Batch-sharding axes for a mesh (pod folds into DP when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,121 @@
+"""ShapeDtypeStruct stand-ins + shardings for every lowered step.
+
+``input_specs(arch, shape)`` is the assignment-mandated entry point: it
+returns weak-type-correct, shardable ShapeDtypeStructs for every model input
+of the (architecture × shape) cell — no device allocation ever happens in a
+dry-run.  State/cache specs come from ``jax.eval_shape`` over the real init
+functions, so the dry-run lowers exactly what a real run would execute.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeSpec
+from repro.models.transformer import Model, build
+from repro.parallel.sharding import RunContext, param_shardings
+from repro.serving.kvcache import cache_shardings
+from repro.training.optimizer import Optimizer
+from repro.training.trainer import TrainState, init_train_state
+
+__all__ = ["input_specs", "batch_struct", "train_state_struct", "cache_struct",
+           "make_context"]
+
+
+def make_context(mesh, cfg: ModelConfig, *, remat: str = "full",
+                 use_ep: bool | None = None, zero1: bool = False) -> RunContext:
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    ep = (cfg.n_experts > 0) if use_ep is None else use_ep
+    # FSDP over every DP axis (pod included): at kimi scale the cross-pod
+    # param gathers are the price of fitting 4 bytes/param of state at all.
+    # zero1 drops the param shards (optimizer state stays sharded) — the
+    # right trade when params/TP fit HBM (see §Perf, yi-9b hillclimb).
+    return RunContext(mesh=mesh, dp_axes=dp, tp_axis="model",
+                      fsdp_axes=dp, ep=ep, remat=remat, zero1=zero1)
+
+
+def _shard(mesh, spec: P):
+    return NamedSharding(mesh, spec) if mesh is not None else None
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=_shard(mesh, spec))
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeSpec, ctx: RunContext,
+                 mode: str) -> dict[str, Any]:
+    """Model-input ShapeDtypeStructs for one cell."""
+    mesh = ctx.mesh
+    B = shape.global_batch
+    S = shape.seq_len if mode != "decode" else 1
+    dp = ctx.dp_axes
+    dp_ok = B % max(ctx.dp_size, 1) == 0 and ctx.dp_size > 1
+    bspec = dp if dp_ok else None
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    if cfg.frontend == "audio_stub":
+        batch = {"features": _sds((B, S, cfg.d_model), cdt, mesh, P(bspec, None, None))}
+        if mode == "train":
+            batch["labels"] = _sds((B, S), jnp.int32, mesh, P(bspec, None))
+        return batch
+    if cfg.frontend == "vision_stub" and mode != "decode":
+        s_text = S - cfg.n_frontend_tokens
+        batch = {
+            "tokens": _sds((B, s_text), jnp.int32, mesh, P(bspec, None)),
+            "image_embeds": _sds((B, cfg.n_frontend_tokens, cfg.d_model), cdt,
+                                 mesh, P(bspec, None, None)),
+        }
+        if mode == "train":
+            batch["labels"] = _sds((B, s_text), jnp.int32, mesh, P(bspec, None))
+        return batch
+
+    batch = {"tokens": _sds((B, S), jnp.int32, mesh, P(bspec, None))}
+    if mode == "train":
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, P(bspec, None))
+    return batch
+
+
+def input_specs(arch: str, shape_name: str, ctx: RunContext, mode: str | None = None):
+    """Assignment entry point: ShapeDtypeStructs for every input of the cell."""
+    cfg = get_config(arch)
+    shape = LM_SHAPES[shape_name]
+    mode = mode or ("train" if shape.kind == "train" else
+                    "prefill" if shape.kind == "prefill" else "decode")
+    return batch_struct(cfg, shape, ctx, mode)
+
+
+def train_state_struct(model: Model, ctx: RunContext, opt: Optimizer):
+    """eval_shape of the real init + name-based shardings (FSDP over data)."""
+    struct = jax.eval_shape(
+        partial(init_train_state, model, opt=opt), jax.random.PRNGKey(0))
+    shardings = param_shardings(struct, ctx)
+
+    def attach(s, sh):
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+    return jax.tree.map(attach, struct, shardings)
+
+
+def params_struct(model: Model, ctx: RunContext):
+    struct = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    shardings = param_shardings(struct, ctx)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct, shardings)
+
+
+def cache_struct(model: Model, batch: int, max_len: int, ctx: RunContext,
+                 dtype=None):
+    cfg = model.cfg
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    struct = jax.eval_shape(partial(model.init_cache, batch, max_len, dtype))
+    shardings = cache_shardings(cfg, batch, ctx)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        struct, shardings)

@@ -1,0 +1,124 @@
+"""End-to-end LM training driver with fault tolerance.
+
+Runs a (reduced by default) assigned architecture on the synthetic token
+pipeline with: jit'd donated train step, periodic async checkpointing,
+automatic resume from the latest checkpoint, straggler watchdog (a step
+slower than ``watchdog_factor`` × running median is flagged — on a real
+cluster this triggers hot-spare swap; here it logs), and optional
+crash-injection to demonstrate restart (``--simulate-failure``).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --steps 30 \
+        --smoke --ckpt-dir /tmp/ckpt --ckpt-every 10
+"""
+
+from __future__ import annotations
+
+import argparse
+import statistics
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.configs import get_config, get_smoke_config
+from repro.data.tokens import TokenDataset
+from repro.models.transformer import build
+from repro.parallel.sharding import RunContext
+from repro.training.optimizer import adamw, cosine_warmup_schedule
+from repro.training.trainer import init_train_state, make_train_step
+
+
+def make_batch_fn(cfg, ds: TokenDataset):
+    def fn(step: int):
+        raw = ds.batch_at(step)["tokens"]
+        if cfg.frontend == "audio_stub":
+            rng = np.random.default_rng(step)
+            feats = rng.normal(size=(raw.shape[0], raw.shape[1] - 1, cfg.d_model))
+            return {"features": jnp.asarray(feats, jnp.float32),
+                    "labels": jnp.asarray(raw[:, 1:], jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            rng = np.random.default_rng(step)
+            n_img = cfg.n_frontend_tokens
+            img = rng.normal(size=(raw.shape[0], n_img, cfg.d_model))
+            return {"tokens": jnp.asarray(raw[:, :-1], jnp.int32),
+                    "image_embeds": jnp.asarray(img, jnp.float32),
+                    "labels": jnp.asarray(raw[:, :-1], jnp.int32)}
+        return {"tokens": jnp.asarray(raw[:, :-1], jnp.int32),
+                "labels": jnp.asarray(raw[:, :-1], jnp.int32)}
+    return fn
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true", help="reduced config (CPU)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", type=Path, default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--watchdog-factor", type=float, default=3.0)
+    ap.add_argument("--simulate-failure", type=int, default=None,
+                    help="crash (exit 17) after this step — rerun to resume")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build(cfg)
+    ctx = RunContext(mesh=None)
+    opt = adamw()
+    sched = cosine_warmup_schedule(args.lr, max(args.steps // 10, 1), args.steps)
+    ds = TokenDataset(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                      global_batch=args.batch, seed=args.seed)
+    batch_fn = make_batch_fn(cfg, ds)
+
+    state = init_train_state(model, jax.random.PRNGKey(args.seed), opt)
+    start_step = 0
+    manager = None
+    if args.ckpt_dir:
+        manager = CheckpointManager(args.ckpt_dir, keep=2)
+        if manager.latest_step() is not None:
+            state, extra, start_step = manager.restore(state)
+            start_step = int(extra.get("next_step", start_step))
+            print(f"[train] resumed from checkpoint at step {start_step}")
+
+    step_fn = jax.jit(make_train_step(model, ctx, opt, sched), donate_argnums=(0,))
+
+    times: list[float] = []
+    for step in range(start_step, args.steps):
+        t0 = time.time()
+        state, metrics = step_fn(state, batch_fn(step))
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        times.append(dt)
+        # straggler watchdog: flag abnormal step times (hot-spare trigger)
+        if len(times) >= 5:
+            med = statistics.median(times[-20:])
+            if dt > args.watchdog_factor * med and step > start_step + 2:
+                print(f"[watchdog] step {step} took {dt:.2f}s "
+                      f"(median {med:.2f}s) — straggler suspected")
+        if step % 5 == 0 or step == args.steps - 1:
+            print(f"[train] step {step:4d} loss={loss:.4f} "
+                  f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms")
+        if manager and (step + 1) % args.ckpt_every == 0:
+            manager.save_async(step + 1, state, extra={"next_step": step + 1,
+                                                       "data": ds.state_dict(step + 1)})
+        if args.simulate_failure is not None and step + 1 == args.simulate_failure:
+            if manager:
+                manager.wait()
+            print(f"[train] SIMULATED NODE FAILURE at step {step + 1}", flush=True)
+            sys.exit(17)
+    if manager:
+        manager.wait()
+    print(f"[train] done: {args.steps - start_step} steps, "
+          f"final loss {float(metrics['loss']):.4f}")
+    return float(metrics["loss"])
+
+
+if __name__ == "__main__":
+    main()

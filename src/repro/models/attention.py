@@ -1,0 +1,140 @@
+"""Attention: GQA with chunked-causal prefill and cached decode.
+
+Prefill/training uses an online-softmax scan over KV chunks (flash-attention
+re-derived in pure JAX): the S×S score matrix is never materialised, so 32k
+prefill stays inside honest ``memory_analysis()`` bounds.  Sliding-window
+(gemma2 local layers), attention-logit softcapping, and GQA head grouping are
+all handled in the chunk mask.
+
+Decode is a single masked pass against the cache; ``decode_attention_partial``
+returns (out, max, denom) so sequence-sharded decode (long_500k) can combine
+partial softmaxes across shards flash-decoding style (see parallel/collectives).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import softcap as _softcap
+
+__all__ = ["chunked_attention", "decode_attention", "decode_attention_partial"]
+
+_NEG = -1e30
+
+
+def _mask(qpos, kpos, causal, window, kv_len):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        m &= kpos[None, :] < kv_len
+    return m
+
+
+def chunked_attention(
+    q: jax.Array,          # (B, Sq, Hq, D)
+    k: jax.Array,          # (B, Sk, Hkv, D)
+    v: jax.Array,          # (B, Sk, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap_val: float | None = None,
+    chunk: int = 1024,
+    q_offset: int = 0,
+    kv_len: int | None = None,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    chunk = min(chunk, Sk)
+
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_len = Sk if kv_len is None else kv_len
+    n_chunks = (Sk + pad) // chunk
+
+    qg = (q.reshape(B, Sq, Hkv, G, D) * (D ** -0.5)).astype(jnp.float32)
+    qpos = q_offset + jnp.arange(Sq)
+
+    ks = jnp.moveaxis(k.reshape(B, n_chunks, chunk, Hkv, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, n_chunks, chunk, Hkv, D), 1, 0)
+    starts = jnp.arange(n_chunks) * chunk
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kc, vc, c0 = xs
+        s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kc.astype(jnp.float32))
+        if softcap_val is not None:
+            s = _softcap(s, softcap_val)
+        kpos = c0 + jnp.arange(chunk)
+        msk = _mask(qpos, kpos, causal, window, kv_len)
+        s = jnp.where(msk[None, None, None], s, _NEG)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((B, Hkv, G, Sq), _NEG, jnp.float32),
+        jnp.zeros((B, Hkv, G, Sq), jnp.float32),
+        jnp.zeros((B, Hkv, G, Sq, D), jnp.float32),
+    )
+    (m_run, l_run, acc), _ = jax.lax.scan(step, init, (ks, vs, starts))
+    out = acc / jnp.maximum(l_run, 1e-30)[..., None]          # (B,Hkv,G,Sq,D)
+    return jnp.moveaxis(out, 3, 1).reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def decode_attention_partial(
+    q: jax.Array,        # (B, 1, Hq, D)
+    k: jax.Array,        # (B, S, Hkv, D) cache (may be a shard of the sequence)
+    v: jax.Array,
+    kv_len,              # scalar or (B,) — valid length *within this shard*
+    *,
+    window: int | None = None,
+    softcap_val: float | None = None,
+    pos_offset: int = 0,
+    q_pos=None,          # global position of the query token (for windows)
+):
+    """One masked pass; returns unnormalised (out, m, l) for cross-shard
+    combining.  Used directly (then normalised) for single-shard decode."""
+    B, S, Hkv, D = k.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    # keep the (huge) KV cache in its storage dtype: the f32 upcast happens
+    # INSIDE the dots (preferred_element_type), not as a materialised copy —
+    # an explicit .astype(f32) on a 32k cache writes+rereads 2x the cache
+    # bytes per layer (measured in the dry-run HLO; EXPERIMENTS.md §Perf).
+    qg = (q.reshape(B, 1, Hkv, G, D) * (D ** -0.5)).astype(k.dtype)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    if softcap_val is not None:
+        s = _softcap(s, softcap_val)
+    kpos = pos_offset + jnp.arange(S)
+    valid = kpos[None] < (jnp.asarray(kv_len).reshape(-1, 1) + pos_offset)
+    if window is not None and q_pos is not None:
+        valid = valid & (kpos[None] > jnp.asarray(q_pos).reshape(-1, 1) - window)
+    s = jnp.where(valid[:, None, None, None], s, _NEG)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    out = jnp.einsum("bhgqs,bshd->bhgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out, m, l
+
+
+def decode_attention(q, k, v, kv_len, **kw) -> jax.Array:
+    out, m, l = decode_attention_partial(q, k, v, kv_len, **kw)
+    out = out / jnp.maximum(l, 1e-30)[..., None]
+    B, Hkv, G, _, D = out.shape
+    return jnp.moveaxis(out, 3, 1).reshape(B, 1, Hkv * G, D).astype(q.dtype)

@@ -1,0 +1,89 @@
+"""Shared model components: norms, RoPE, embeddings, initialisers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "rms_norm",
+    "softcap",
+    "rope_freqs",
+    "apply_rope",
+    "dense_init",
+    "embed_init",
+    "cross_entropy",
+    "DTYPES",
+]
+
+DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 statistics but NO f32 (…, d) intermediate.
+
+    ``x.astype(f32)`` materialises a full-width fp32 copy of the residual
+    stream; under remat+scan those copies become stacked residuals, and
+    under SPMD they get gathered in fp32 (measured: the dominant collective
+    bytes on yi-9b — EXPERIMENTS.md §Perf).  Instead the variance comes from
+    a self-contraction with fp32 ACCUMULATION (einsum preferred_element_type)
+    — exact statistics, elementwise math in the storage dtype.
+
+    ``scale`` is stored zero-centred (init 0.0) and applied as (1 + scale),
+    covering both the llama convention (init 1.0 ⇔ scale 0) and gemma's
+    explicit (1 + w).
+    """
+    dtype = x.dtype
+    d = x.shape[-1]
+    var = jnp.einsum("...d,...d->...", x, x,
+                     preferred_element_type=jnp.float32)[..., None] / d
+    inv = jax.lax.rsqrt(var + eps)
+    y = x * inv.astype(dtype)
+    return y * (1.0 + scale).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap).  NOTE: this *is* the
+    paper's C3 target shape — a tanh — and the LUT-activation ablation in
+    benchmarks swaps it for ``lut_tanh``."""
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                        # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key: jax.Array, shape: tuple[int, ...], dtype, fan_in: int | None = None):
+    """Truncated-normal fan-in init (what production LM stacks use)."""
+    fan = fan_in if fan_in is not None else shape[0]
+    std = fan ** -0.5
+    return (std * jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: tuple[int, ...], dtype):
+    """std = d_model**-0.5 keeps tied-head logits O(1) at init."""
+    std = shape[-1] ** -0.5
+    return (std * jax.random.truncated_normal(key, -3.0, 3.0, shape, jnp.float32)).astype(dtype)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, z_loss: float = 0.0):
+    """Token-mean CE in fp32 with optional z-loss; labels: int (B, S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)

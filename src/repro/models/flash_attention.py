@@ -1,0 +1,199 @@
+"""Flash attention with a custom VJP — O(chunk) memory in BOTH passes.
+
+Differentiating a ``lax.scan`` online-softmax forward makes JAX save every
+per-chunk carry (the fp32 accumulator), which at 32k×32 inputs is tens of
+GB — the dry-run's ``memory_analysis()`` exposed exactly that.  The fix is
+the flash-attention backward: save only (q, k, v, out, lse), recompute the
+score block per chunk, and accumulate dq as a carry / dk, dv as stacked
+chunk outputs.
+
+Supports GQA grouping, causal masking, sliding windows (gemma2 local
+layers), and attention-logit softcapping (the tanh shape the paper's C3
+LUT targets); all mask/softcap logic is shared between passes.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.models.common import softcap as _softcap
+
+__all__ = ["flash_attention"]
+
+_NEG = -1e30
+
+
+def _c(x, spec_dims):
+    """with_sharding_constraint with UNCONSTRAINED tail handling.  GSPMD
+    propagation loses batch/seq sharding through the backward einsum chain
+    (measured: replicated (global_B, h, g, Sq, C) score blocks on granite) —
+    these constraints pin the known dims and leave the rest to propagation.
+    No-op when spec_dims is None (no mesh)."""
+    if spec_dims is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec_dims))
+
+
+U = P.UNCONSTRAINED
+
+
+def _axes(batch_axes, kv_ax, g_ax, qseq_ax):
+    """Constraint specs for the 5-D score-block layout (B, Hkv, G, Sq, C)."""
+    if batch_axes is None:
+        return None, None, None
+    s5 = (batch_axes, kv_ax, g_ax, qseq_ax, U)       # s, p, dz, acc, dq, do5
+    s4 = (batch_axes, kv_ax, g_ax, qseq_ax)          # m, l, lse, delta
+    skv = (batch_axes, U, kv_ax, U)                  # dk_c, dv_c (B, C, Hkv, D)
+    return s5, s4, skv
+
+
+def _mask(qpos, kpos, causal, window):
+    m = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _scores(qg, kc, c0, chunk, qpos, causal, window, softcap_val):
+    """Score block (B,Hkv,G,Sq,C), fp32.  Returns (masked, capped-unmasked);
+    the unmasked copy keeps the softcap derivative finite in the backward."""
+    s = jnp.einsum("bqhgd,bchd->bhgqc", qg, kc.astype(jnp.float32))
+    if softcap_val is not None:
+        s = _softcap(s, softcap_val)
+    kpos = c0 + jnp.arange(chunk)
+    msk = _mask(qpos, kpos, causal, window)
+    return jnp.where(msk[None, None, None], s, _NEG), s
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10, 11))
+def flash_attention(q, k, v, causal=True, window=None, softcap_val=None,
+                    chunk=512, q_offset=0, batch_axes=None, kv_ax=None,
+                    g_ax=None, qseq_ax=None):
+    """batch_axes/kv_ax/g_ax/qseq_ax: static mesh-axis names pinning the
+    batch, KV-head, GQA-group, and query-sequence dims of every score block
+    (models/transformer picks the policy per arch: KV-TP when kv divides the
+    model axis, GQA-group-TP when the group count divides it, else
+    context-parallel query sharding)."""
+    out, _ = _flash_fwd(q, k, v, causal, window, softcap_val, chunk, q_offset,
+                        batch_axes, kv_ax, g_ax, qseq_ax)
+    return out
+
+
+def _prep(q, k, v, chunk):
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_chunks = (Sk + pad) // chunk
+    qg = (q.reshape(B, Sq, Hkv, G, D) * (D ** -0.5)).astype(jnp.float32)
+    ks = jnp.moveaxis(k.reshape(B, n_chunks, chunk, Hkv, D), 1, 0)
+    vs = jnp.moveaxis(v.reshape(B, n_chunks, chunk, Hkv, D), 1, 0)
+    starts = jnp.arange(n_chunks) * chunk
+    return qg, ks, vs, starts, chunk, pad, (B, Sq, Hq, Hkv, G, D, Sk)
+
+
+def _flash_fwd(q, k, v, causal, window, softcap_val, chunk, q_offset,
+               batch_axes=None, kv_ax=None, g_ax=None, qseq_ax=None):
+    qg, ks, vs, starts, chunk, pad, dims = _prep(q, k, v, chunk)
+    B, Sq, Hq, Hkv, G, D, Sk = dims
+    qpos = q_offset + jnp.arange(Sq)
+    s5, s4, _ = _axes(batch_axes, kv_ax, g_ax, qseq_ax)
+    qg = _c(qg, None if s5 is None else (batch_axes, qseq_ax, kv_ax, g_ax, U))
+
+    def step(carry, xs):
+        m_run, l_run, acc = carry
+        kc, vc, c0 = xs
+        s, msk = _scores(qg, kc, c0, chunk, qpos, causal, window, softcap_val)
+        # out-of-range kv padding: mask via positions >= Sk
+        kpos = c0 + jnp.arange(chunk)
+        s = jnp.where((kpos < Sk)[None, None, None, None, :], s, _NEG)
+        s = _c(s, s5)
+        m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p, vc.astype(jnp.float32))
+        acc = _c(acc, s5)
+        return (m_new, l_new, acc), None
+
+    init = (
+        jnp.full((B, Hkv, G, Sq), _NEG, jnp.float32),
+        jnp.zeros((B, Hkv, G, Sq), jnp.float32),
+        jnp.zeros((B, Hkv, G, Sq, D), jnp.float32),
+    )
+    (m_run, l_run, acc), _ = jax.lax.scan(step, init, (ks, vs, starts))
+    l_safe = jnp.maximum(l_run, 1e-30)
+    out5 = acc / l_safe[..., None]
+    lse = m_run + jnp.log(l_safe)                      # (B,Hkv,G,Sq)
+    out = jnp.moveaxis(out5, 3, 1).reshape(B, Sq, Hq, D).astype(q.dtype)
+    return out, (q, k, v, out5, lse)
+
+
+def _flash_bwd(causal, window, softcap_val, chunk, q_offset, batch_axes,
+               kv_ax, g_ax, qseq_ax, res, dout):
+    q, k, v, out5, lse = res
+    qg, ks, vs, starts, chunk, pad, dims = _prep(q, k, v, chunk)
+    B, Sq, Hq, Hkv, G, D, Sk = dims
+    qpos = q_offset + jnp.arange(Sq)
+    scale = D ** -0.5
+    s5, s4, skv = _axes(batch_axes, kv_ax, g_ax, qseq_ax)
+
+    do5 = jnp.moveaxis(
+        dout.astype(jnp.float32).reshape(B, Sq, Hkv, G, D), 1, 3)  # (B,h,g,Sq,D)
+    do5 = _c(do5, s5)
+    delta = _c(jnp.sum(do5 * out5, axis=-1), s4)                    # (B,h,g,Sq)
+    qg5 = _c(jnp.moveaxis(qg, 1, 3), s5)                            # (B,h,g,Sq,D)
+
+    def step(dq_acc, xs):
+        kc, vc, c0 = xs
+        s, s_nomask = _scores(qg, kc, c0, chunk, qpos, causal, window, softcap_val)
+        kpos = c0 + jnp.arange(chunk)
+        s = jnp.where((kpos < Sk)[None, None, None, None, :], s, _NEG)
+        s = _c(s, s5)
+        p = jnp.exp(s - lse[..., None])                              # (B,h,g,Sq,C)
+        dv_c = _c(jnp.einsum("bhgqc,bhgqd->bchd", p, do5), skv)
+        dp = jnp.einsum("bhgqd,bchd->bhgqc", do5, vc.astype(jnp.float32))
+        dz = _c(p * (dp - delta[..., None]), s5)
+        if softcap_val is not None:
+            # s = cap*tanh(z/cap): ds/dz = 1 - (s/cap)^2  (unmasked s: finite)
+            dz = dz * (1.0 - jnp.square(s_nomask / softcap_val))
+        dq_acc = dq_acc + jnp.einsum("bhgqc,bchd->bhgqd", dz,
+                                     kc.astype(jnp.float32))
+        dq_acc = _c(dq_acc, s5)
+        dk_c = _c(jnp.einsum("bhgqc,bhgqd->bchd", dz, qg5), skv)
+        # reduce dk/dv across shards in the STORAGE dtype: the context-
+        # parallel psum of fp32 chunk grads was the single largest
+        # all-reduce on yi-9b (EXPERIMENTS.md §Perf); bf16 grad reduction
+        # is standard practice.
+        return dq_acc, (dk_c.astype(k.dtype), dv_c.astype(v.dtype))
+
+    dq0 = jnp.zeros((B, Hkv, G, Sq, D), jnp.float32)
+    dq5, (dks, dvs) = jax.lax.scan(step, dq0, (ks, vs, starts))
+
+    dq = (jnp.moveaxis(dq5, 3, 1).reshape(B, Sq, Hq, D) * scale).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk + pad, Hkv, D)[:, :Sk].astype(k.dtype)
+    # dk from dz wrt (scaled q · k): q was pre-scaled, so dk needs no extra scale
+    dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk + pad, Hkv, D)[:, :Sk].astype(v.dtype)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(
+    lambda q, k, v, causal, window, softcap_val, chunk, q_offset, batch_axes,
+           kv_ax, g_ax, qseq_ax:
+        _flash_fwd(q, k, v, causal, window, softcap_val, chunk, q_offset,
+                   batch_axes, kv_ax, g_ax, qseq_ax),
+    _flash_bwd,
+)

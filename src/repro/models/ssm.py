@@ -1,0 +1,241 @@
+"""Mamba-2 (SSD — state-space duality) blocks.
+
+The SSD recurrence *is* the paper's setting transplanted to 2024: a gated
+recurrence whose throughput hinges on (a) computing the "gates" (z, x, B, C,
+dt projections) in one fused flight — C1 — and (b) keeping the recurrent
+state near compute across steps — C5.  ``ssd_chunked`` is the pure-JAX
+chunked algorithm (used by dry-runs and CPU smoke); ``repro.kernels.ssd_scan``
+is the Pallas twin with the state resident in VMEM scratch.
+
+Projections are stored as separate weights (w_z/w_x/w_b/w_c/w_dt) rather
+than one fused in_proj so each shards cleanly over the TP axis without
+split-induced reshards; XLA fuses the five matmuls of the same operand back
+into one pass (C1 preserved at the HLO level — verified in the dry-run).
+
+Block layout (Mamba-2, n_groups=1):
+    z = x W_z;  xs = conv(x W_x);  B = conv(x W_b);  C = conv(x W_c);
+    dt = softplus(x W_dt + dt_bias)
+    y  = SSD(xs * dt, -exp(A_log) * dt, B, C) + D ⊙ xs
+    out = (RMSNorm(y * silu(z))) W_out
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+__all__ = [
+    "init_mamba_params",
+    "mamba_block",
+    "mamba_decode_step",
+    "init_mamba_cache",
+    "ssd_chunked",
+]
+
+
+def ssd_chunked(x, a_log, b, c, chunk: int, h0=None):
+    """Chunked SSD, vectorised over batch and heads.
+
+    x: (B,T,H,P); a_log: (B,T,H) (log decay <= 0); b,c: (B,T,H,N).
+    Returns y: (B,T,H,P), h_final: (B,H,P,N).  Matches
+    ``kernels.ref.ssd_chunk_scan_ref`` exactly (tested).
+    """
+    B, T, H, P = x.shape
+    N = b.shape[-1]
+    pad = (-T) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Tp = T + pad
+    nc = Tp // chunk
+
+    # operands stay in the storage dtype (bf16 at scale): the f32 math
+    # happens INSIDE the dots via preferred_element_type — materialised
+    # .astype(f32) copies of (B,T,H,N) tensors double SSD HBM traffic
+    # (EXPERIMENTS.md §Perf, mamba2 hillclimb).
+    cdt = x.dtype
+    xq = x.reshape(B, nc, chunk, H, P)
+    aq = a_log.reshape(B, nc, chunk, H).astype(jnp.float32)
+    bq = b.reshape(B, nc, chunk, H, N)
+    cq = c.reshape(B, nc, chunk, H, N)
+
+    acum = jnp.cumsum(aq, axis=2)                           # (B,nc,Q,H)
+    a_sum = acum[:, :, -1, :]                               # (B,nc,H)
+
+    # intra-chunk (C1: recurrence re-associated into MXU matmuls)
+    seg = acum[:, :, :, None, :] - acum[:, :, None, :, :]   # (B,nc,q,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bnqhk,bnshk->bnqsh", cq, bq,
+                        preferred_element_type=jnp.float32) * L
+    y_intra = jnp.einsum("bnqsh,bnshp->bnqhp", scores.astype(cdt), xq,
+                         preferred_element_type=jnp.float32)
+
+    # per-chunk aggregate state contribution
+    wgt = jnp.exp(a_sum[:, :, None, :] - acum)              # (B,nc,Q,H)
+    chunk_states = jnp.einsum(
+        "bnqhp,bnqhk->bnhpk", xq * wgt[..., None].astype(cdt), bq,
+        preferred_element_type=jnp.float32,
+    )
+
+    # inter-chunk recurrence (the only sequential part: nc steps)
+    h_init = (jnp.zeros((B, H, P, N), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        s_n, a_n = inp                                      # (B,H,P,N), (B,H)
+        h_prev = h
+        h = jnp.exp(a_n)[..., None, None] * h + s_n
+        return h, h_prev
+
+    (h_fin, h_prevs) = jax.lax.scan(
+        step, h_init,
+        (jnp.moveaxis(chunk_states, 1, 0), jnp.moveaxis(a_sum, 1, 0)),
+    )
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum(
+        "bnqhk,bnhpk->bnqhp", cq * jnp.exp(acum)[..., None].astype(cdt),
+        h_prevs.astype(cdt), preferred_element_type=jnp.float32,
+    )
+    y = (y_intra + y_inter).reshape(B, Tp, H, P)[:, :T]
+    return y.astype(x.dtype), h_fin.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_params(key: jax.Array, cfg) -> dict[str, Any]:
+    d, dtype = cfg.d_model, jnp.dtype(cfg.param_dtype)
+    d_in, n, heads = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 7)
+    return {
+        "w_z": dense_init(ks[0], (d, d_in), dtype),
+        "w_x": dense_init(ks[1], (d, d_in), dtype),
+        "w_b": dense_init(ks[2], (d, n), dtype),
+        "w_c": dense_init(ks[3], (d, n), dtype),
+        "w_dt": dense_init(ks[4], (d, heads), dtype),
+        "conv_x": dense_init(ks[5], (k, d_in), dtype, fan_in=k),
+        "conv_xb": jnp.zeros((d_in,), dtype),
+        "conv_bw": jnp.full((k, n), 1.0 / k, dtype),
+        "conv_bb": jnp.zeros((n,), dtype),
+        "conv_cw": jnp.full((k, n), 1.0 / k, dtype),
+        "conv_cb": jnp.zeros((n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, heads)).astype(dtype),
+        "d_skip": jnp.ones((heads,), dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, heads))).astype(dtype),
+        "norm": jnp.zeros((d_in,), dtype),
+        "out_proj": dense_init(ks[6], (d_in, d), dtype),
+    }
+
+
+def _causal_conv(xc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv along time.  xc: (B, T, C); conv_w: (K, C);
+    ``conv_state`` (B, K-1, C) is prepended on the decode path."""
+    k = conv_w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((xc.shape[0], k - 1, xc.shape[-1]), xc.dtype)
+    else:
+        pad = conv_state.astype(xc.dtype)
+    xp = jnp.concatenate([pad, xc], axis=1)
+    out = sum(xp[:, i : i + xc.shape[1], :] * conv_w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out + conv_b), new_state
+
+
+def _project(params, x, cfg, conv_cache=None):
+    """The fused 'gate' flight (C1): five projections of the same operand."""
+    z = x @ params["w_z"]
+    xs_pre = x @ params["w_x"]
+    b_pre = x @ params["w_b"]
+    c_pre = x @ params["w_c"]
+    dt_raw = x @ params["w_dt"]
+    cs = conv_cache or {}
+    xs, st_x = _causal_conv(xs_pre, params["conv_x"], params["conv_xb"], cs.get("x"))
+    bb, st_b = _causal_conv(b_pre, params["conv_bw"], params["conv_bb"], cs.get("b"))
+    cc, st_c = _causal_conv(c_pre, params["conv_cw"], params["conv_cb"], cs.get("c"))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))      # (B,T,H)
+    return z, xs, bb, cc, dt, {"x": st_x, "b": st_b, "c": st_c}
+
+
+def mamba_block(params, x, cfg, cache=None, use_pallas: bool = False):
+    """x: (B, T, d) -> (y (B, T, d), new_cache)."""
+    B, T, _ = x.shape
+    d_in, n, heads, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    z, xs, bb, cc, dt, conv_cache = _project(
+        params, x, cfg, cache.get("conv") if cache else None
+    )
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))                # (H,)
+    a_log_t = a * dt                                                 # (B,T,H)
+
+    xh = xs.reshape(B, T, heads, P)
+    xh_dt = xh * dt[..., None].astype(xh.dtype)
+    bh = jnp.broadcast_to(bb[:, :, None, :], (B, T, heads, n))
+    ch = jnp.broadcast_to(cc[:, :, None, :], (B, T, heads, n))
+
+    h0 = cache.get("ssm") if cache else None
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y, h_fin = kops.ssd_chunk_scan(xh_dt, a_log_t, bh, ch, h0,
+                                       chunk=cfg.ssm_chunk, impl="interpret")
+    else:
+        y, h_fin = ssd_chunked(xh_dt, a_log_t, bh, ch, cfg.ssm_chunk, h0)
+
+    y = y + xh * params["d_skip"].astype(xh.dtype)[None, None, :, None]
+    y = y.reshape(B, T, d_in)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"conv": conv_cache, "ssm": h_fin}
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict[str, Any]:
+    d_in, n = cfg.d_inner, cfg.ssm_state
+    k1 = cfg.ssm_conv - 1
+    return {
+        "conv": {
+            "x": jnp.zeros((batch, k1, d_in), dtype),
+            "b": jnp.zeros((batch, k1, n), dtype),
+            "c": jnp.zeros((batch, k1, n), dtype),
+        },
+        "ssm": jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    }
+
+
+def mamba_decode_step(params, x, cfg, cache):
+    """Single-token state update (O(1) per step — why SSM archs can run
+    long_500k).  x: (B, 1, d)."""
+    B = x.shape[0]
+    d_in, n, heads, P = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    z, xs, bb, cc, dt, conv_cache = _project(params, x, cfg, cache["conv"])
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(a * dt)[:, 0, :]                          # (B,H)
+
+    xh = xs.reshape(B, 1, heads, P)
+    xh_dt = (xh * dt[..., None].astype(xh.dtype))[:, 0]       # (B,H,P)
+    b_t, c_t = bb[:, 0], cc[:, 0]                             # (B,N)
+
+    h = cache["ssm"].astype(jnp.float32)
+    h = decay[..., None, None] * h + (
+        xh_dt.astype(jnp.float32)[..., None] * b_t.astype(jnp.float32)[:, None, None, :]
+    )
+    y = jnp.einsum("bhpn,bn->bhp", h, c_t.astype(jnp.float32))
+    y = y + xh[:, 0].astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[None, :, None]
+
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    out = y @ params["out_proj"]
+    return out, {"conv": conv_cache, "ssm": h.astype(cache["ssm"].dtype)}

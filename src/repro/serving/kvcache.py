@@ -1,0 +1,109 @@
+"""KV/state cache management for serving.
+
+The model layer (models/transformer.init_cache) owns the cache *structure*;
+this module owns its *lifecycle*: allocation with shardings, length
+tracking, and slot reuse for continuous batching.
+
+Sharding policy (``cache_pspecs``):
+  * batch over the DP axes when batch >= dp size (decode_32k),
+  * otherwise sequence-sharded over ``data`` (long_500k, batch=1) — the
+    flash-decoding regime where partial softmaxes combine across shards
+    (GSPMD inserts the small max/sum all-reduces automatically),
+  * KV heads over ``model`` when divisible, else replicated (glm4 kv=2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import RunContext
+
+__all__ = ["cache_pspecs", "cache_shardings", "CacheState"]
+
+
+def _div(n: int, ctx: RunContext, axes) -> bool:
+    if ctx.mesh is None or axes is None:
+        return False
+    axes_t = (axes,) if isinstance(axes, str) else tuple(axes)
+    size = 1
+    for a in axes_t:
+        size *= ctx.mesh.shape[a]
+    return n % size == 0 and size > 1
+
+
+def cache_pspecs(cfg: ModelConfig, batch: int, ctx: RunContext) -> list:
+    """PartitionSpec tree matching ``init_cache`` structure (stacked repeats
+    leading).
+
+    KV layout policy: batch over DP axes when divisible; KV heads over the
+    model axis when divisible, otherwise the SEQUENCE dim shards over the
+    model axis instead (flash-decoding: GSPMD inserts the partial-softmax
+    max/sum all-reduces over the sharded seq dim).  batch=1 long-context
+    cells additionally shard the sequence over ``data``."""
+    dp = ctx.dp_axes
+    batch_ok = _div(batch, ctx, dp)
+    kv_ok = _div(cfg.n_kv_heads, ctx, ctx.tp_axis)
+    seq_axes: list = []
+    if not kv_ok and ctx.tp_axis is not None:
+        seq_axes.append(ctx.tp_axis)          # SP over model instead of KV-TP
+    if not batch_ok:
+        seq_axes.append("data")               # SP for tiny batches (long_500k)
+    seq_spec = tuple(seq_axes) if seq_axes else None
+    kv_ax = ctx.tp_axis if kv_ok else None
+    ssm_head_ax = ctx.tp_axis if _div(cfg.n_ssm_heads or 1, ctx, ctx.tp_axis) else None
+
+    specs = []
+    for spec in cfg.pattern:
+        if spec.mixer == "attn":
+            kv = P(None, dp if batch_ok else None, seq_spec, kv_ax, None)
+            specs.append({"k": kv, "v": kv})
+        elif spec.mixer == "mamba":
+            bax = dp if batch_ok else None
+            specs.append({
+                "conv": {
+                    "x": P(None, bax, None, ctx.tp_axis),
+                    "b": P(None, bax, None, None),
+                    "c": P(None, bax, None, None),
+                },
+                "ssm": P(None, bax, ssm_head_ax, None, None),
+            })
+        else:
+            specs.append({})
+    return specs
+
+
+def cache_shardings(cfg: ModelConfig, batch: int, ctx: RunContext):
+    if ctx.mesh is None:
+        return jax.tree.map(lambda _: None, cache_pspecs(cfg, batch, ctx),
+                            is_leaf=lambda x: isinstance(x, P))
+    return jax.tree.map(lambda s: NamedSharding(ctx.mesh, s),
+                        cache_pspecs(cfg, batch, ctx),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+@dataclasses.dataclass
+class CacheState:
+    """Host-side view of a batched cache: per-slot sequence lengths and
+    free-slot tracking for continuous batching."""
+
+    max_len: int
+    lengths: list[int]
+
+    @classmethod
+    def empty(cls, batch: int, max_len: int) -> "CacheState":
+        return cls(max_len=max_len, lengths=[0] * batch)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, l in enumerate(self.lengths) if l == 0]
+
+    def occupy(self, slot: int, length: int):
+        self.lengths[slot] = length
+
+    def release(self, slot: int):
+        self.lengths[slot] = 0

@@ -1,0 +1,189 @@
+"""Optimizers implemented from scratch in JAX (no optax in this container).
+
+* ``adam`` — the paper's training recipe (§5.1): β1=0.9, β2=0.98, ε=1e-9,
+  lr 0.01, StepLR(step_size=3 epochs, gamma=0.5), MSE loss, 30 epochs.
+* ``adamw`` — decoupled weight decay for the LM substrate.
+* int8 moment quantisation (``moment_dtype="int8"``) — the paper's C4
+  applied to optimizer state: both Adam moments stored as int8 with
+  per-block scales (block 256).  This is what brings kimi-k2 (1T params)
+  training state from 12 bytes/param (fp32 m,v + fp32 master) down to
+  ~4 bytes/param and onto 512 v5e chips — see EXPERIMENTS.md §Dry-run.
+
+All state is a pytree of plain arrays ⇒ pjit shards it with the same rules
+as parameters (FSDP over the data axis).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "OptState",
+    "Optimizer",
+    "adam",
+    "adamw",
+    "clip_by_global_norm",
+    "step_decay_schedule",
+    "cosine_warmup_schedule",
+    "constant_schedule",
+]
+
+_BLOCK = 256  # int8 moment quantisation block size
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class _Q8:
+    """int8 block-quantised moment, SHAPE-PRESERVING: ``q`` has the param's
+    own shape (blocks run along the last dim), ``scale`` replaces the last
+    dim by the block count.  Preserving the dims is what keeps the moment
+    sharded like its parameter — a flat layout forces an unshardable
+    reshape in the optimizer update and replicates terabytes at kimi scale
+    (measured; EXPERIMENTS.md §Perf)."""
+
+    q: jax.Array = dataclasses.field()          # int8, same shape as param
+    scale: jax.Array = dataclasses.field()      # f32, shape[:-1] + (nblocks,)
+    shape: tuple = dataclasses.field(metadata={"static": True}, default=())
+
+
+def _block_size(last: int) -> int:
+    return _BLOCK if last % _BLOCK == 0 else last
+
+
+def _q8_encode(x: jax.Array) -> _Q8:
+    if x.ndim == 0:
+        x = x.reshape(1)
+    last = x.shape[-1]
+    bs = _block_size(last)
+    xb = x.reshape(*x.shape[:-1], last // bs, bs)
+    scale = jnp.maximum(jnp.max(jnp.abs(xb), axis=-1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return _Q8(q=q.reshape(x.shape), scale=scale.astype(jnp.float32),
+               shape=x.shape)
+
+
+def _q8_decode(m: _Q8) -> jax.Array:
+    last = m.shape[-1] if m.shape else 1
+    bs = _block_size(last)
+    qb = m.q.reshape(*m.q.shape[:-1], last // bs, bs)
+    out = (qb.astype(jnp.float32) * m.scale[..., None]).reshape(m.q.shape)
+    return out
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """(init_fn, update_fn) pair; update returns (new_params, new_state)."""
+
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any, jax.Array], tuple[Any, OptState]]
+
+
+def _make_adam(
+    b1: float,
+    b2: float,
+    eps: float,
+    weight_decay: float,
+    moment_dtype: str,
+) -> Optimizer:
+    quantized = moment_dtype == "int8"
+
+    def enc(x):
+        if quantized:
+            return _q8_encode(x)
+        return x.astype(jnp.float32) if moment_dtype == "float32" else x.astype(moment_dtype)
+
+    def dec(m):
+        return _q8_decode(m) if quantized else m.astype(jnp.float32)
+
+    def init(params: Any) -> OptState:
+        zeros = jax.tree.map(lambda p: enc(jnp.zeros(p.shape, jnp.float32)), params)
+        zeros_v = jax.tree.map(lambda p: enc(jnp.zeros(p.shape, jnp.float32)), params)
+        return OptState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros_v)
+
+    def update(grads: Any, state: OptState, params: Any, lr: jax.Array):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        bc1 = 1.0 - b1**t
+        bc2 = 1.0 - b2**t
+
+        is_leaf = (lambda x: isinstance(x, _Q8)) if quantized else None
+
+        def upd(g, m_enc, v_enc, p):
+            g = g.astype(jnp.float32)
+            m = b1 * dec(m_enc) + (1.0 - b1) * g
+            v = b2 * dec(v_enc) + (1.0 - b2) * g * g
+            upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                upd_ = upd_ + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd_).astype(p.dtype)
+            return new_p, enc(m), enc(v)
+
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.m, is_leaf=is_leaf)
+        flat_v = jax.tree.leaves(state.v, is_leaf=is_leaf)
+        flat_p, treedef = jax.tree.flatten(params)
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+        return new_p, OptState(step=step, m=new_m, v=new_v)
+
+    return Optimizer(init=init, update=update)
+
+
+def adam(b1: float = 0.9, b2: float = 0.98, eps: float = 1e-9,
+         moment_dtype: str = "float32") -> Optimizer:
+    """Defaults are the paper's §5.1 settings."""
+    return _make_adam(b1, b2, eps, weight_decay=0.0, moment_dtype=moment_dtype)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype: str = "float32") -> Optimizer:
+    return _make_adam(b1, b2, eps, weight_decay=weight_decay, moment_dtype=moment_dtype)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    factor = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g * factor).astype(g.dtype), grads), gn
+
+
+# -- learning-rate schedules --------------------------------------------------
+
+
+def constant_schedule(lr: float) -> Callable[[jax.Array], jax.Array]:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def step_decay_schedule(lr0: float, step_size: int, gamma: float) -> Callable:
+    """PyTorch StepLR semantics, used by the paper with step_size=3 epochs,
+    gamma=0.5 (``step`` counted in epochs by the traffic trainer)."""
+    def fn(step):
+        k = jnp.floor_divide(jnp.asarray(step, jnp.float32), float(step_size))
+        return jnp.asarray(lr0, jnp.float32) * jnp.power(gamma, k)
+    return fn
+
+
+def cosine_warmup_schedule(lr_peak: float, warmup: int, total: int,
+                           lr_min_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr_peak * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr_peak * (lr_min_frac + (1 - lr_min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return fn

@@ -1,0 +1,39 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests must see the real
+single CPU device; SPMD tests spawn subprocesses with their own flags."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.parallel.sharding import RunContext
+
+
+@pytest.fixture(scope="session")
+def ctx():
+    return RunContext(mesh=None)
+
+
+def make_lm_batch(cfg, batch: int, seq: int, seed: int = 0):
+    """Mode-correct batch for any arch config."""
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "audio_stub":
+        return {
+            "features": jnp.asarray(
+                rng.normal(size=(batch, seq, cfg.d_model)).astype(np.float32)),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)),
+                                  jnp.int32),
+        }
+    if cfg.frontend == "vision_stub":
+        s_text = seq - cfg.n_frontend_tokens
+        return {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, s_text)),
+                                  jnp.int32),
+            "image_embeds": jnp.asarray(
+                rng.normal(size=(batch, cfg.n_frontend_tokens, cfg.d_model))
+                .astype(np.float32)),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, s_text)),
+                                  jnp.int32),
+        }
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, seq)), jnp.int32)
+    return {"tokens": toks, "labels": toks}

@@ -1,0 +1,83 @@
+"""Property-based tests for the fixed-point simulator (paper C4)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fxp import (FxpFormat, dequantize, fxp_add, fxp_matmul,
+                            fxp_mul, quantize, saturate)
+
+FMT = FxpFormat(8, 16)
+
+
+@given(st.integers(min_value=1, max_value=12), st.integers(min_value=8, max_value=24))
+def test_format_invariants(frac, total):
+    if frac >= total:
+        with pytest.raises(ValueError):
+            FxpFormat(frac, total)
+        return
+    fmt = FxpFormat(frac, total)
+    assert fmt.scale == 2.0 ** -frac
+    assert fmt.qmin == -(2 ** (total - 1))
+    assert fmt.qmax == 2 ** (total - 1) - 1
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=32))
+def test_quantize_error_bounded_by_half_lsb(vals):
+    """|dequant(quant(x)) - x| <= lsb/2 for in-range x (paper's PTQ bound)."""
+    x = np.asarray(vals, np.float32)
+    inr = np.clip(x, FMT.min_value, FMT.max_value)
+    q = quantize(inr, FMT)
+    err = np.abs(np.asarray(dequantize(q, FMT)) - inr)
+    assert np.all(err <= FMT.scale / 2 + 1e-7)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.floats(-1e6, 1e6, allow_nan=False))
+def test_quantize_always_saturates_in_range(v):
+    q = quantize(np.float32(v), FMT)
+    assert FMT.qmin <= int(q) <= FMT.qmax
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.floats(-50, 50), st.floats(-50, 50))
+def test_mul_matches_float_within_resolution(a, b):
+    qa, qb = quantize(np.float32(a), FMT), quantize(np.float32(b), FMT)
+    got = float(dequantize(fxp_mul(qa, qb, FMT), FMT))
+    want = np.clip(a * b, FMT.min_value, FMT.max_value)
+    # one rounding shift: error <= lsb (plus input quantisation error)
+    assert abs(got - want) <= FMT.scale * (1 + abs(a) / 2 + abs(b) / 2) + 1e-6
+
+
+def test_matmul_matches_int_reference():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 0.5, (5, 7)).astype(np.float32)
+    b = rng.normal(0, 0.5, (7, 3)).astype(np.float32)
+    bias = rng.normal(0, 0.2, (3,)).astype(np.float32)
+    qa, qb, qbias = quantize(a, FMT), quantize(b, FMT), quantize(bias, FMT)
+    got = np.asarray(fxp_matmul(qa, qb, FMT, qbias))
+    # integer reference with round-half-up shift
+    acc = np.asarray(qa, np.int64) @ np.asarray(qb, np.int64)
+    acc = acc + (np.asarray(qbias, np.int64) << 8)
+    ref = np.clip((acc + 128) >> 8, FMT.qmin, FMT.qmax)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_matmul_close_to_float():
+    rng = np.random.default_rng(1)
+    a = rng.normal(0, 0.3, (4, 21)).astype(np.float32)
+    b = rng.normal(0, 0.3, (21, 20)).astype(np.float32)
+    got = np.asarray(dequantize(fxp_matmul(quantize(a, FMT), quantize(b, FMT), FMT), FMT))
+    err = np.max(np.abs(got - a @ b))
+    assert err < 0.05  # (8,16) at paper-scale reductions
+
+
+def test_saturation_behaviour():
+    big = jnp.asarray([10 ** 9, -(10 ** 9)], jnp.int32)
+    s = saturate(big, FMT)
+    assert int(s[0]) == FMT.qmax and int(s[1]) == FMT.qmin
+    # adding at the rail saturates, does not wrap
+    r = fxp_add(jnp.asarray(FMT.qmax), jnp.asarray(FMT.qmax), FMT)
+    assert int(r) == FMT.qmax

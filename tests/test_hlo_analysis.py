@@ -1,0 +1,97 @@
+"""HLO parser: trip counts, dot flops, traffic conventions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.flops import model_flops, param_count
+from repro.analysis.hlo import analyze_hlo
+from repro.analysis.roofline import RooflineReport
+from repro.configs import get_config
+from repro.configs.base import LM_SHAPES
+
+
+def test_scan_body_flops_multiplied_by_trip_count():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        c, _ = jax.lax.scan(body, x, None, length=8)
+        return c
+
+    x = jnp.zeros((64, 64), jnp.float32)
+    comp = jax.jit(f).lower(x).compile()
+    a = analyze_hlo(comp.as_text())
+    assert a.flops == pytest.approx(8 * 2 * 64 ** 3, rel=0.01)
+    assert 8 in a.while_trip_counts.values()
+    # raw cost_analysis counts the body once — the parser is the fix
+    assert comp.cost_analysis()["flops"] < a.flops / 4
+
+
+def test_nested_scan_trip_counts_compose():
+    def f(x):
+        def outer(c, _):
+            def inner(d, _):
+                return d @ d, None
+            d, _ = jax.lax.scan(inner, c, None, length=3)
+            return d, None
+        c, _ = jax.lax.scan(outer, x, None, length=5)
+        return c
+
+    x = jnp.zeros((32, 32), jnp.float32)
+    a = analyze_hlo(jax.jit(f).lower(x).compile().as_text())
+    assert a.flops == pytest.approx(15 * 2 * 32 ** 3, rel=0.01)
+
+
+def test_unrolled_flops_exact():
+    def f(x, w):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return x
+    x = jnp.zeros((16, 32))
+    w = jnp.zeros((32, 32))
+    a = analyze_hlo(jax.jit(f).lower(x, w).compile().as_text())
+    assert a.flops == pytest.approx(4 * 2 * 16 * 32 * 32, rel=0.01)
+
+
+def test_dus_counts_slice_not_buffer():
+    """A scan stacking small slices must not charge the whole stack/iter."""
+    def f(xs):
+        def body(c, x):
+            return c, x * 2.0
+        _, ys = jax.lax.scan(body, 0.0, xs)
+        return ys
+    xs = jnp.zeros((64, 128, 128))
+    a = analyze_hlo(jax.jit(f).lower(xs).compile().as_text())
+    buffer_bytes = 64 * 128 * 128 * 4
+    # traffic should be O(2 passes over the data), not O(iters * buffer)
+    assert a.traffic_bytes < 6 * buffer_bytes
+
+
+def test_roofline_report_bottleneck_logic():
+    rep = RooflineReport(
+        arch="x", shape="y", mesh="16x16", chips=256,
+        hlo_flops=197e12, hlo_flops_raw=0, hlo_bytes=819e9 * 2.0,
+        hlo_bytes_raw=0, collective_bytes=50e9 * 0.5,
+        collective_breakdown={}, collective_counts={},
+        bytes_per_device=1e9, argument_bytes=0, output_bytes=0, temp_bytes=0,
+        model_flops=197e12 * 256 * 0.5)
+    rep.finalize()
+    assert rep.t_compute == pytest.approx(1.0)
+    assert rep.t_memory == pytest.approx(2.0)
+    assert rep.bottleneck == "memory"
+    assert rep.useful_ratio == pytest.approx(0.5)
+
+
+def test_model_flops_yardsticks():
+    cfg = get_config("glm4-9b")
+    n = param_count(cfg)
+    train = model_flops(cfg, LM_SHAPES["train_4k"])
+    assert train == pytest.approx(6 * n * 4096 * 256, rel=1e-6)
+    dec = model_flops(cfg, LM_SHAPES["decode_32k"])
+    assert dec == pytest.approx(2 * n * 128, rel=1e-6)
+    # MoE: active, not total
+    kimi = get_config("kimi-k2-1t-a32b")
+    from repro.analysis.flops import active_param_count
+    assert model_flops(kimi, LM_SHAPES["train_4k"]) == pytest.approx(
+        6 * active_param_count(kimi) * 4096 * 256, rel=1e-6)

@@ -1,0 +1,129 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.lut import LutSpec, build_table
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=np.float32, scale=1.0):
+    return jnp.asarray((RNG.normal(size=shape) * scale).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# fused LSTM step
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,f,h", [(1, 3, 4), (8, 24, 20), (5, 21, 20),
+                                   (16, 40, 33), (128, 64, 128), (130, 48, 129)])
+@pytest.mark.parametrize("dtype", [np.float32])
+def test_lstm_step_sweep(b, f, h, dtype):
+    xh = _rand((b, f), dtype)
+    w = _rand((4, f, h), dtype, 0.2)
+    bias = _rand((4, h), dtype, 0.1)
+    c = _rand((b, h), dtype)
+    h1, c1 = ops.lstm_step(xh, w, bias, c, impl="ref")
+    h2, c2 = ops.lstm_step(xh, w, bias, c, impl="interpret", block_b=64, block_h=64)
+    np.testing.assert_allclose(h1, h2, atol=2e-6)
+    np.testing.assert_allclose(c1, c2, atol=2e-6)
+
+
+@pytest.mark.parametrize("b,t,n_in,h", [(2, 6, 1, 20), (4, 12, 3, 16), (9, 7, 2, 33)])
+def test_lstm_sequence_sweep(b, t, n_in, h):
+    xs = _rand((b, t, n_in))
+    w = _rand((4, n_in + h, h), scale=0.2)
+    bias = _rand((4, h), scale=0.1)
+    h0 = jnp.zeros((b, h))
+    c0 = jnp.zeros((b, h))
+    r1 = ops.lstm_sequence(xs, w, bias, h0, c0, impl="ref")
+    r2 = ops.lstm_sequence(xs, w, bias, h0, c0, impl="interpret", block_b=4)
+    np.testing.assert_allclose(r1[0], r2[0], atol=5e-6)
+    np.testing.assert_allclose(r1[1], r2[1], atol=5e-6)
+
+
+# ---------------------------------------------------------------------------
+# LUT activation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn", ["sigmoid", "tanh"])
+@pytest.mark.parametrize("depth", [64, 256])
+@pytest.mark.parametrize("shape", [(7,), (3, 50), (2, 5, 130)])
+@pytest.mark.parametrize("mxu", [True, False])
+def test_lut_act_sweep(fn, depth, shape, mxu):
+    spec = LutSpec(fn, depth)
+    table = build_table(spec)
+    lo, hi = spec.bounds
+    x = _rand(shape, scale=4.0)
+    y1 = ops.lut_act(x, table, lo, hi, impl="ref")
+    y2 = ops.lut_act(x, table, lo, hi, impl="interpret", mxu_onehot=mxu,
+                     block_rows=8)
+    np.testing.assert_allclose(y1, y2, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fixed-point matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(1, 4, 3), (9, 21, 17), (64, 32, 64),
+                                   (130, 21, 20)])
+@pytest.mark.parametrize("frac,total", [(8, 16), (4, 8), (12, 16)])
+def test_fxp_matmul_sweep(m, k, n, frac, total):
+    hi = 2 ** (total - 2)
+    aq = jnp.asarray(RNG.integers(-hi, hi, size=(m, k)), jnp.int32)
+    bq = jnp.asarray(RNG.integers(-hi, hi, size=(k, n)), jnp.int32)
+    bias = jnp.asarray(RNG.integers(-hi // 2, hi // 2, size=(n,)), jnp.int32)
+    o1 = ops.fxp_matmul(aq, bq, bias, frac_bits=frac, total_bits=total, impl="ref")
+    o2 = ops.fxp_matmul(aq, bq, bias, frac_bits=frac, total_bits=total,
+                        impl="interpret", block_m=32, block_n=32)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+# ---------------------------------------------------------------------------
+# SSD chunked scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,p,n,chunk", [
+    (1, 8, 1, 4, 4, 4), (2, 37, 3, 8, 16, 8), (2, 64, 2, 16, 8, 16),
+    (1, 100, 4, 8, 8, 32),
+])
+def test_ssd_scan_sweep(b, t, h, p, n, chunk):
+    x = _rand((b, t, h, p))
+    a_log = -jnp.abs(_rand((b, t, h), scale=0.3))
+    bb = _rand((b, t, h, n), scale=0.3)
+    cc = _rand((b, t, h, n), scale=0.3)
+    y1, h1 = ops.ssd_chunk_scan(x, a_log, bb, cc, impl="ref")
+    y2, h2 = ops.ssd_chunk_scan(x, a_log, bb, cc, chunk=chunk, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)
+
+
+def test_ssd_scan_with_initial_state():
+    b, t, h, p, n = 2, 16, 2, 4, 8
+    x = _rand((b, t, h, p))
+    a_log = -jnp.abs(_rand((b, t, h), scale=0.2))
+    bb = _rand((b, t, h, n), scale=0.3)
+    cc = _rand((b, t, h, n), scale=0.3)
+    h0 = _rand((b, h, p, n), scale=0.5)
+    y1, hf1 = ops.ssd_chunk_scan(x, a_log, bb, cc, h0, impl="ref")
+    y2, hf2 = ops.ssd_chunk_scan(x, a_log, bb, cc, h0, chunk=8, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(hf1), np.asarray(hf2), atol=2e-5)
+
+
+def test_ssd_chunked_pure_jax_matches_ref():
+    """models/ssm.ssd_chunked (the dry-run path) against the oracle too."""
+    from repro.models.ssm import ssd_chunked
+    b, t, h, p, n = 2, 50, 3, 8, 16
+    x = _rand((b, t, h, p))
+    a_log = -jnp.abs(_rand((b, t, h), scale=0.3))
+    bb = _rand((b, t, h, n), scale=0.3)
+    cc = _rand((b, t, h, n), scale=0.3)
+    y1, h1 = ref.ssd_chunk_scan_ref(x, a_log, bb, cc, 16)
+    y2, h2 = ssd_chunked(x, a_log, bb, cc, 16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5)

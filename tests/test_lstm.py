@@ -1,0 +1,119 @@
+"""LSTM cell tests: C1+C2 equivalence, gradients, quantised cell, properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fxp import FxpFormat, dequantize, quantize
+from repro.core.lstm import (LSTMParams, init_lstm_params, lstm_cell_fused,
+                             lstm_cell_fxp, lstm_cell_sequential, lstm_layer,
+                             lstm_layer_fxp, split_gate_params)
+from repro.core.lut import make_lut_pair
+
+
+def _setup(key=0, b=3, n_in=2, n_h=20):
+    k = jax.random.PRNGKey(key)
+    p = init_lstm_params(k, n_in, n_h)
+    ks = jax.random.split(k, 3)
+    x = jax.random.normal(ks[0], (b, n_in))
+    h = jax.random.normal(ks[1], (b, n_h)) * 0.5
+    c = jax.random.normal(ks[2], (b, n_h)) * 0.5
+    return p, x, h, c
+
+
+def test_fused_equals_sequential():
+    """The paper's optimisation C1 is a pure reschedule: bit-for-bit the
+    same math as the sequential baseline."""
+    p, x, h, c = _setup()
+    h1, c1 = lstm_cell_sequential(p, x, h, c)
+    h2, c2 = lstm_cell_fused(p, x, h, c)
+    np.testing.assert_allclose(h1, h2, atol=1e-6)
+    np.testing.assert_allclose(c1, c2, atol=1e-6)
+
+
+def test_gradients_match_between_implementations():
+    p, x, h, c = _setup()
+
+    def loss(fn, p):
+        hh, cc = fn(p, x, h, c)
+        return jnp.sum(hh ** 2) + jnp.sum(cc ** 2)
+
+    g1 = jax.grad(lambda p: loss(lstm_cell_sequential, p))(p)
+    g2 = jax.grad(lambda p: loss(lstm_cell_fused, p))(p)
+    np.testing.assert_allclose(g1.w, g2.w, atol=1e-5)
+    np.testing.assert_allclose(g1.b, g2.b, atol=1e-5)
+
+
+def test_split_gate_params_roundtrip():
+    p, *_ = _setup()
+    gates = split_gate_params(p)
+    w_re = jnp.concatenate([gates[g][0] for g in ("i", "f", "g", "o")], axis=1)
+    np.testing.assert_array_equal(w_re, p.w)
+
+
+def test_forget_bias_initialised_to_one():
+    p = init_lstm_params(jax.random.PRNGKey(0), 1, 20)
+    np.testing.assert_array_equal(p.b[20:40], jnp.ones(20))
+    assert float(jnp.sum(jnp.abs(p.b[:20]))) == 0.0
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 1000))
+def test_cell_state_bounds(seed):
+    """|h| <= 1 always (o*tanh); |C_t| grows at most by 1 per step."""
+    p, x, h, c = _setup(seed % 7)
+    h2, c2 = lstm_cell_fused(p, x, h, c)
+    assert float(jnp.max(jnp.abs(h2))) <= 1.0 + 1e-6
+    assert float(jnp.max(jnp.abs(c2))) <= float(jnp.max(jnp.abs(c))) + 1.0 + 1e-6
+
+
+def test_layer_scan_equals_manual_loop():
+    p, _, h, c = _setup()
+    xs = jax.random.normal(jax.random.PRNGKey(9), (3, 6, 2))
+    hs, cs = lstm_layer(p, xs)
+    hm = jnp.zeros_like(h)
+    cm = jnp.zeros_like(c)
+    for t in range(6):
+        hm, cm = lstm_cell_fused(p, xs[:, t], hm, cm)
+    np.testing.assert_allclose(hs, hm, atol=1e-6)
+    np.testing.assert_allclose(cs, cm, atol=1e-6)
+
+
+def test_fxp_cell_tracks_float_cell():
+    """(8,16) PTQ cell stays within quantisation-scale error of float."""
+    fmt = FxpFormat(8, 16)
+    p, x, h, c = _setup(b=4)
+    qp = LSTMParams(w=quantize(p.w, fmt), b=quantize(p.b, fmt))
+    qh, qc = lstm_cell_fxp(qp, quantize(x, fmt), quantize(h, fmt),
+                           quantize(c, fmt), fmt, luts=None)
+    h2, c2 = lstm_cell_fused(p, x, h, c)
+    assert float(jnp.max(jnp.abs(dequantize(qh, fmt) - h2))) < 0.05
+    assert float(jnp.max(jnp.abs(dequantize(qc, fmt) - c2))) < 0.05
+
+
+def test_fxp_layer_with_luts_close_to_float():
+    fmt = FxpFormat(8, 16)
+    p, _, _, _ = _setup()
+    xs = jax.random.normal(jax.random.PRNGKey(5), (4, 6, 2)) * 0.5
+    qp = LSTMParams(w=quantize(p.w, fmt), b=quantize(p.b, fmt))
+    qh, _ = lstm_layer_fxp(qp, quantize(xs, fmt), fmt, make_lut_pair(256))
+    hf, _ = lstm_layer(p, xs)
+    err = float(jnp.max(jnp.abs(dequantize(qh, fmt) - hf)))
+    assert err < 0.1
+
+
+@pytest.mark.parametrize("depth,worse_depth", [(256, 64)])
+def test_lut_depth_impacts_cell_error_direction(depth, worse_depth):
+    """Paper Table 1 at the cell level: deeper LUT -> closer to float."""
+    fmt = FxpFormat(8, 16)
+    p, _, _, _ = _setup()
+    xs = jax.random.normal(jax.random.PRNGKey(5), (8, 6, 2)) * 0.5
+    qp = LSTMParams(w=quantize(p.w, fmt), b=quantize(p.b, fmt))
+    hf, _ = lstm_layer(p, xs)
+    errs = {}
+    for d in (depth, worse_depth):
+        qh, _ = lstm_layer_fxp(qp, quantize(xs, fmt), fmt, make_lut_pair(d))
+        errs[d] = float(jnp.mean(jnp.square(dequantize(qh, fmt) - hf)))
+    assert errs[depth] < errs[worse_depth]

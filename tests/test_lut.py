@@ -1,0 +1,58 @@
+"""LUT activation tests (paper C3): error bounds and Table-1 direction."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lut import (DEFAULT_RANGES, LutSpec, build_table, lut_apply,
+                            lut_sigmoid, lut_tanh, max_table_error)
+
+
+@pytest.mark.parametrize("fn", ["sigmoid", "tanh"])
+@pytest.mark.parametrize("depth", [64, 128, 256])
+def test_error_bounded_by_bin_lipschitz(fn, depth):
+    """Midpoint sampling: |err| <= L * step/2 + tail clamp error; sigmoid and
+    tanh have L<=1/4 and L<=1."""
+    spec = LutSpec(fn, depth)
+    lip = 0.25 if fn == "sigmoid" else 1.0
+    bound = lip * spec.step / 2 + 2e-3
+    assert max_table_error(spec) <= bound
+
+
+def test_deeper_tables_are_monotonically_better():
+    """Paper Table 1: MSE decreases with depth — the primitive property is
+    that the max table error decreases."""
+    for fn in ("sigmoid", "tanh"):
+        errs = [max_table_error(LutSpec(fn, d)) for d in (64, 128, 256, 512)]
+        assert all(a > b for a, b in zip(errs, errs[1:]))
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.floats(-50, 50, allow_nan=False))
+def test_out_of_range_clamps_to_asymptote(x):
+    y = float(lut_sigmoid(np.float32(x), 256))
+    assert -1e-3 <= y <= 1 + 1e-3
+    t = float(lut_tanh(np.float32(x), 256))
+    assert -1 - 1e-3 <= t <= 1 + 1e-3
+
+
+def test_shape_preserved_and_monotone_inputs():
+    x = np.linspace(-6, 6, 77).reshape(7, 11).astype(np.float32)
+    y = np.asarray(lut_sigmoid(x, 256))
+    assert y.shape == x.shape
+    flat = y.reshape(-1)[np.argsort(x.reshape(-1))]
+    assert np.all(np.diff(flat) >= -1e-6)  # monotone non-decreasing
+
+
+def test_table_is_shared_single_instance():
+    """The paper instantiates ONE table per function; our builder is
+    deterministic so all consumers share identical tables."""
+    t1 = np.asarray(build_table(LutSpec("sigmoid", 256)))
+    t2 = np.asarray(build_table(LutSpec("sigmoid", 256)))
+    np.testing.assert_array_equal(t1, t2)
+
+
+def test_depth256_close_to_full_precision():
+    """Paper: depth 256 recovers full-precision MSE within noise."""
+    assert max_table_error(LutSpec("sigmoid", 256)) < 0.01
+    assert max_table_error(LutSpec("tanh", 256)) < 0.02

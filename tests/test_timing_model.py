@@ -1,0 +1,56 @@
+"""Paper §5.4 / Table 3 numbers must fall out of the timing model exactly."""
+
+import pytest
+
+from repro.core import timing_model as tm
+
+
+def test_paper_cycle_counts():
+    s = tm.PAPER_MODEL
+    assert tm.lstm_layer_cycles(s) == 5292          # Eq. (5.2)
+    assert tm.dense_cycles(s) == 40                 # Eq. (5.3)
+    assert tm.total_cycles(s) == 5332               # paper: n_total = 5332
+
+
+def test_paper_latency_and_throughput():
+    s = tm.PAPER_MODEL
+    assert tm.model_time_s(s, 100e6) == pytest.approx(53.32e-6)   # 53.32 us
+    assert tm.inferences_per_second(s, 100e6) == pytest.approx(18754.7, rel=1e-3)
+
+
+def test_parallel_speedup_matches_fig3_fig5():
+    br = tm.recursion_breakdown(tm.PAPER_MODEL)
+    # paper: gates are 97.1 % of a sequential recursion; 4.1x speedup;
+    # our analytic model reproduces both to within a few percent
+    assert br["gate_fraction_sequential"] == pytest.approx(0.971, abs=0.01)
+    assert br["speedup"] == pytest.approx(4.1, abs=0.1)
+    # paper measures 860 cycles/recursion; Eq-5.2 model gives 882
+    assert br["parallel_cycles"] == 882
+
+
+def test_energy_per_inference_matches_paper():
+    # measured: 57.25 us at 71 mW -> 4.1 uJ (paper §5.5)
+    e = tm.energy_per_inference_uj(71.0, 57.25e-6)
+    assert e == pytest.approx(4.1, abs=0.1)
+    # estimated: 53.32 us -> 3.7-3.8 uJ
+    e2 = tm.energy_per_inference_uj(70.0, 53.32e-6)
+    assert 3.6 < e2 < 3.9
+
+
+def test_throughput_gops_matches_table3():
+    s = tm.PAPER_MODEL
+    # paper Table 3: 0.363 GOP/s at the measured 17534 inf/s
+    gops = tm.throughput_gops(s, 17534)
+    assert gops == pytest.approx(0.363, rel=0.05)
+    eff = tm.energy_efficiency_gopj(gops, 71.0)
+    assert eff == pytest.approx(5.33, rel=0.06)
+
+
+def test_speedup_vs_state_of_the_art():
+    ours = tm.STATE_OF_THE_ART["this_work"]
+    eciton = tm.STATE_OF_THE_ART["eciton_fpl21"]
+    eeg = tm.STATE_OF_THE_ART["eeg_isqed20"]
+    assert ours["throughput_gops"] / eciton["throughput_gops"] == pytest.approx(5.4, abs=0.1)
+    assert ours["throughput_gops"] / eeg["throughput_gops"] == pytest.approx(6.6, abs=0.1)
+    assert ours["efficiency_gopj"] / eeg["efficiency_gopj"] == pytest.approx(10.66, abs=0.1)
+    assert ours["efficiency_gopj"] / eciton["efficiency_gopj"] == pytest.approx(1.37, abs=0.03)

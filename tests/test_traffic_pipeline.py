@@ -1,0 +1,74 @@
+"""End-to-end traffic pipeline: data properties, training convergence, and
+the paper's PTQ experiment trends (Fig. 6 / Table 1 directions)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fxp import FxpFormat
+from repro.core.quantize import quantize_lstm_model, quantized_lstm_forward
+from repro.data.traffic import (PEMS_TOTAL_POINTS, make_pems_like_series,
+                                make_traffic_dataset, make_windows, normalize)
+from repro.models.lstm_model import evaluate_mse, train_traffic_model
+
+
+@pytest.fixture(scope="module")
+def trained():
+    data = make_traffic_dataset(seed=0)
+    params, history = train_traffic_model(data, epochs=8)
+    return data, params, history
+
+
+def test_series_shape_and_stats():
+    s = make_pems_like_series(seed=0)
+    assert len(s) == PEMS_TOTAL_POINTS == 8064        # paper: 4 weeks @ 5 min
+    assert 3.0 <= s.min() and s.max() <= 80.0         # freeway speeds (mph)
+    # rush-hour structure: weekday midday mean < overnight mean
+    day = s[: 288 * 5].reshape(5, 288)
+    assert day[:, 96:120].mean() < day[:, 12:48].mean()
+
+
+def test_windowing():
+    s = np.arange(20, dtype=np.float64)
+    x, y = make_windows(s, n_seq=6)
+    assert x.shape == (14, 6, 1) and y.shape == (14, 1)
+    np.testing.assert_array_equal(x[0, :, 0], np.arange(6))
+    assert y[0, 0] == 6
+
+
+def test_split_is_chronological_3_to_1():
+    data = make_traffic_dataset(seed=0)
+    assert abs(data.n_train / (data.n_train + data.n_test) - 0.75) < 0.01
+
+
+def test_training_converges(trained):
+    data, params, history = trained
+    # epoch-0 mean already includes most of the convergence (batch-1 SGD);
+    # require further improvement plus a strong absolute bound
+    assert history[-1] < history[0]
+    assert evaluate_mse(params, data.x_test, data.y_test) < 0.005  # [0,1] units
+
+
+def test_fig6_trend_monotone_then_plateau(trained):
+    data, params, _ = trained
+    xs, ys = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    mses = {}
+    for fb in (4, 6, 8, 12):
+        qm = quantize_lstm_model(params, FxpFormat(fb, 16), None)
+        mses[fb] = float(jnp.mean((quantized_lstm_forward(qm, xs) - ys) ** 2))
+    assert mses[4] > mses[6] > mses[8] * 0.999          # improves to 8
+    assert mses[8] < 1.15 * mses[12]                    # plateau at 8 (paper)
+
+
+def test_table1_trend_lut_depth(trained):
+    data, params, _ = trained
+    xs, ys = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    fmt = FxpFormat(8, 16)
+    mses = {}
+    for depth in (64, 128, 256):
+        qm = quantize_lstm_model(params, fmt, depth)
+        mses[depth] = float(jnp.mean((quantized_lstm_forward(qm, xs) - ys) ** 2))
+    qm0 = quantize_lstm_model(params, fmt, None)
+    fp_act = float(jnp.mean((quantized_lstm_forward(qm0, xs) - ys) ** 2))
+    assert mses[64] > mses[128] > mses[256]             # paper Table 1 direction
+    assert mses[256] < 1.25 * fp_act                    # 256 ~ full precision
