@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timeit
-from repro.core.lut import LutSpec, build_table
+from repro.core import timing_model as tm
+from repro.core.lut import LutSpec, build_table, make_lut_pair
 from repro.kernels import ref
 
 RNG = np.random.default_rng(0)
@@ -30,6 +31,25 @@ def run():
         flops = 2 * b * f * 4 * h
         rows.append({"name": f"kernel/lstm_step_{tag}", "us_per_call": round(us, 1),
                      "derived": f"gflops_host={flops/us/1e3:.2f}"})
+
+    # fused fxp sequence (C1–C5) at paper scale and at a TPU-tile scale;
+    # ref-path wall time + the analytic cycle model of the fused kernel.
+    luts = make_lut_pair(256)
+    (sig_t, sig_s), (tanh_t, tanh_s) = luts["sigmoid"], luts["tanh"]
+    for b, n_in, h, t, tag in [(1, 1, 20, 24, "paper"), (128, 8, 128, 24, "tile")]:
+        qxs = jnp.asarray(RNG.integers(-4096, 4096, (b, t, n_in)), jnp.int32)
+        qw = jnp.asarray(RNG.integers(-1024, 1024, (n_in + h, 4 * h)), jnp.int32)
+        qb = jnp.asarray(RNG.integers(-512, 512, (4 * h,)), jnp.int32)
+        fn = jax.jit(lambda x, w, bb: ref.lstm_sequence_fxp_ref(
+            x, w, bb, None, None, sig_t, tanh_t,
+            sig_bounds=sig_s.bounds, tanh_bounds=tanh_s.bounds))
+        us = timeit(fn, qxs, qw, qb, n=5)
+        shape = tm.LstmModelShape(n_seq=t, n_i=n_in, n_h=h, n_f=h, n_o=1)
+        cyc = tm.fused_fxp_sequence_cycles(shape)
+        rows.append({"name": f"kernel/lstm_seq_fxp_{tag}", "us_per_call": round(us, 1),
+                     "derived": f"(8;16) LUT256 B{b} T{t} H{h}; "
+                                f"model_cycles={cyc} "
+                                f"({tm.fused_fxp_sequence_inferences_per_second(shape):.0f} inf/s @100MHz)"})
 
     spec = LutSpec("sigmoid", 256)
     table = build_table(spec)

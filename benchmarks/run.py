@@ -1,12 +1,28 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (plus a human table to stderr).
+
+``--only TAG`` runs a single module (e.g. ``--only kernels``); ``--json PATH``
+appends this run's rows to a JSON perf trajectory (a list of runs, newest
+last) so regressions are diffable across PRs:
+
+    PYTHONPATH=src:. python benchmarks/run.py --only kernels --json BENCH_kernels.json
 """
 
+import argparse
+import json
+import os
 import sys
+import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="run a single module by tag")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append rows to a JSON perf-trajectory file")
+    args = ap.parse_args(argv)
+
     from benchmarks import (fig6_frac_bits, fig35_breakdown, kernel_bench,
                             roofline_report, table1_lut_depth,
                             table2_resources, table3_throughput)
@@ -20,17 +36,51 @@ def main() -> None:
         ("kernels", kernel_bench),
         ("roofline", roofline_report),
     ]
+    if args.only is not None:
+        modules = [(tag, mod) for tag, mod in modules if tag == args.only]
+        if not modules:
+            sys.exit(f"unknown --only tag {args.only!r}")
+
     print("name,us_per_call,derived")
+    all_rows = []
     failures = 0
     for tag, mod in modules:
         try:
             for row in mod.run():
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']},{derived}")
+                all_rows.append({"name": row["name"],
+                                 "us_per_call": row["us_per_call"],
+                                 "derived": derived})
         except Exception as e:  # keep the harness running
             failures += 1
             print(f"{tag}/ERROR,0,{type(e).__name__}: {str(e)[:120]}".replace(",", ";"))
             print(f"[bench] {tag} failed: {e}", file=sys.stderr)
+
+    if args.json:
+        history = []
+        if os.path.exists(args.json):
+            try:
+                with open(args.json) as f:
+                    history = json.load(f)
+                if not isinstance(history, list):
+                    print(f"[bench] ignoring non-list {args.json}", file=sys.stderr)
+                    history = []
+            except (json.JSONDecodeError, OSError) as e:
+                print(f"[bench] ignoring unreadable {args.json}: {e}", file=sys.stderr)
+                history = []
+        history.append({
+            "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            "only": args.only,
+            "rows": all_rows,
+        })
+        # write-to-temp + rename so an interrupted run can't truncate history
+        tmp = f"{args.json}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(history, f, indent=1)
+        os.replace(tmp, args.json)
+        print(f"[bench] appended {len(all_rows)} rows to {args.json}", file=sys.stderr)
+
     if failures:
         sys.exit(1)
 

@@ -43,13 +43,23 @@ def run():
                        f"eff_ratio={ours['efficiency_gopj']/oth['efficiency_gopj']:.2f}x",
         })
 
-    # reference: actual JAX fused-cell throughput on this host (batched)
+    # modelled entry for the fused fxp sequence kernel (C1–C5 in one pass):
+    # with zero setup cycles it achieves Eq. 5.2 exactly — the point of the
+    # paper's design, and of lstm_sequence_fxp_pallas on TPU.
+    fused_inf_s = tm.fused_fxp_sequence_inferences_per_second(s)
+    rows.append({"name": "table3/fused_fxp_seq_model",
+                 "us_per_call": (tm.fused_fxp_sequence_cycles(s) + tm.dense_cycles(s)) / 100.0,
+                 "derived": f"inf_per_s={fused_inf_s:.0f} (== Eq.5.2 path; "
+                            "setup amortised; state resident)"})
+
+    # reference: actual JAX throughput on this host (batched) through the
+    # unified dispatcher — the float fused backend.
     data, params, _, _ = trained_traffic_model()
     xs = jnp.asarray(data.x_test[:1024])
-    fwd = jax.jit(lambda p, x: traffic_forward(p, x))
+    fwd = jax.jit(lambda p, x: traffic_forward(p, x, backend="fused"))
     us = timeit(fwd, params, xs, n=3)
     rows.append({"name": "table3/jax_cpu_batched_reference",
                  "us_per_call": round(us, 1),
                  "derived": f"inf_per_s_host={1024 / (us / 1e6):.0f} (batch 1024, "
-                            "not an FPGA claim)"})
+                            "backend=fused, not an FPGA claim)"})
     return rows

@@ -33,6 +33,13 @@ def main():
     q_mse = float(jnp.mean((pred - jnp.asarray(data.y_test)) ** 2))
     print(f"   quantised test MSE {q_mse:.5f} ({q_mse / fp_mse:.2f}x float)")
 
+    print("3b) same datapath through the fused Pallas sequence kernel "
+          "(backend='pallas_fxp': C1-C5 in one kernel, O(1) HBM traffic)")
+    p_fused = quantized_lstm_forward(qmodel, jnp.asarray(data.x_test[:8]),
+                                     backend="pallas_fxp")
+    assert jnp.array_equal(pred[:8], p_fused), "fused kernel must be bit-exact"
+    print("   bit-exact with the scan simulator on 8 test windows: OK")
+
     print("4) timing model (paper Eq. 5.1-5.3) on the XC7S15 @ 100 MHz")
     s = CONFIG.shape
     print(f"   n_total={tm.total_cycles(s)} cycles -> "

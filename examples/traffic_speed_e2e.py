@@ -11,6 +11,7 @@ reports throughput — the TPU-scale restatement of Table 3.
 """
 
 import argparse
+import functools
 import time
 
 import jax
@@ -29,6 +30,9 @@ def main(argv=None):
     ap.add_argument("--sensors", type=int, default=512, help="full PeMS = 11160")
     ap.add_argument("--ticks", type=int, default=16, help="5-min steps to serve")
     ap.add_argument("--epochs", type=int, default=12)
+    ap.add_argument("--backend", choices=["fxp", "pallas_fxp"], default="fxp",
+                    help="quantised LSTM datapath: jnp scan simulator or the "
+                         "fused full-sequence Pallas kernel (bit-identical)")
     args = ap.parse_args(argv)
 
     # --- train on one sensor (paper) ---------------------------------------
@@ -45,10 +49,11 @@ def main(argv=None):
     qmodel = quantize_lstm_model(params, FxpFormat(8, 16), 256)
 
     # --- fleet serving -------------------------------------------------------
-    print(f"serving {args.sensors} sensors (windows of 6 x 5-min points)")
+    print(f"serving {args.sensors} sensors (windows of 6 x 5-min points) "
+          f"via backend={args.backend!r}")
     fleet = np.stack([normalize(make_pems_like_series(seed=s))[0]
                       for s in range(args.sensors)])          # (N, 8064)
-    serve = jax.jit(quantized_lstm_forward)
+    serve = jax.jit(functools.partial(quantized_lstm_forward, backend=args.backend))
 
     total = 0
     t0 = time.time()

@@ -1,0 +1,5 @@
+#!/usr/bin/env sh
+# Tier-1 verify (ROADMAP.md): the whole suite, stop at first failure.
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q

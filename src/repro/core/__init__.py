@@ -5,11 +5,14 @@ from repro.core.fxp import FxpFormat, quantize, dequantize, fxp_matmul  # noqa: 
 from repro.core.lut import LutSpec, build_table, lut_apply, lut_sigmoid, lut_tanh  # noqa: F401
 from repro.core.lstm import (  # noqa: F401
     LSTMParams,
+    LSTM_BACKENDS,
     init_lstm_params,
     lstm_cell_sequential,
     lstm_cell_fused,
     lstm_cell_fxp,
     lstm_layer,
+    lstm_layer_fxp,
+    lstm_forward,
 )
 from repro.core.quantize import quantize_lstm_model, quantized_lstm_forward  # noqa: F401
 from repro.core import timing_model  # noqa: F401

@@ -25,6 +25,44 @@ Three functionally-identical cell implementations live here:
 
 Gate order everywhere is ``i, f, g, o`` along the stacked ``4*n_h`` axis.
 Weights act on ``[x_t, h_{t-1}]`` (input features first, then hidden).
+
+Backend matrix
+--------------
+
+``lstm_forward(params, xs, backend=...)`` is the single entry point every
+workload (models, examples, benchmarks) selects a datapath through.  The six
+backends, what executes them, and which oracle each is exact against:
+
+======================  ==============================  =========================
+backend                 executes                        exactness contract
+======================  ==============================  =========================
+``"sequential"``        4 separate gate mat-vecs,       numerical oracle for the
+                        ``lax.scan`` over t             float path (Fig. 3
+                                                        baseline schedule)
+``"fused"``             1 stacked matmul/step (C1+C2),  allclose to sequential
+                        ``lax.scan`` over t             (same float ops, fused)
+``"pallas"``            ``lstm_step_pallas`` per step   allclose to ``"fused"``;
+                        inside ``lax.scan`` (per-step   per-step HBM round-trip —
+                        HBM traffic: the bottleneck)    kept as the profiling foil
+``"pallas_seq"``        ``lstm_sequence_pallas`` — one  allclose to ``"fused"``
+                        kernel, weights+state in VMEM   (``ref.lstm_sequence_ref``)
+                        for all n_seq steps (C5)
+``"fxp"``               ``lstm_layer_fxp`` — bit-level  THE bitstream spec:
+                        ``(x, y)`` simulator,           quantised arithmetic,
+                        ``lax.scan`` over t             LUT activations
+``"pallas_fxp"``        ``lstm_sequence_fxp_pallas`` —  *integer-equal* to
+                        C1–C5 in one kernel, int32      ``"fxp"`` (and to
+                        h/c resident in VMEM            ``ref.lstm_sequence_fxp_ref``)
+======================  ==============================  =========================
+
+When to use which: train with ``"fused"`` (differentiable, fast on any
+backend); validate quantisation with ``"fxp"`` (the readable spec); serve the
+quantised model with ``"pallas_fxp"`` (the paper's actual measured datapath —
+throughput path, O(1) HBM traffic in sequence length); use ``"sequential"``
+and ``"pallas"`` only as baselines/foils when reproducing the Fig. 3/Fig. 5
+bottleneck story.  Float backends take float ``xs``; fxp backends take int32
+``xs`` already quantised to ``fmt`` (plus optional ``luts`` from
+``repro.core.lut.make_lut_pair``).
 """
 
 from __future__ import annotations
@@ -48,6 +86,8 @@ __all__ = [
     "lstm_cell_fxp",
     "lstm_layer",
     "lstm_layer_fxp",
+    "lstm_forward",
+    "LSTM_BACKENDS",
 ]
 
 GATE_ORDER = ("i", "f", "g", "o")
@@ -252,20 +292,222 @@ def lstm_layer_fxp(
     qxs: jax.Array,
     fmt: FxpFormat,
     luts: dict | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    qh0: jax.Array | None = None,
+    qc0: jax.Array | None = None,
+    return_sequence: bool = False,
+):
     """Quantised layer scan: int32 state carried step to step (C5: the FPGA
     keeps h/C in the shared BRAM between recursions — here they stay in
     registers/VMEM across the scan)."""
     n_h = qparams.hidden_size
     batch_shape = qxs.shape[:-2]
-    qh = jnp.zeros((*batch_shape, n_h), jnp.int32)
-    qc = jnp.zeros((*batch_shape, n_h), jnp.int32)
+    qh = qh0 if qh0 is not None else jnp.zeros((*batch_shape, n_h), jnp.int32)
+    qc = qc0 if qc0 is not None else jnp.zeros((*batch_shape, n_h), jnp.int32)
 
     def step(carry, qx_t):
         qh, qc = carry
         qh, qc = lstm_cell_fxp(qparams, qx_t, qh, qc, fmt, luts)
-        return (qh, qc), None
+        return (qh, qc), (qh if return_sequence else None)
 
     qxs_t = jnp.moveaxis(qxs, -2, 0)
-    (qh, qc), _ = jax.lax.scan(step, (qh, qc), qxs_t)
+    (qh, qc), seq = jax.lax.scan(step, (qh, qc), qxs_t)
+    if return_sequence:
+        return jnp.moveaxis(seq, 0, -2), (qh, qc)
     return qh, qc
+
+
+# ---------------------------------------------------------------------------
+# Unified dispatcher: one API, six datapaths (see module docstring matrix)
+# ---------------------------------------------------------------------------
+
+LSTM_BACKENDS = ("sequential", "fused", "pallas", "pallas_seq", "fxp", "pallas_fxp")
+
+_FXP_BACKENDS = ("fxp", "pallas_fxp")
+_PALLAS_BACKENDS = ("pallas", "pallas_seq", "pallas_fxp")
+
+
+def _gate_major(params: LSTMParams) -> tuple[jax.Array, jax.Array]:
+    """Stacked ``(F, 4H)`` -> gate-major ``(4, F, H)`` (the Pallas layout)."""
+    F, h4 = params.w.shape
+    h = h4 // 4
+    return params.w.reshape(F, 4, h).transpose(1, 0, 2), params.b.reshape(4, h)
+
+
+def _lut_kernel_args(luts: dict | None) -> dict:
+    """Unpack a ``make_lut_pair`` dict into the kernel's table/bound kwargs."""
+    if luts is None:
+        return {}
+    sig_table, sig_spec = luts["sigmoid"]
+    tanh_table, tanh_spec = luts["tanh"]
+    return dict(
+        sig_table=sig_table, tanh_table=tanh_table,
+        sig_lo=sig_spec.bounds[0], sig_hi=sig_spec.bounds[1],
+        tanh_lo=tanh_spec.bounds[0], tanh_hi=tanh_spec.bounds[1],
+    )
+
+
+def _forward_one_layer(p, xs, h0, c0, need_seq, backend, fmt, luts,
+                       interpret, block_b, block_h):
+    """One layer through one backend.  Returns ``(h_seq | None, h_T, c_T)``."""
+    if backend == "sequential" or backend == "fused":
+        cell = lstm_cell_sequential if backend == "sequential" else lstm_cell_fused
+        out = lstm_layer(p, xs, h0, c0, cell=cell, return_sequence=need_seq)
+        return (out[0], *out[1]) if need_seq else (None, *out)
+
+    if backend == "fxp":
+        out = lstm_layer_fxp(p, xs, fmt, luts, qh0=h0, qc0=c0,
+                             return_sequence=need_seq)
+        return (out[0], *out[1]) if need_seq else (None, *out)
+
+    # Pallas backends operate on (B, T, n_in); kernels are imported lazily so
+    # repro.core stays importable where jax.experimental.pallas is absent.
+    B, _, _ = xs.shape
+    n_h = p.hidden_size
+    zeros = lambda: jnp.zeros(
+        (B, n_h), jnp.int32 if backend == "pallas_fxp" else xs.dtype)
+    h = h0 if h0 is not None else zeros()
+    c = c0 if c0 is not None else zeros()
+
+    if backend == "pallas":
+        from repro.kernels.lstm_step import lstm_step_pallas
+
+        w4, b4 = _gate_major(p)
+
+        def step(carry, x_t):
+            h, c = carry
+            xh = jnp.concatenate([x_t, h], axis=-1)
+            h, c = lstm_step_pallas(xh, w4, b4, c, block_b=block_b,
+                                    block_h=block_h, interpret=interpret)
+            return (h, c), (h if need_seq else None)
+
+        (h, c), seq = jax.lax.scan(step, (h, c), jnp.moveaxis(xs, 1, 0))
+        return (jnp.moveaxis(seq, 0, 1) if need_seq else None), h, c
+
+    if backend == "pallas_seq":
+        from repro.kernels.lstm_step import lstm_sequence_pallas
+
+        w4, b4 = _gate_major(p)
+        out = lstm_sequence_pallas(xs, w4, b4, h, c, block_b=block_b,
+                                   return_sequence=need_seq, interpret=interpret)
+        return out if need_seq else (None, *out)
+
+    # pallas_fxp
+    from repro.kernels.lstm_fxp_seq import lstm_sequence_fxp_pallas
+
+    out = lstm_sequence_fxp_pallas(
+        xs, p.w, p.b, h, c,
+        frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
+        return_sequence=need_seq, block_b=block_b, interpret=interpret,
+        **_lut_kernel_args(luts),
+    )
+    return out if need_seq else (None, *out)
+
+
+def lstm_forward(
+    params,
+    xs: jax.Array,
+    *,
+    backend: str = "fused",
+    fmt: FxpFormat | None = None,
+    luts: dict | None = None,
+    h0=None,
+    c0=None,
+    return_sequence: bool = False,
+    num_layers: int | None = None,
+    interpret: bool | None = None,
+    block_b: int = 128,
+    block_h: int = 128,
+):
+    """Run a (stacked) LSTM through one of the six backends.
+
+    Parameters
+    ----------
+    params : ``LSTMParams`` or a list of them (one per stacked layer; layer
+        ``l``'s ``input_size`` must equal layer ``l-1``'s ``hidden_size`` —
+        inter-layer traffic is the full hidden-state sequence).
+    xs : ``(B, n_seq, n_in)`` or ``(n_seq, n_in)``.  Float for the float
+        backends; int32 fixed point (already quantised to ``fmt``) for
+        ``"fxp"``/``"pallas_fxp"``.
+    backend : one of ``LSTM_BACKENDS`` — see the module docstring matrix.
+    fmt, luts : fixed-point format + optional ``make_lut_pair`` tables
+        (fxp backends only).
+    h0, c0 : initial state — a single ``(B, n_h)`` array (applied to layer 0
+        of a single-layer stack) or a per-layer list; default zeros.
+    return_sequence : also return the top layer's per-step hidden states.
+    num_layers : optional cross-check against ``len(params)``.
+    interpret : Pallas interpret mode; ``None`` = auto (compiled on TPU,
+        interpret elsewhere so every backend runs everywhere).
+    block_b, block_h : Pallas tile sizes.
+
+    Returns ``(h_T, c_T)`` of the top layer, or
+    ``(h_seq, (h_T, c_T))`` when ``return_sequence`` is set — the same
+    convention as ``lstm_layer``.
+    """
+    if backend not in LSTM_BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; expected one of {LSTM_BACKENDS}")
+
+    layers = list(params) if isinstance(params, (list, tuple)) else [params]
+    if num_layers is not None and num_layers != len(layers):
+        raise ValueError(f"num_layers={num_layers} but {len(layers)} param sets given")
+
+    is_fxp = backend in _FXP_BACKENDS
+    if is_fxp:
+        if fmt is None:
+            raise ValueError(f"backend {backend!r} needs fmt=FxpFormat(...)")
+        if not jnp.issubdtype(jnp.asarray(xs).dtype, jnp.integer):
+            raise TypeError(
+                f"backend {backend!r} takes int32 fixed-point inputs; "
+                "quantise with repro.core.fxp.quantize(xs, fmt) first")
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    # The Pallas kernels take a single (B, T, n_in) batch axis; fold extra
+    # leading dims into it (and unfold on the way out) so every backend
+    # accepts the same (..., n_seq, n_in) inputs.
+    squeeze_batch = False
+    lead_shape = None
+    if backend in _PALLAS_BACKENDS:
+        if xs.ndim == 2:
+            xs, squeeze_batch = xs[None], True
+        elif xs.ndim > 3:
+            lead_shape = xs.shape[:-2]
+            xs = xs.reshape(-1, *xs.shape[-2:])
+        elif xs.ndim != 3:
+            raise ValueError(
+                f"backend {backend!r} takes (..., n_seq, n_in) inputs, "
+                f"got shape {xs.shape}")
+
+    def state_for(layer_idx, s):
+        if s is None:
+            return None
+        if isinstance(s, (list, tuple)):
+            s = s[layer_idx]
+        elif len(layers) > 1:
+            raise ValueError("multi-layer stacks take per-layer h0/c0 lists")
+        if squeeze_batch:
+            return s[None]
+        if lead_shape is not None:
+            return s.reshape(-1, s.shape[-1])
+        return s
+
+    h = c = None
+    for li, p in enumerate(layers):
+        need_seq = return_sequence or li < len(layers) - 1
+        seq, h, c = _forward_one_layer(
+            p, xs, state_for(li, h0), state_for(li, c0), need_seq, backend,
+            fmt, luts, interpret, block_b, block_h)
+        if need_seq:
+            xs = seq
+
+    if squeeze_batch:
+        h, c = h[0], c[0]
+        xs = xs[0] if return_sequence else xs
+    elif lead_shape is not None:
+        h = h.reshape(*lead_shape, h.shape[-1])
+        c = c.reshape(*lead_shape, c.shape[-1])
+        if return_sequence:
+            xs = xs.reshape(*lead_shape, *xs.shape[-2:])
+    if return_sequence:
+        return xs, (h, c)
+    return h, c

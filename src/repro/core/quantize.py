@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.core import fxp as fxp_mod
 from repro.core import lut as lut_mod
 from repro.core.fxp import FxpFormat
-from repro.core.lstm import LSTMParams, lstm_layer_fxp
+from repro.core.lstm import LSTMParams, lstm_forward
 
 __all__ = [
     "QuantizedLstmModel",
@@ -71,16 +71,22 @@ def quantize_lstm_model(params: Any, fmt: FxpFormat, lut_depth: int | None) -> Q
     )
 
 
-def quantized_lstm_forward(qmodel: QuantizedLstmModel, xs: jax.Array) -> jax.Array:
+def quantized_lstm_forward(qmodel: QuantizedLstmModel, xs: jax.Array,
+                           backend: str = "fxp") -> jax.Array:
     """Bitstream-exact inference: float input -> quantise -> fixed-point LSTM
-    scan (+ LUT activations) -> fixed-point dense -> dequantise.
+    (+ LUT activations) -> fixed-point dense -> dequantise.
 
     ``xs``: (..., n_seq, n_i) float.  Returns (..., n_o) float predictions.
+    ``backend``: ``"fxp"`` (jnp scan simulator) or ``"pallas_fxp"`` (the fused
+    full-sequence kernel) — the two are integer-equal, so predictions are
+    bitwise identical.
     """
+    if backend not in ("fxp", "pallas_fxp"):
+        raise ValueError(f"quantised forward needs an fxp backend, got {backend!r}")
     fmt = qmodel.fmt
     luts = lut_mod.make_lut_pair(qmodel.lut_depth) if qmodel.lut_depth else None
     qxs = fxp_mod.quantize(xs, fmt)
-    qh, _ = lstm_layer_fxp(qmodel.lstm, qxs, fmt, luts)
+    qh, _ = lstm_forward(qmodel.lstm, qxs, backend=backend, fmt=fmt, luts=luts)
     qy = fxp_mod.fxp_matmul(qh, qmodel.dense_w, fmt, bias=qmodel.dense_b)
     return fxp_mod.dequantize(qy, fmt)
 

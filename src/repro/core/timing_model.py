@@ -36,6 +36,8 @@ __all__ = [
     "sequential_recursion_cycles",
     "parallel_recursion_cycles",
     "recursion_breakdown",
+    "fused_fxp_sequence_cycles",
+    "fused_fxp_sequence_inferences_per_second",
     "ops_per_inference",
     "throughput_gops",
     "energy_per_inference_uj",
@@ -143,6 +145,32 @@ def recursion_breakdown(s: LstmModelShape) -> dict[str, float]:
         "gate_fraction_sequential": 4 * _per_gate_cycles(s) / seq,
         "speedup": seq / par,
     }
+
+
+# -- Fused fixed-point sequence kernel (lstm_sequence_fxp_pallas) ------------
+
+
+def fused_fxp_sequence_cycles(s: LstmModelShape, setup_cycles: int = 0) -> int:
+    """Modelled cycles for the fused fixed-point *sequence* kernel — the
+    C1–C5 datapath run end to end: weights, pre-shifted biases and the LUT
+    tables are resident for the whole recurrence (``setup_cycles = 0`` on the
+    FPGA, where they live in the bitstream; on TPU a one-time VMEM load that
+    amortises over the sequence), each of the ``n_seq`` steps costs one
+    parallel recursion (Eq. 5.2's per-step term, elementwise tail pipelined
+    behind the mat-vec rows), and ``h``/``C`` never leave on-chip memory, so
+    there is no per-step state-traffic term at all.  Delegates to
+    ``lstm_layer_cycles`` (== n_seq parallel recursions) so the documented
+    equality at ``setup_cycles = 0`` holds by construction — the point being
+    that the fused kernel *achieves* Eq. 5.2, while a step-at-a-time schedule
+    adds an O(n_seq) off-chip round-trip on top of it."""
+    return setup_cycles + lstm_layer_cycles(s)
+
+
+def fused_fxp_sequence_inferences_per_second(
+    s: LstmModelShape, clock_hz: float = 100e6, setup_cycles: int = 0
+) -> float:
+    """Inference rate of the fused fxp sequence kernel + dense head."""
+    return clock_hz / (fused_fxp_sequence_cycles(s, setup_cycles) + dense_cycles(s))
 
 
 # -- Throughput / energy (Table 3) -------------------------------------------

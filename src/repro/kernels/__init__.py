@@ -4,6 +4,7 @@ kernel            | paper idea            | oracle
 ------------------|-----------------------|---------------------------
 lstm_step.py      | C1+C2 fused cell      | ref.lstm_step_ref
 lstm_step.py(seq) | C5 VMEM-resident scan | ref.lstm_sequence_ref
+lstm_fxp_seq.py   | C1–C5 fused fxp seq   | ref.lstm_sequence_fxp_ref
 lut_act.py        | C3 shared LUT         | ref.lut_act_ref
 fxp_matmul.py     | C4 fixed-point ALU    | ref.fxp_matmul_ref
 ssd_scan.py       | C1/C2/C5 for SSD      | ref.ssd_chunk_scan_ref

@@ -1,0 +1,264 @@
+"""Fused fixed-point LSTM *sequence* — Pallas TPU kernel (paper C1–C5 in one
+kernel).
+
+This is the bitstream-exact datapath run the way the FPGA actually runs it:
+the paper's 17534 inf/s come from a design where the stacked-gate weights,
+the pre-shifted biases and the shared sigmoid/tanh LUT tables are resident
+on-chip for the *whole* recurrence, and ``h``/``C`` never leave the shared
+BRAM between recursions.  The pure-jnp path ``repro.core.lstm.lstm_layer_fxp``
+simulates the same arithmetic but scans at the Python/XLA level, paying a
+per-step HBM round-trip — exactly the throughput bottleneck the paper removes.
+
+Here one ``pallas_call`` performs all ``n_seq`` steps:
+
+* int32 stacked-gate weights ``(4, F, H)``, biases and both LUT tables are
+  loaded into VMEM once (C5);
+* each step is one int32-accumulate matmul over ``[x_t, h]`` (C1), a
+  round-half-up shift + saturate back to the ``(x, y)`` format (C4), the
+  LUT gather for all four gates (C3, as a one-hot MXU contraction), and the
+  fused elementwise tail (C2) — all against VMEM-resident tiles;
+* ``h``/``c`` are carried as int32 through a ``fori_loop``, so HBM traffic
+  is O(1) in sequence length, matching the float ``lstm_sequence_pallas``.
+
+Bit-exactness: every operation replicates ``repro.core.fxp`` /
+``repro.core.lut`` arithmetic operation-for-operation (same rounding mode,
+same saturation points, same float32 index computation), so in interpret
+mode the kernel is *integer-equal* to ``lstm_layer_fxp`` — asserted across
+the paper's Fig. 6 ``(x, y)`` sweep and Table 1 LUT depths in
+``tests/test_lstm_forward.py``.  Oracle: ``repro.kernels.ref.lstm_sequence_fxp_ref``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lstm_sequence_fxp_pallas"]
+
+
+def _int_dot(a, b):
+    return jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32
+    )
+
+
+def _lstm_seq_fxp_kernel(
+    xs_ref, w_ref, b_ref, sig_ref, tanh_ref, h0_ref, c0_ref,
+    *out_refs,
+    n_seq: int,
+    frac_bits: int,
+    qmin: int,
+    qmax: int,
+    sig_lo: float,
+    sig_step: float,
+    sig_depth: int,
+    tanh_lo: float,
+    tanh_step: float,
+    tanh_depth: int,
+    use_lut: bool,
+    mxu_onehot: bool,
+    return_sequence: bool,
+):
+    if return_sequence:
+        h_seq_ref, h_out_ref, c_out_ref = out_refs
+    else:
+        h_out_ref, c_out_ref = out_refs
+
+    w = w_ref[...]                      # (4, F, H) int32 — loaded once (C5)
+    b = b_ref[...]                      # (4, H) int32
+    scale = 2.0 ** (-frac_bits)         # one LSB, same constant fxp.dequantize uses
+    half = (1 << (frac_bits - 1)) if frac_bits > 0 else 0
+
+    def sat(v):
+        return jnp.clip(v, qmin, qmax)
+
+    def rescale(acc):
+        # fxp._rescale: round-half-up shift from 2x to x fractional bits.
+        return sat((acc + half) >> frac_bits)
+
+    def quant(y):
+        # fxp.quantize: round-to-nearest-even, then saturate.
+        return sat(jnp.round(y * (1 << frac_bits)).astype(jnp.int32))
+
+    def gather(table, idx, depth):
+        if mxu_onehot:
+            # One-hot MXU contraction (exact: adding zeros to the hit entry).
+            iota = jax.lax.broadcasted_iota(jnp.int32, (*idx.shape, depth), idx.ndim)
+            onehot = (iota == idx[..., None]).astype(jnp.float32)
+            return jax.lax.dot_general(
+                onehot, table, (((idx.ndim,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )
+        return jnp.take(table, idx, axis=0)
+
+    def lut_act(q, table, lo, step, depth):
+        x = q.astype(jnp.float32) * scale
+        idx = jnp.clip(jnp.floor((x - lo) / step).astype(jnp.int32), 0, depth - 1)
+        return quant(gather(table, idx, depth))
+
+    if use_lut:
+        act_sig = lambda q: lut_act(q, sig_ref[0], sig_lo, sig_step, sig_depth)
+        act_tanh = lambda q: lut_act(q, tanh_ref[0], tanh_lo, tanh_step, tanh_depth)
+    else:
+        act_sig = lambda q: quant(jax.nn.sigmoid(q.astype(jnp.float32) * scale))
+        act_tanh = lambda q: quant(jnp.tanh(q.astype(jnp.float32) * scale))
+
+    def fmul(a, bb):
+        return rescale(a * bb)
+
+    def step(t, hc):
+        qh, qc = hc
+        qx_t = xs_ref[:, t, :]                         # (bb, n_in) dynamic slice
+        qxh = jnp.concatenate([qx_t, qh], axis=-1)     # (bb, F)
+        # C1: stacked-gate matmul — per-gate int32 accumulators are identical
+        # to the (F, 4H) stacked form, so gate-major keeps bit-exactness.
+        z = [rescale(_int_dot(qxh, w[g]) + (b[g][None, :] << frac_bits))
+             for g in range(4)]
+        i_t = act_sig(z[0])
+        f_t = act_sig(z[1])
+        g_t = act_tanh(z[2])
+        o_t = act_sig(z[3])
+        # C2: fused elementwise tail, same saturation order as the oracle
+        # (each product rescaled+saturated, then the sum saturated).
+        qc = sat(fmul(f_t, qc) + fmul(i_t, g_t))
+        qh = fmul(o_t, act_tanh(qc))
+        if return_sequence:
+            h_seq_ref[:, t, :] = qh
+        return (qh, qc)
+
+    qh, qc = jax.lax.fori_loop(0, n_seq, step, (h0_ref[...], c0_ref[...]))
+    h_out_ref[...] = qh
+    c_out_ref[...] = qc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "frac_bits", "total_bits", "sig_lo", "sig_hi", "tanh_lo", "tanh_hi",
+        "return_sequence", "block_b", "mxu_onehot", "interpret",
+    ),
+)
+def _lstm_seq_fxp_call(
+    qxs, w4, b4, sig_table, tanh_table, qh0, qc0, *,
+    frac_bits, total_bits, sig_lo, sig_hi, tanh_lo, tanh_hi,
+    return_sequence, block_b, mxu_onehot, interpret,
+):
+    B, T, n_in = qxs.shape
+    H = w4.shape[-1]
+    use_lut = sig_table.shape[0] > 1 or tanh_table.shape[0] > 1
+    sig_depth = sig_table.shape[0]
+    tanh_depth = tanh_table.shape[0]
+
+    bb = min(block_b, B)
+    pad_b = (-B) % bb
+    if pad_b:
+        qxs = jnp.pad(qxs, ((0, pad_b), (0, 0), (0, 0)))
+        qh0 = jnp.pad(qh0, ((0, pad_b), (0, 0)))
+        qc0 = jnp.pad(qc0, ((0, pad_b), (0, 0)))
+    Bp = B + pad_b
+
+    qmin, qmax = -(1 << (total_bits - 1)), (1 << (total_bits - 1)) - 1
+    kernel = functools.partial(
+        _lstm_seq_fxp_kernel,
+        n_seq=T, frac_bits=frac_bits, qmin=qmin, qmax=qmax,
+        sig_lo=sig_lo, sig_step=(sig_hi - sig_lo) / sig_depth, sig_depth=sig_depth,
+        tanh_lo=tanh_lo, tanh_step=(tanh_hi - tanh_lo) / tanh_depth,
+        tanh_depth=tanh_depth,
+        use_lut=use_lut, mxu_onehot=mxu_onehot, return_sequence=return_sequence,
+    )
+
+    out_specs = [
+        pl.BlockSpec((bb, H), lambda i: (i, 0)),
+        pl.BlockSpec((bb, H), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Bp, H), jnp.int32),
+        jax.ShapeDtypeStruct((Bp, H), jnp.int32),
+    ]
+    if return_sequence:
+        out_specs = [pl.BlockSpec((bb, T, H), lambda i: (i, 0, 0))] + out_specs
+        out_shape = [jax.ShapeDtypeStruct((Bp, T, H), jnp.int32)] + out_shape
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(Bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, T, n_in), lambda i: (i, 0, 0)),
+            pl.BlockSpec((4, n_in + H, H), lambda i: (0, 0, 0)),
+            pl.BlockSpec((4, H), lambda i: (0, 0)),
+            pl.BlockSpec((1, sig_depth), lambda i: (0, 0)),
+            pl.BlockSpec((1, tanh_depth), lambda i: (0, 0)),
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(qxs, w4, b4, sig_table.reshape(1, sig_depth),
+      tanh_table.reshape(1, tanh_depth), qh0, qc0)
+
+    if return_sequence:
+        h_seq, h, c = outs
+        return h_seq[:B], h[:B], c[:B]
+    h, c = outs
+    return h[:B], c[:B]
+
+
+def lstm_sequence_fxp_pallas(
+    qxs: jax.Array,                 # (B, T, n_in) int32 fixed point
+    qw: jax.Array,                  # (F, 4H) int32 stacked gates, i,f,g,o blocks
+    qb: jax.Array,                  # (4H,) int32
+    qh0: jax.Array | None = None,   # (B, H) int32
+    qc0: jax.Array | None = None,   # (B, H) int32
+    sig_table: jax.Array | None = None,   # (depth,) float32 LUT, None = exact sigmoid
+    tanh_table: jax.Array | None = None,  # (depth,) float32 LUT, None = exact tanh
+    *,
+    frac_bits: int = 8,
+    total_bits: int = 16,
+    sig_lo: float = -8.0,
+    sig_hi: float = 8.0,
+    tanh_lo: float = -4.0,
+    tanh_hi: float = 4.0,
+    return_sequence: bool = False,
+    block_b: int = 128,
+    mxu_onehot: bool = True,
+    interpret: bool = False,
+):
+    """Run the whole quantised recurrence in one Pallas kernel.
+
+    Weight layout is the stacked ``(n_in + H, 4H)`` of ``LSTMParams`` (gate
+    blocks i,f,g,o along the last axis); it is reshaped to gate-major
+    ``(4, F, H)`` for MXU-aligned per-gate tiles — integer accumulation is
+    order-independent, so this preserves bit-exactness with the stacked
+    oracle.  Returns ``(qh_T, qc_T)`` int32, or ``(qh_seq, qh_T, qc_T)``
+    with ``return_sequence=True``.
+    """
+    F = qw.shape[0]
+    H = qw.shape[1] // 4
+    B = qxs.shape[0]
+    w4 = qw.reshape(F, 4, H).transpose(1, 0, 2)
+    b4 = qb.reshape(4, H)
+    if qh0 is None:
+        qh0 = jnp.zeros((B, H), jnp.int32)
+    if qc0 is None:
+        qc0 = jnp.zeros((B, H), jnp.int32)
+    if (sig_table is None) != (tanh_table is None):
+        raise ValueError("pass both LUT tables or neither")
+    # depth-1 dummies signal "no LUT" to the jitted call (real tables have
+    # depth >= 2, enforced by LutSpec).
+    if sig_table is None:
+        sig_table = jnp.zeros((1,), jnp.float32)
+    if tanh_table is None:
+        tanh_table = jnp.zeros((1,), jnp.float32)
+    return _lstm_seq_fxp_call(
+        qxs, w4, b4,
+        jnp.asarray(sig_table, jnp.float32), jnp.asarray(tanh_table, jnp.float32),
+        qh0, qc0,
+        frac_bits=frac_bits, total_bits=total_bits,
+        sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
+        return_sequence=return_sequence, block_b=block_b,
+        mxu_onehot=mxu_onehot, interpret=interpret,
+    )

@@ -117,10 +117,13 @@ def lstm_step_pallas(
 
 
 def _lstm_sequence_kernel(xs_ref, w_ref, b_ref, h0_ref, c0_ref,
-                          h_out_ref, c_out_ref, *, n_seq: int):
+                          *out_refs, n_seq: int, return_sequence: bool):
+    if return_sequence:
+        h_seq_ref, h_out_ref, c_out_ref = out_refs
+    else:
+        h_out_ref, c_out_ref = out_refs
     w = w_ref[...]                         # (4, F, H) — loaded once (C5)
     b = b_ref[...]                         # (4, H)
-    H = w.shape[-1]
 
     def step(t, hc):
         h, c = hc
@@ -136,17 +139,18 @@ def _lstm_sequence_kernel(xs_ref, w_ref, b_ref, h0_ref, c0_ref,
         o_t = jax.nn.sigmoid(zo)
         c = f_t * c + i_t * g_t
         h = o_t * jnp.tanh(c)
+        if return_sequence:
+            h_seq_ref[:, t, :] = h.astype(h_seq_ref.dtype)
         return (h, c)
 
     h0 = h0_ref[...].astype(jnp.float32)
     c0 = c0_ref[...].astype(jnp.float32)
     h, c = jax.lax.fori_loop(0, n_seq, step, (h0, c0))
-    del H
     h_out_ref[...] = h.astype(h_out_ref.dtype)
     c_out_ref[...] = c.astype(c_out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_b", "return_sequence", "interpret"))
 def lstm_sequence_pallas(
     xs: jax.Array,     # (B, T, n_in)
     w: jax.Array,      # (4, F, H), F = n_in + H
@@ -155,8 +159,12 @@ def lstm_sequence_pallas(
     c0: jax.Array,     # (B, H)
     *,
     block_b: int = 128,
+    return_sequence: bool = False,
     interpret: bool = False,
 ):
+    """Returns ``(h_T, c_T)``, or ``(h_seq, h_T, c_T)`` with
+    ``return_sequence=True`` (the per-step hidden states, needed for
+    inter-layer stacking in ``repro.core.lstm.lstm_forward``)."""
     B, T, n_in = xs.shape
     H = w.shape[-1]
     bb = min(block_b, B)
@@ -167,8 +175,21 @@ def lstm_sequence_pallas(
         c0 = jnp.pad(c0, ((0, pad_b), (0, 0)))
     Bp = B + pad_b
 
-    kernel = functools.partial(_lstm_sequence_kernel, n_seq=T)
-    h_out, c_out = pl.pallas_call(
+    kernel = functools.partial(_lstm_sequence_kernel, n_seq=T,
+                               return_sequence=return_sequence)
+    out_specs = [
+        pl.BlockSpec((bb, H), lambda i: (i, 0)),
+        pl.BlockSpec((bb, H), lambda i: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((Bp, H), xs.dtype),
+        jax.ShapeDtypeStruct((Bp, H), xs.dtype),
+    ]
+    if return_sequence:
+        out_specs = [pl.BlockSpec((bb, T, H), lambda i: (i, 0, 0))] + out_specs
+        out_shape = [jax.ShapeDtypeStruct((Bp, T, H), xs.dtype)] + out_shape
+
+    outs = pl.pallas_call(
         kernel,
         grid=(Bp // bb,),
         in_specs=[
@@ -178,14 +199,12 @@ def lstm_sequence_pallas(
             pl.BlockSpec((bb, H), lambda i: (i, 0)),
             pl.BlockSpec((bb, H), lambda i: (i, 0)),
         ],
-        out_specs=[
-            pl.BlockSpec((bb, H), lambda i: (i, 0)),
-            pl.BlockSpec((bb, H), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((Bp, H), xs.dtype),
-            jax.ShapeDtypeStruct((Bp, H), xs.dtype),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(xs, w, b, h0, c0)
+    if return_sequence:
+        h_seq, h_out, c_out = outs
+        return h_seq[:B], h_out[:B], c_out[:B]
+    h_out, c_out = outs
     return h_out[:B], c_out[:B]

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 __all__ = [
     "lstm_step_ref",
     "lstm_sequence_ref",
+    "lstm_sequence_fxp_ref",
     "lut_act_ref",
     "fxp_matmul_ref",
     "ssd_chunk_scan_ref",
@@ -47,6 +48,88 @@ def lstm_sequence_ref(xs: jax.Array, w: jax.Array, b: jax.Array,
 
     (h, c), _ = jax.lax.scan(step, (h0, c0), jnp.moveaxis(xs, 1, 0))
     return h, c
+
+
+def lstm_sequence_fxp_ref(
+    qxs: jax.Array,                 # (B, T, n_in) int32 fixed point
+    qw: jax.Array,                  # (n_in + H, 4H) int32 stacked gates (i,f,g,o)
+    qb: jax.Array,                  # (4H,) int32
+    qh0: jax.Array | None = None,   # (B, H) int32
+    qc0: jax.Array | None = None,   # (B, H) int32
+    sig_table: jax.Array | None = None,   # (depth,) float32; None = exact sigmoid
+    tanh_table: jax.Array | None = None,  # (depth,) float32; None = exact tanh
+    *,
+    frac_bits: int = 8,
+    total_bits: int = 16,
+    sig_bounds: tuple[float, float] = (-8.0, 8.0),
+    tanh_bounds: tuple[float, float] = (-4.0, 4.0),
+    return_sequence: bool = False,
+):
+    """Fused fixed-point sequence oracle — the bit-level spec of
+    ``lstm_sequence_fxp_pallas`` (and of ``repro.core.lstm.lstm_layer_fxp``,
+    restated self-contained): ``(x, y)`` fixed point with int32 accumulation,
+    round-half-up rescale after every multiply, saturation to the ``y``-bit
+    range, and LUT activations addressed by ``floor((q*2^-x - lo)/step)``.
+
+    Returns ``(qh_T, qc_T)`` int32, or ``(qh_seq, qh_T, qc_T)`` when
+    ``return_sequence`` is set (flat, matching the Pallas kernel).
+    """
+    B = qxs.shape[0]
+    H = qw.shape[1] // 4
+    qmin, qmax = -(1 << (total_bits - 1)), (1 << (total_bits - 1)) - 1
+    half = (1 << (frac_bits - 1)) if frac_bits > 0 else 0
+    scale = 2.0 ** (-frac_bits)
+
+    def sat(v):
+        return jnp.clip(v, qmin, qmax)
+
+    def rescale(acc):
+        return sat((acc + half) >> frac_bits)
+
+    def quant(y):
+        return sat(jnp.round(y * (1 << frac_bits)).astype(jnp.int32))
+
+    def lut(q, table, bounds):
+        lo, hi = bounds
+        step = (hi - lo) / table.shape[0]
+        x = q.astype(jnp.float32) * scale
+        idx = jnp.clip(jnp.floor((x - lo) / step).astype(jnp.int32),
+                       0, table.shape[0] - 1)
+        return quant(jnp.take(table, idx, axis=0))
+
+    if sig_table is None:
+        act_sig = lambda q: quant(jax.nn.sigmoid(q.astype(jnp.float32) * scale))
+    else:
+        act_sig = lambda q: lut(q, sig_table, sig_bounds)
+    if tanh_table is None:
+        act_tanh = lambda q: quant(jnp.tanh(q.astype(jnp.float32) * scale))
+    else:
+        act_tanh = lambda q: lut(q, tanh_table, tanh_bounds)
+
+    def fmul(a, b):
+        return rescale(a.astype(jnp.int32) * b.astype(jnp.int32))
+
+    def step(carry, qx_t):
+        qh, qc = carry
+        qxh = jnp.concatenate([qx_t, qh], axis=-1)
+        acc = jnp.matmul(qxh.astype(jnp.int32), qw.astype(jnp.int32))
+        acc = acc + (qb.astype(jnp.int32) << frac_bits)
+        z = rescale(acc)
+        zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
+        i_t = act_sig(zi)
+        f_t = act_sig(zf)
+        g_t = act_tanh(zg)
+        o_t = act_sig(zo)
+        qc = sat(fmul(f_t, qc) + fmul(i_t, g_t))
+        qh = fmul(o_t, act_tanh(qc))
+        return (qh, qc), (qh if return_sequence else None)
+
+    qh0 = qh0 if qh0 is not None else jnp.zeros((B, H), jnp.int32)
+    qc0 = qc0 if qc0 is not None else jnp.zeros((B, H), jnp.int32)
+    (qh, qc), seq = jax.lax.scan(step, (qh0, qc0), jnp.moveaxis(qxs, 1, 0))
+    if return_sequence:
+        return jnp.moveaxis(seq, 0, 1), qh, qc
+    return qh, qc
 
 
 def lut_act_ref(x: jax.Array, table: jax.Array, lo: float, hi: float):

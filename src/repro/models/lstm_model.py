@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lstm import LSTMParams, init_lstm_params, lstm_cell_fused, lstm_layer
+from repro.core.lstm import (LSTMParams, init_lstm_params, lstm_cell_fused,
+                             lstm_forward, lstm_layer)
 from repro.data.traffic import TrafficDataset
 from repro.training.optimizer import OptState, adam, step_decay_schedule
 
@@ -43,10 +44,22 @@ def init_traffic_model(key: jax.Array, input_size: int = 1, hidden_size: int = 2
 
 
 def traffic_forward(params: dict[str, Any], xs: jax.Array,
-                    cell: Callable = lstm_cell_fused, **cell_kwargs) -> jax.Array:
+                    backend: str = "fused", cell: Callable | None = None,
+                    **kwargs) -> jax.Array:
     """xs: (..., n_seq, n_i) -> (..., n_o).  Only the last hidden state feeds
-    the dense layer (paper: n_f == n_h)."""
-    h, _ = lstm_layer(params["lstm"], xs, cell=cell, **cell_kwargs)
+    the dense layer (paper: n_f == n_h).
+
+    ``backend`` selects the LSTM datapath through ``lstm_forward`` (training
+    uses the default ``"fused"``, which is differentiable).  ``cell`` is the
+    legacy escape hatch for a custom cell callable, and activation-injection
+    kwargs (``sigmoid_fn``/``tanh_fn``, the C3 LUT pattern) imply the fused
+    cell; both route through ``lstm_layer`` directly.
+    """
+    if cell is not None or "sigmoid_fn" in kwargs or "tanh_fn" in kwargs:
+        h, _ = lstm_layer(params["lstm"], xs, cell=cell or lstm_cell_fused,
+                          **kwargs)
+    else:
+        h, _ = lstm_forward(params["lstm"], xs, backend=backend, **kwargs)
     return h @ params["dense"]["w"] + params["dense"]["b"]
 
 

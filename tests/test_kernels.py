@@ -33,7 +33,13 @@ def test_lstm_step_sweep(b, f, h, dtype):
     np.testing.assert_allclose(c1, c2, atol=2e-6)
 
 
-@pytest.mark.parametrize("b,t,n_in,h", [(2, 6, 1, 20), (4, 12, 3, 16), (9, 7, 2, 33)])
+# Batch sizes deliberately NOT multiples of block_b=4 (1 < block, 5 and 9
+# straddle a partial tile) so the padding path is always exercised, and
+# n_seq in {1, 7, 24} so the fori_loop time slicing covers degenerate,
+# odd, and paper-Fig.6-scale sequence lengths.
+@pytest.mark.parametrize("b", [1, 5, 9])
+@pytest.mark.parametrize("t", [1, 7, 24])
+@pytest.mark.parametrize("n_in,h", [(2, 20)])
 def test_lstm_sequence_sweep(b, t, n_in, h):
     xs = _rand((b, t, n_in))
     w = _rand((4, n_in + h, h), scale=0.2)
@@ -44,6 +50,66 @@ def test_lstm_sequence_sweep(b, t, n_in, h):
     r2 = ops.lstm_sequence(xs, w, bias, h0, c0, impl="interpret", block_b=4)
     np.testing.assert_allclose(r1[0], r2[0], atol=5e-6)
     np.testing.assert_allclose(r1[1], r2[1], atol=5e-6)
+
+
+def test_lstm_sequence_return_sequence():
+    b, t, n_in, h = 5, 7, 3, 16
+    xs = _rand((b, t, n_in))
+    w = _rand((4, n_in + h, h), scale=0.2)
+    bias = _rand((4, h), scale=0.1)
+    h0 = jnp.zeros((b, h))
+    c0 = jnp.zeros((b, h))
+    from repro.kernels.lstm_step import lstm_sequence_pallas
+    h_seq, hT, cT = lstm_sequence_pallas(xs, w, bias, h0, c0, block_b=4,
+                                         return_sequence=True, interpret=True)
+    hr, cr = ops.lstm_sequence(xs, w, bias, h0, c0, impl="ref")
+    assert h_seq.shape == (b, t, h)
+    np.testing.assert_allclose(h_seq[:, -1], hr, atol=5e-6)
+    np.testing.assert_allclose(hT, hr, atol=5e-6)
+    np.testing.assert_allclose(cT, cr, atol=5e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused fixed-point sequence (C1–C5 in one kernel)
+# ---------------------------------------------------------------------------
+
+def _fxp_seq_inputs(b, t, n_in, h, total):
+    hi = 2 ** (total - 3)
+    qxs = jnp.asarray(RNG.integers(-hi, hi, (b, t, n_in)), jnp.int32)
+    qw = jnp.asarray(RNG.integers(-hi // 4, hi // 4, (n_in + h, 4 * h)), jnp.int32)
+    qb = jnp.asarray(RNG.integers(-hi // 4, hi // 4, (4 * h,)), jnp.int32)
+    return qxs, qw, qb
+
+
+@pytest.mark.parametrize("b,t", [(1, 1), (5, 7), (9, 24)])
+@pytest.mark.parametrize("frac,total", [(8, 16), (6, 12)])
+@pytest.mark.parametrize("mxu", [True, False])
+def test_lstm_sequence_fxp_kernel_vs_oracle(b, t, frac, total, mxu):
+    from repro.core.lut import make_lut_pair
+    n_in, h = 2, 20
+    qxs, qw, qb = _fxp_seq_inputs(b, t, n_in, h, total)
+    luts = make_lut_pair(64)
+    (sig_t, sig_s), (tanh_t, tanh_s) = luts["sigmoid"], luts["tanh"]
+    kw = dict(frac_bits=frac, total_bits=total,
+              sig_lo=sig_s.bounds[0], sig_hi=sig_s.bounds[1],
+              tanh_lo=tanh_s.bounds[0], tanh_hi=tanh_s.bounds[1])
+    o1 = ops.lstm_sequence_fxp(qxs, qw, qb, None, None, sig_t, tanh_t,
+                               impl="ref", **kw)
+    o2 = ops.lstm_sequence_fxp(qxs, qw, qb, None, None, sig_t, tanh_t,
+                               impl="interpret", block_b=4, mxu_onehot=mxu, **kw)
+    np.testing.assert_array_equal(np.asarray(o1[0]), np.asarray(o2[0]))
+    np.testing.assert_array_equal(np.asarray(o1[1]), np.asarray(o2[1]))
+
+
+def test_lstm_sequence_fxp_no_lut_and_seq_output():
+    b, t, n_in, h = 3, 7, 1, 20
+    qxs, qw, qb = _fxp_seq_inputs(b, t, n_in, h, 16)
+    o1 = ops.lstm_sequence_fxp(qxs, qw, qb, impl="ref", return_sequence=True)
+    o2 = ops.lstm_sequence_fxp(qxs, qw, qb, impl="interpret", block_b=2,
+                               return_sequence=True)
+    assert o1[0].shape == (b, t, h)
+    for a, e in zip(o1, o2):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(e))
 
 
 # ---------------------------------------------------------------------------

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.fxp import FxpFormat, dequantize, quantize
 from repro.core.lstm import (LSTMParams, init_lstm_params, lstm_cell_fused,

@@ -1,0 +1,206 @@
+"""Unified LSTM dispatcher tests.
+
+Two contracts (ISSUE 1 acceptance criteria):
+
+* ``lstm_sequence_fxp_pallas(interpret=True)`` is *integer-equal* (not
+  allclose) to ``lstm_layer_fxp`` across the paper's Fig. 6 ``(x, y)``
+  format sweep and Table 1 LUT depths, for multiple sequence lengths.
+* ``lstm_forward`` dispatches all six backends through one shared signature,
+  with multi-layer stacking and sequence output.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fxp import FxpFormat, quantize
+from repro.core.lstm import (LSTM_BACKENDS, LSTMParams, init_lstm_params,
+                             lstm_forward, lstm_layer, lstm_layer_fxp)
+from repro.core.lut import make_lut_pair
+from repro.kernels.lstm_fxp_seq import lstm_sequence_fxp_pallas
+
+RNG = np.random.default_rng(0)
+
+B, N_IN, N_H = 3, 2, 20
+
+
+def _float_setup(key=0, n_in=N_IN, n_h=N_H, t=7, b=B):
+    params = init_lstm_params(jax.random.PRNGKey(key), n_in, n_h)
+    xs = jnp.asarray(RNG.normal(size=(b, t, n_in)).astype(np.float32))
+    return params, xs
+
+
+def _quantized(params, xs, fmt):
+    qp = LSTMParams(w=quantize(params.w, fmt), b=quantize(params.b, fmt))
+    return qp, quantize(xs, fmt)
+
+
+def _fused_kernel_out(qp, qxs, fmt, luts):
+    (sig_t, sig_s), (tanh_t, tanh_s) = luts["sigmoid"], luts["tanh"]
+    return lstm_sequence_fxp_pallas(
+        qxs, qp.w, qp.b, None, None, sig_t, tanh_t,
+        frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
+        sig_lo=sig_s.bounds[0], sig_hi=sig_s.bounds[1],
+        tanh_lo=tanh_s.bounds[0], tanh_hi=tanh_s.bounds[1],
+        block_b=2, interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# The headline contract: fused fxp sequence kernel == lstm_layer_fxp, bit for
+# bit, across formats (Fig. 6 sweep) x LUT depths (Table 1) x seq lengths.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("frac,total", [(8, 16), (6, 12), (12, 16)])
+@pytest.mark.parametrize("depth", [64, 256])
+@pytest.mark.parametrize("t", [6, 24])
+def test_fused_fxp_sequence_bit_exact(frac, total, depth, t):
+    fmt = FxpFormat(frac, total)
+    params, xs = _float_setup(t=t)
+    qp, qxs = _quantized(params, xs, fmt)
+    luts = make_lut_pair(depth)
+
+    qh_ref, qc_ref = lstm_layer_fxp(qp, qxs, fmt, luts)
+    qh_ker, qc_ker = _fused_kernel_out(qp, qxs, fmt, luts)
+
+    np.testing.assert_array_equal(np.asarray(qh_ref), np.asarray(qh_ker))
+    np.testing.assert_array_equal(np.asarray(qc_ref), np.asarray(qc_ker))
+
+
+def test_fused_fxp_sequence_bit_exact_without_luts():
+    """Fig. 6's sweep quantises data but not activations (luts=None)."""
+    fmt = FxpFormat(8, 16)
+    params, xs = _float_setup(t=6)
+    qp, qxs = _quantized(params, xs, fmt)
+    qh_ref, qc_ref = lstm_layer_fxp(qp, qxs, fmt, None)
+    qh_ker, qc_ker = lstm_sequence_fxp_pallas(qxs, qp.w, qp.b, block_b=2,
+                                              interpret=True)
+    np.testing.assert_array_equal(np.asarray(qh_ref), np.asarray(qh_ker))
+    np.testing.assert_array_equal(np.asarray(qc_ref), np.asarray(qc_ker))
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher: one signature, six backends
+# ---------------------------------------------------------------------------
+
+def _forward(backend, params, xs, qp, qxs, fmt, luts, **kw):
+    if backend in ("fxp", "pallas_fxp"):
+        return lstm_forward(qp, qxs, backend=backend, fmt=fmt, luts=luts,
+                            block_b=2, **kw)
+    return lstm_forward(params, xs, backend=backend, block_b=2, block_h=8, **kw)
+
+
+def test_all_backends_dispatch_one_signature():
+    fmt = FxpFormat(8, 16)
+    params, xs = _float_setup()
+    qp, qxs = _quantized(params, xs, fmt)
+    luts = make_lut_pair(128)
+
+    outs = {be: _forward(be, params, xs, qp, qxs, fmt, luts)
+            for be in LSTM_BACKENDS}
+    for be, (h, c) in outs.items():
+        assert h.shape == (B, N_H) and c.shape == (B, N_H), be
+
+    # float backends agree numerically
+    for be in ("sequential", "pallas", "pallas_seq"):
+        np.testing.assert_allclose(outs["fused"][0], outs[be][0], atol=1e-5)
+        np.testing.assert_allclose(outs["fused"][1], outs[be][1], atol=1e-5)
+    # fxp backends agree bitwise
+    np.testing.assert_array_equal(np.asarray(outs["fxp"][0]),
+                                  np.asarray(outs["pallas_fxp"][0]))
+    np.testing.assert_array_equal(np.asarray(outs["fxp"][1]),
+                                  np.asarray(outs["pallas_fxp"][1]))
+
+
+@pytest.mark.parametrize("backend", ["fused", "pallas_seq", "fxp", "pallas_fxp"])
+def test_return_sequence_last_step_matches_final_state(backend):
+    fmt = FxpFormat(8, 16)
+    params, xs = _float_setup()
+    qp, qxs = _quantized(params, xs, fmt)
+    luts = make_lut_pair(64)
+    seq, (h, c) = _forward(backend, params, xs, qp, qxs, fmt, luts,
+                           return_sequence=True)
+    assert seq.shape == (B, xs.shape[1], N_H)
+    np.testing.assert_array_equal(np.asarray(seq[:, -1]), np.asarray(h))
+
+
+@pytest.mark.parametrize("backend", ["fused", "pallas_seq"])
+def test_two_layer_stack_float(backend):
+    params, xs = _float_setup()
+    p2 = init_lstm_params(jax.random.PRNGKey(1), N_H, N_H)
+    stack = [params, p2]
+    h, c = lstm_forward(stack, xs, backend=backend, block_b=2, num_layers=2)
+    # oracle: layer 1 sees layer 0's full hidden sequence
+    seq0, _ = lstm_layer(params, xs, return_sequence=True)
+    h_ref, c_ref = lstm_layer(p2, seq0)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=1e-5)
+
+
+def test_two_layer_stack_fxp_bit_exact():
+    fmt = FxpFormat(8, 16)
+    params, xs = _float_setup()
+    p2 = init_lstm_params(jax.random.PRNGKey(1), N_H, N_H)
+    qp1, qxs = _quantized(params, xs, fmt)
+    qp2 = LSTMParams(w=quantize(p2.w, fmt), b=quantize(p2.b, fmt))
+    luts = make_lut_pair(64)
+    o_sim = lstm_forward([qp1, qp2], qxs, backend="fxp", fmt=fmt, luts=luts)
+    o_ker = lstm_forward([qp1, qp2], qxs, backend="pallas_fxp", fmt=fmt,
+                         luts=luts, block_b=2)
+    np.testing.assert_array_equal(np.asarray(o_sim[0]), np.asarray(o_ker[0]))
+    np.testing.assert_array_equal(np.asarray(o_sim[1]), np.asarray(o_ker[1]))
+
+
+def test_dispatcher_validation():
+    fmt = FxpFormat(8, 16)
+    params, xs = _float_setup()
+    with pytest.raises(ValueError, match="unknown backend"):
+        lstm_forward(params, xs, backend="warp_drive")
+    with pytest.raises(ValueError, match="needs fmt"):
+        lstm_forward(params, xs, backend="fxp")
+    with pytest.raises(TypeError, match="int32 fixed-point"):
+        lstm_forward(params, xs, backend="fxp", fmt=fmt)
+    with pytest.raises(ValueError, match="num_layers"):
+        lstm_forward(params, xs, backend="fused", num_layers=2)
+
+
+def test_unbatched_input_pallas_backends():
+    params, xs = _float_setup()
+    h_ref, c_ref = lstm_forward(params, xs[0], backend="fused")
+    for be in ("pallas", "pallas_seq"):
+        h, c = lstm_forward(params, xs[0], backend=be, block_b=2, block_h=8)
+        assert h.shape == (N_H,)
+        np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=1e-5)
+
+
+def test_extra_leading_batch_dims_fold_into_pallas_batch():
+    """(..., n_seq, n_in) holds for every backend: pallas backends fold the
+    leading dims into one batch axis and unfold on the way out."""
+    fmt = FxpFormat(8, 16)
+    params, _ = _float_setup()
+    xs4 = jnp.asarray(RNG.normal(size=(2, 3, 7, N_IN)).astype(np.float32))
+    h_ref, c_ref = lstm_forward(params, xs4, backend="fused")
+    h, c = lstm_forward(params, xs4, backend="pallas_seq", block_b=2)
+    assert h.shape == (2, 3, N_H)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=1e-5)
+    qp, qxs4 = _quantized(params, xs4, fmt)
+    a = lstm_forward(qp, qxs4, backend="fxp", fmt=fmt)
+    b = lstm_forward(qp, qxs4, backend="pallas_fxp", fmt=fmt, block_b=2)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
+
+
+def test_per_layer_initial_state_list_unbatched_input():
+    params, xs = _float_setup()
+    p2 = init_lstm_params(jax.random.PRNGKey(1), N_H, N_H)
+    h0 = [jnp.full((N_H,), 0.1), jnp.full((N_H,), -0.1)]
+    c0 = [jnp.zeros((N_H,)), jnp.zeros((N_H,))]
+    h_ref, c_ref = lstm_forward([params, p2], xs[0], backend="fused",
+                                h0=h0, c0=c0)
+    h, c = lstm_forward([params, p2], xs[0], backend="pallas_seq",
+                        h0=h0, c0=c0, block_b=2)
+    assert h.shape == (N_H,)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=1e-5)
