@@ -6,14 +6,19 @@ meaningful for correctness, meaningless for wall time — so timings here are
 the ref paths; the kernels' TPU performance model is the roofline story in
 EXPERIMENTS.md."""
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import timeit
 from repro.core import timing_model as tm
+from repro.core.fxp import FxpFormat
+from repro.core.lstm import LSTMParams
 from repro.core.lut import LutSpec, build_table, make_lut_pair
 from repro.kernels import ref
+from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
 
 RNG = np.random.default_rng(0)
 
@@ -50,6 +55,52 @@ def run():
                      "derived": f"(8;16) LUT256 B{b} T{t} H{h}; "
                                 f"model_cycles={cyc} "
                                 f"({tm.fused_fxp_sequence_inferences_per_second(shape):.0f} inf/s @100MHz)"})
+
+    # long-sequence streaming (ISSUE 2): n_seq far beyond one VMEM block —
+    # the time-tiled kernel's regime.  Ref-path wall time + the analytic
+    # cycle model (the kernel itself only times meaningfully on TPU).
+    b, n_in, h, t, tile = 1, 1, 20, 192, 24
+    qxs = jnp.asarray(RNG.integers(-4096, 4096, (b, t, n_in)), jnp.int32)
+    qw = jnp.asarray(RNG.integers(-1024, 1024, (n_in + h, 4 * h)), jnp.int32)
+    qb = jnp.asarray(RNG.integers(-512, 512, (4 * h,)), jnp.int32)
+    fn = jax.jit(lambda x, w, bb: ref.lstm_sequence_fxp_ref(
+        x, w, bb, None, None, sig_t, tanh_t,
+        sig_bounds=sig_s.bounds, tanh_bounds=tanh_s.bounds))
+    us = timeit(fn, qxs, qw, qb, n=3)
+    shape = tm.LstmModelShape(n_seq=t, n_i=n_in, n_h=h, n_f=h, n_o=1)
+    rows.append({"name": "kernel/lstm_seq_fxp_long", "us_per_call": round(us, 1),
+                 "derived": f"(8;16) LUT256 B{b} T{t} H{h}; us=ref simulator; "
+                            f"kernel streams this as {t // tile} chunks of "
+                            f"time_tile={tile}; "
+                            f"model_cycles={tm.fused_fxp_sequence_cycles(shape)}"})
+
+    # fleet-serving throughput (ISSUE 2): SensorFleetEngine continuously
+    # batching ragged sensor streams; fxp backend so host wall time is the
+    # compiled jnp scan, not the Python-interpret Pallas body.
+    fmt = FxpFormat(8, 16)
+    slots, n_streams = 8, 24
+    qp = LSTMParams(w=qw, b=qb)
+
+    def make_streams(n, seed):
+        r = np.random.default_rng(seed)
+        return [SensorStream(rid=i, qxs=r.integers(-4096, 4096, (L, n_in))
+                             .astype(np.int32))
+                for i, L in enumerate(r.integers(30, 61, n))]
+
+    eng = SensorFleetEngine(qp, fmt, luts, batch_slots=slots, chunk=8,
+                            backend="fxp")
+    eng.run(make_streams(slots, 1))          # warm every t_step shape bucket
+    streams = make_streams(n_streams, 2)
+    calls0 = eng.steps_run
+    t0 = time.perf_counter()
+    eng.run(streams)
+    dt = time.perf_counter() - t0
+    calls = eng.steps_run - calls0
+    sensor_steps = sum(len(s.qxs) for s in streams)
+    rows.append({"name": "serving/lstm_fleet", "us_per_call": round(dt * 1e6 / calls, 1),
+                 "derived": f"{n_streams} ragged streams via {slots} slots H{h}; "
+                            f"{calls} batched calls; "
+                            f"{sensor_steps / dt:.0f} sensor-steps/s host"})
 
     spec = LutSpec("sigmoid", 256)
     table = build_table(spec)

@@ -3,10 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV (plus a human table to stderr).
 
 ``--only TAG`` runs a single module (e.g. ``--only kernels``); ``--json PATH``
-appends this run's rows to a JSON perf trajectory (a list of runs, newest
+merges this run's rows into a JSON perf trajectory (a list of runs, newest
 last) so regressions are diffable across PRs:
 
     PYTHONPATH=src:. python benchmarks/run.py --only kernels --json BENCH_kernels.json
+
+The trajectory is append-only: prior entries are never dropped, and an
+unreadable/clobbered file is preserved as ``<PATH>.bak`` rather than being
+overwritten (``load_trajectory`` / ``append_run``; tested in
+``tests/test_bench_json.py``).
 """
 
 import argparse
@@ -14,6 +19,55 @@ import json
 import os
 import sys
 import time
+
+
+def load_trajectory(path: str) -> list:
+    """Read an existing perf trajectory, never losing data.
+
+    Returns the list of prior runs.  A missing file yields ``[]``; an
+    unreadable or non-list file is moved aside to ``<path>.bak[N]`` (instead
+    of being silently overwritten on the next save) and ``[]`` is returned.
+    """
+    if not os.path.exists(path):
+        return []
+    try:
+        with open(path) as f:
+            history = json.load(f)
+        if isinstance(history, list):
+            return history
+        reason = f"non-list JSON ({type(history).__name__})"
+    except (json.JSONDecodeError, OSError) as e:
+        reason = str(e)
+    bak = f"{path}.bak"
+    n = 0
+    while os.path.exists(bak):
+        n += 1
+        bak = f"{path}.bak{n}"
+    os.replace(path, bak)
+    print(f"[bench] {path} was {reason}; preserved as {bak}", file=sys.stderr)
+    return []
+
+
+def append_run(path: str, rows: list, only: str | None = None,
+               now: str | None = None) -> int:
+    """Merge this run into the trajectory at ``path`` (append-only history).
+
+    Prior entries are always kept — corrupt files are backed up by
+    ``load_trajectory`` rather than clobbered — and the write is
+    temp-file + rename so an interrupted run can't truncate the history.
+    Returns the new number of runs in the trajectory.
+    """
+    history = load_trajectory(path)
+    history.append({
+        "time": now or time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "only": only,
+        "rows": rows,
+    })
+    tmp = f"{path}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=1)
+    os.replace(tmp, path)
+    return len(history)
 
 
 def main(argv=None) -> None:
@@ -58,28 +112,9 @@ def main(argv=None) -> None:
             print(f"[bench] {tag} failed: {e}", file=sys.stderr)
 
     if args.json:
-        history = []
-        if os.path.exists(args.json):
-            try:
-                with open(args.json) as f:
-                    history = json.load(f)
-                if not isinstance(history, list):
-                    print(f"[bench] ignoring non-list {args.json}", file=sys.stderr)
-                    history = []
-            except (json.JSONDecodeError, OSError) as e:
-                print(f"[bench] ignoring unreadable {args.json}: {e}", file=sys.stderr)
-                history = []
-        history.append({
-            "time": time.strftime("%Y-%m-%dT%H:%M:%S"),
-            "only": args.only,
-            "rows": all_rows,
-        })
-        # write-to-temp + rename so an interrupted run can't truncate history
-        tmp = f"{args.json}.tmp"
-        with open(tmp, "w") as f:
-            json.dump(history, f, indent=1)
-        os.replace(tmp, args.json)
-        print(f"[bench] appended {len(all_rows)} rows to {args.json}", file=sys.stderr)
+        n_runs = append_run(args.json, all_rows, only=args.only)
+        print(f"[bench] appended {len(all_rows)} rows to {args.json} "
+              f"({n_runs} runs in trajectory)", file=sys.stderr)
 
     if failures:
         sys.exit(1)

@@ -1,5 +1,15 @@
 #!/usr/bin/env sh
-# Tier-1 verify (ROADMAP.md): the whole suite, stop at first failure.
+# Tier-1 verify (ROADMAP.md) + the slow tier.
+#
+#   ./scripts/ci.sh            # full suite, stop at first failure (tier-1 verify)
+#   ./scripts/ci.sh fast       # quick loop: everything except -m slow
+#   ./scripts/ci.sh slow       # the slow tier only (hypothesis sweeps etc.)
 set -eu
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+case "${1:-all}" in
+  fast) exec python -m pytest -x -q -m "not slow" ;;
+  slow) exec python -m pytest -q -m slow ;;
+  all)  exec python -m pytest -x -q ;;
+  *) echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;
+esac

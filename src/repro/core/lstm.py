@@ -63,6 +63,20 @@ and ``"pallas"`` only as baselines/foils when reproducing the Fig. 3/Fig. 5
 bottleneck story.  Float backends take float ``xs``; fxp backends take int32
 ``xs`` already quantised to ``fmt`` (plus optional ``luts`` from
 ``repro.core.lut.make_lut_pair``).
+
+``time_tile`` (``"pallas_fxp"`` only): by default the kernel stages the whole
+``(block_b, n_seq, n_in)`` input in one VMEM block, which bounds ``n_seq``.
+``time_tile=tt`` streams the sequence through VMEM in double-buffered
+``tt``-step chunks with ``h``/``c`` carried across chunks in VMEM scratch —
+``n_seq`` becomes unbounded and the result stays integer-equal to ``"fxp"``
+(ragged tails are masked in-kernel).  Cross-backend equivalence, including
+the tiled path at ``n_seq >> time_tile``, is locked down by
+``tests/test_backend_equiv.py`` and the golden fixtures in ``tests/golden/``.
+
+Fleet serving: ``repro.serving.lstm_engine.SensorFleetEngine`` continuously
+batches many independent sensor streams through ``lstm_forward(...,
+backend="pallas_fxp")`` with per-slot ``h0``/``c0`` carry — bit-identical to
+running each stream alone (``tests/test_serving.py``).
 """
 
 from __future__ import annotations
@@ -347,7 +361,7 @@ def _lut_kernel_args(luts: dict | None) -> dict:
 
 
 def _forward_one_layer(p, xs, h0, c0, need_seq, backend, fmt, luts,
-                       interpret, block_b, block_h):
+                       interpret, block_b, block_h, time_tile):
     """One layer through one backend.  Returns ``(h_seq | None, h_T, c_T)``."""
     if backend == "sequential" or backend == "fused":
         cell = lstm_cell_sequential if backend == "sequential" else lstm_cell_fused
@@ -397,7 +411,8 @@ def _forward_one_layer(p, xs, h0, c0, need_seq, backend, fmt, luts,
     out = lstm_sequence_fxp_pallas(
         xs, p.w, p.b, h, c,
         frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
-        return_sequence=need_seq, block_b=block_b, interpret=interpret,
+        return_sequence=need_seq, block_b=block_b, time_tile=time_tile,
+        interpret=interpret,
         **_lut_kernel_args(luts),
     )
     return out if need_seq else (None, *out)
@@ -417,6 +432,7 @@ def lstm_forward(
     interpret: bool | None = None,
     block_b: int = 128,
     block_h: int = 128,
+    time_tile: int | None = None,
 ):
     """Run a (stacked) LSTM through one of the six backends.
 
@@ -438,6 +454,9 @@ def lstm_forward(
     interpret : Pallas interpret mode; ``None`` = auto (compiled on TPU,
         interpret elsewhere so every backend runs everywhere).
     block_b, block_h : Pallas tile sizes.
+    time_tile : ``"pallas_fxp"`` only — stream the sequence through VMEM in
+        double-buffered ``time_tile``-step chunks (``None`` = whole sequence
+        in one block); integer-equal either way.  See the module docstring.
 
     Returns ``(h_T, c_T)`` of the top layer, or
     ``(h_seq, (h_T, c_T))`` when ``return_sequence`` is set — the same
@@ -496,7 +515,7 @@ def lstm_forward(
         need_seq = return_sequence or li < len(layers) - 1
         seq, h, c = _forward_one_layer(
             p, xs, state_for(li, h0), state_for(li, c0), need_seq, backend,
-            fmt, luts, interpret, block_b, block_h)
+            fmt, luts, interpret, block_b, block_h, time_tile)
         if need_seq:
             xs = seq
 

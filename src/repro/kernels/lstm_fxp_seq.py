@@ -1,5 +1,5 @@
 """Fused fixed-point LSTM *sequence* — Pallas TPU kernel (paper C1–C5 in one
-kernel).
+kernel), with double-buffered time-tiling for arbitrarily long sequences.
 
 This is the bitstream-exact datapath run the way the FPGA actually runs it:
 the paper's 17534 inf/s come from a design where the stacked-gate weights,
@@ -9,7 +9,7 @@ BRAM between recursions.  The pure-jnp path ``repro.core.lstm.lstm_layer_fxp``
 simulates the same arithmetic but scans at the Python/XLA level, paying a
 per-step HBM round-trip — exactly the throughput bottleneck the paper removes.
 
-Here one ``pallas_call`` performs all ``n_seq`` steps:
+One ``pallas_call`` performs all ``n_seq`` steps:
 
 * int32 stacked-gate weights ``(4, F, H)``, biases and both LUT tables are
   loaded into VMEM once (C5);
@@ -17,15 +17,30 @@ Here one ``pallas_call`` performs all ``n_seq`` steps:
   round-half-up shift + saturate back to the ``(x, y)`` format (C4), the
   LUT gather for all four gates (C3, as a one-hot MXU contraction), and the
   fused elementwise tail (C2) — all against VMEM-resident tiles;
-* ``h``/``c`` are carried as int32 through a ``fori_loop``, so HBM traffic
-  is O(1) in sequence length, matching the float ``lstm_sequence_pallas``.
+* ``h``/``c`` are carried as int32, so HBM traffic for state is O(1) in
+  sequence length, matching the float ``lstm_sequence_pallas``.
+
+Time-tiling (``time_tile``): with the default ``time_tile=None`` the whole
+``(bb, T, n_in)`` input block must fit in one VMEM window, which bounds
+``n_seq``.  Passing ``time_tile=tt`` adds a second (inner, sequential) grid
+dimension over ``ceil(T / tt)`` time chunks: each grid step sees only a
+``(bb, tt, n_in)`` input window while ``h``/``c`` persist across chunks in
+VMEM *scratch* (the BRAM analogue — state never round-trips HBM between
+chunks).  Because consecutive grid steps read consecutive input windows,
+Pallas's pipeline emitter overlaps the DMA of chunk ``t+1`` with the compute
+of chunk ``t`` (double buffering), so the recurrence streams sequences of
+any length at the single-block kernel's steady-state rate.  A ragged tail
+(``T % tt != 0``) is padded and masked inside the kernel, preserving
+integer-exactness.
 
 Bit-exactness: every operation replicates ``repro.core.fxp`` /
 ``repro.core.lut`` arithmetic operation-for-operation (same rounding mode,
 same saturation points, same float32 index computation), so in interpret
 mode the kernel is *integer-equal* to ``lstm_layer_fxp`` — asserted across
 the paper's Fig. 6 ``(x, y)`` sweep and Table 1 LUT depths in
-``tests/test_lstm_forward.py``.  Oracle: ``repro.kernels.ref.lstm_sequence_fxp_ref``.
+``tests/test_lstm_forward.py``, and across the backend × shape × time-tile
+product in ``tests/test_backend_equiv.py``.  Oracle:
+``repro.kernels.ref.lstm_sequence_fxp_ref``.
 """
 
 from __future__ import annotations
@@ -35,6 +50,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = ["lstm_sequence_fxp_pallas"]
 
@@ -47,8 +63,10 @@ def _int_dot(a, b):
 
 def _lstm_seq_fxp_kernel(
     xs_ref, w_ref, b_ref, sig_ref, tanh_ref, h0_ref, c0_ref,
-    *out_refs,
+    *refs,
+    time_tile: int,
     n_seq: int,
+    has_tail: bool,
     frac_bits: int,
     qmin: int,
     qmax: int,
@@ -62,10 +80,19 @@ def _lstm_seq_fxp_kernel(
     mxu_onehot: bool,
     return_sequence: bool,
 ):
+    h_scr, c_scr = refs[-2], refs[-1]
+    out_refs = refs[:-2]
     if return_sequence:
         h_seq_ref, h_out_ref, c_out_ref = out_refs
     else:
         h_out_ref, c_out_ref = out_refs
+
+    tb = pl.program_id(1)                   # time-chunk index (sequential)
+
+    @pl.when(tb == 0)
+    def _():                                # fresh batch tile: load h0/c0
+        h_scr[...] = h0_ref[...]
+        c_scr[...] = c0_ref[...]
 
     w = w_ref[...]                      # (4, F, H) int32 — loaded once (C5)
     b = b_ref[...]                      # (4, H) int32
@@ -109,6 +136,8 @@ def _lstm_seq_fxp_kernel(
     def fmul(a, bb):
         return rescale(a * bb)
 
+    t0 = tb * time_tile                    # global index of this chunk's step 0
+
     def step(t, hc):
         qh, qc = hc
         qx_t = xs_ref[:, t, :]                         # (bb, n_in) dynamic slice
@@ -123,28 +152,35 @@ def _lstm_seq_fxp_kernel(
         o_t = act_sig(z[3])
         # C2: fused elementwise tail, same saturation order as the oracle
         # (each product rescaled+saturated, then the sum saturated).
-        qc = sat(fmul(f_t, qc) + fmul(i_t, g_t))
-        qh = fmul(o_t, act_tanh(qc))
+        qc_new = sat(fmul(f_t, qc) + fmul(i_t, g_t))
+        qh_new = fmul(o_t, act_tanh(qc_new))
+        if has_tail:
+            # Padded steps past n_seq must not advance the recurrence.
+            valid = t0 + t < n_seq
+            qh_new = jnp.where(valid, qh_new, qh)
+            qc_new = jnp.where(valid, qc_new, qc)
         if return_sequence:
-            h_seq_ref[:, t, :] = qh
-        return (qh, qc)
+            h_seq_ref[:, t, :] = qh_new
+        return (qh_new, qc_new)
 
-    qh, qc = jax.lax.fori_loop(0, n_seq, step, (h0_ref[...], c0_ref[...]))
-    h_out_ref[...] = qh
-    c_out_ref[...] = qc
+    qh, qc = jax.lax.fori_loop(0, time_tile, step, (h_scr[...], c_scr[...]))
+    h_scr[...] = qh                        # state persists to the next chunk
+    c_scr[...] = qc
+    h_out_ref[...] = qh                    # same (i, 0) block every chunk:
+    c_out_ref[...] = qc                    # the final chunk's write survives
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "frac_bits", "total_bits", "sig_lo", "sig_hi", "tanh_lo", "tanh_hi",
-        "return_sequence", "block_b", "mxu_onehot", "interpret",
+        "return_sequence", "block_b", "time_tile", "mxu_onehot", "interpret",
     ),
 )
 def _lstm_seq_fxp_call(
     qxs, w4, b4, sig_table, tanh_table, qh0, qc0, *,
     frac_bits, total_bits, sig_lo, sig_hi, tanh_lo, tanh_hi,
-    return_sequence, block_b, mxu_onehot, interpret,
+    return_sequence, block_b, time_tile, mxu_onehot, interpret,
 ):
     B, T, n_in = qxs.shape
     H = w4.shape[-1]
@@ -160,10 +196,18 @@ def _lstm_seq_fxp_call(
         qc0 = jnp.pad(qc0, ((0, pad_b), (0, 0)))
     Bp = B + pad_b
 
+    tt = T if time_tile is None else min(time_tile, T)
+    pad_t = (-T) % tt
+    if pad_t:
+        qxs = jnp.pad(qxs, ((0, 0), (0, pad_t), (0, 0)))
+    Tp = T + pad_t
+    n_tt = Tp // tt
+
     qmin, qmax = -(1 << (total_bits - 1)), (1 << (total_bits - 1)) - 1
     kernel = functools.partial(
         _lstm_seq_fxp_kernel,
-        n_seq=T, frac_bits=frac_bits, qmin=qmin, qmax=qmax,
+        time_tile=tt, n_seq=T, has_tail=bool(pad_t),
+        frac_bits=frac_bits, qmin=qmin, qmax=qmax,
         sig_lo=sig_lo, sig_step=(sig_hi - sig_lo) / sig_depth, sig_depth=sig_depth,
         tanh_lo=tanh_lo, tanh_step=(tanh_hi - tanh_lo) / tanh_depth,
         tanh_depth=tanh_depth,
@@ -171,38 +215,49 @@ def _lstm_seq_fxp_call(
     )
 
     out_specs = [
-        pl.BlockSpec((bb, H), lambda i: (i, 0)),
-        pl.BlockSpec((bb, H), lambda i: (i, 0)),
+        pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
+        pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
     ]
     out_shape = [
         jax.ShapeDtypeStruct((Bp, H), jnp.int32),
         jax.ShapeDtypeStruct((Bp, H), jnp.int32),
     ]
     if return_sequence:
-        out_specs = [pl.BlockSpec((bb, T, H), lambda i: (i, 0, 0))] + out_specs
-        out_shape = [jax.ShapeDtypeStruct((Bp, T, H), jnp.int32)] + out_shape
+        out_specs = [pl.BlockSpec((bb, tt, H), lambda i, t: (i, t, 0))] + out_specs
+        out_shape = [jax.ShapeDtypeStruct((Bp, Tp, H), jnp.int32)] + out_shape
 
     outs = pl.pallas_call(
         kernel,
-        grid=(Bp // bb,),
+        # Batch tiles outer, time chunks inner: the innermost grid dimension
+        # iterates fastest, so for each batch tile the chunks run in order and
+        # the VMEM scratch legally carries h/c from chunk to chunk.
+        grid=(Bp // bb, n_tt),
         in_specs=[
-            pl.BlockSpec((bb, T, n_in), lambda i: (i, 0, 0)),
-            pl.BlockSpec((4, n_in + H, H), lambda i: (0, 0, 0)),
-            pl.BlockSpec((4, H), lambda i: (0, 0)),
-            pl.BlockSpec((1, sig_depth), lambda i: (0, 0)),
-            pl.BlockSpec((1, tanh_depth), lambda i: (0, 0)),
-            pl.BlockSpec((bb, H), lambda i: (i, 0)),
-            pl.BlockSpec((bb, H), lambda i: (i, 0)),
+            pl.BlockSpec((bb, tt, n_in), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((4, n_in + H, H), lambda i, t: (0, 0, 0)),
+            pl.BlockSpec((4, H), lambda i, t: (0, 0)),
+            pl.BlockSpec((1, sig_depth), lambda i, t: (0, 0)),
+            pl.BlockSpec((1, tanh_depth), lambda i, t: (0, 0)),
+            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
+            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((bb, H), jnp.int32),    # h carried across time chunks
+            pltpu.VMEM((bb, H), jnp.int32),    # c carried across time chunks
+        ],
+        # Neither grid dimension is safely parallelisable: time chunks carry
+        # the recurrence, and batch tiles re-initialise the shared scratch.
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
     )(qxs, w4, b4, sig_table.reshape(1, sig_depth),
       tanh_table.reshape(1, tanh_depth), qh0, qc0)
 
     if return_sequence:
         h_seq, h, c = outs
-        return h_seq[:B], h[:B], c[:B]
+        return h_seq[:B, :T], h[:B], c[:B]
     h, c = outs
     return h[:B], c[:B]
 
@@ -224,6 +279,7 @@ def lstm_sequence_fxp_pallas(
     tanh_hi: float = 4.0,
     return_sequence: bool = False,
     block_b: int = 128,
+    time_tile: int | None = None,
     mxu_onehot: bool = True,
     interpret: bool = False,
 ):
@@ -233,9 +289,15 @@ def lstm_sequence_fxp_pallas(
     blocks i,f,g,o along the last axis); it is reshaped to gate-major
     ``(4, F, H)`` for MXU-aligned per-gate tiles — integer accumulation is
     order-independent, so this preserves bit-exactness with the stacked
-    oracle.  Returns ``(qh_T, qc_T)`` int32, or ``(qh_seq, qh_T, qc_T)``
-    with ``return_sequence=True``.
+    oracle.  ``time_tile=None`` keeps the whole sequence in one VMEM block;
+    ``time_tile=tt`` streams it through VMEM in double-buffered ``tt``-step
+    chunks with ``h``/``c`` carried in scratch (see module docstring), so
+    ``n_seq`` is unbounded.  Both paths are integer-equal to
+    ``lstm_layer_fxp``.  Returns ``(qh_T, qc_T)`` int32, or
+    ``(qh_seq, qh_T, qc_T)`` with ``return_sequence=True``.
     """
+    if time_tile is not None and time_tile < 1:
+        raise ValueError(f"time_tile must be >= 1, got {time_tile}")
     F = qw.shape[0]
     H = qw.shape[1] // 4
     B = qxs.shape[0]
@@ -259,6 +321,6 @@ def lstm_sequence_fxp_pallas(
         qh0, qc0,
         frac_bits=frac_bits, total_bits=total_bits,
         sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
-        return_sequence=return_sequence, block_b=block_b,
+        return_sequence=return_sequence, block_b=block_b, time_tile=time_tile,
         mxu_onehot=mxu_onehot, interpret=interpret,
     )

@@ -1,0 +1,214 @@
+"""Multi-sensor LSTM serving engine: continuous batching over the fxp datapath.
+
+The paper deploys one sensor's quantised LSTM on one XC7S15; its follow-up
+parameterised-architecture work scales one cell design to many concurrent
+sensor workloads.  This engine is that fleet-scale restatement on TPU:
+``SensorFleetEngine`` holds the quantised parameters device-resident once
+and continuously batches many *independent* sensor streams through
+``repro.core.lstm.lstm_forward(backend="pallas_fxp")`` — the C1–C5 fused
+kernel — with per-slot ``h``/``c`` state so every stream's recurrence is
+bit-identical to running it alone.
+
+Design (mirrors ``repro.serving.engine.ServingEngine``, the LM analogue):
+
+* **slots** — a fixed batch of ``batch_slots`` lanes; each active stream owns
+  one lane's ``(h, c)`` rows.  Finished streams release their slot and new
+  streams join mid-flight (continuous batching at sensor granularity).
+* **chunked advance** — each engine step advances all active slots by the
+  same number of timesteps ``t_step``: the largest power-of-two bucket
+  ``<= min(chunk, shortest remaining stream)``.  Chunking with carried state
+  is exact because the kernel computes the recurrence step-by-step — the op
+  sequence is identical to one long call (asserted in
+  ``tests/test_serving.py``).
+* **shape-bucketed jit** — restricting ``t_step`` to power-of-two buckets
+  bounds the number of compiled shapes at ``log2(chunk) + 1`` while still
+  draining any stream length exactly (greedy binary decomposition of the
+  remainder).
+* **masked lanes** — empty slots run on zero inputs and their computed state
+  is discarded with a ``where`` on the slot axis, so occupancy never changes
+  the bits of occupied lanes.
+
+The engine is single-layer by construction: ``lstm_forward`` returns only
+the *top* layer's ``(h, c)``, so a chunked continuation of a stacked LSTM
+would lose the lower layers' carry.  Stack layers inside one call instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fxp import FxpFormat
+from repro.core.lstm import LSTMParams, lstm_forward
+
+__all__ = ["SensorStream", "SensorFleetEngine"]
+
+
+@dataclasses.dataclass
+class SensorStream:
+    """One sensor's quantised input stream and its per-step results."""
+
+    rid: int
+    qxs: np.ndarray                     # (T, n_in) int32, quantised to fmt
+    qh0: np.ndarray | None = None       # (H,) int32 initial state (default 0)
+    qc0: np.ndarray | None = None
+    h_seq: np.ndarray | None = None     # (T, H) int32, filled as chunks land
+    qh: np.ndarray | None = None        # (H,) int32 final hidden state
+    qc: np.ndarray | None = None        # (H,) int32 final cell state
+    done: bool = False
+    cursor: int = 0                     # timesteps consumed so far
+
+    @property
+    def remaining(self) -> int:
+        return len(self.qxs) - self.cursor
+
+
+class SensorFleetEngine:
+    """Slot-based continuous batching of sensor streams into ``pallas_fxp``."""
+
+    def __init__(
+        self,
+        qparams: LSTMParams,
+        fmt: FxpFormat,
+        luts: dict | None = None,
+        *,
+        batch_slots: int = 8,
+        chunk: int = 16,
+        time_tile: int | None = None,
+        backend: str = "pallas_fxp",
+        block_b: int | None = None,
+        interpret: bool | None = None,
+    ):
+        if isinstance(qparams, (list, tuple)):
+            raise ValueError(
+                "SensorFleetEngine serves a single-layer LSTM: lstm_forward "
+                "returns only the top layer's state, so a chunked multi-layer "
+                "continuation would drop the lower layers' carry")
+        if batch_slots < 1:
+            raise ValueError("batch_slots must be >= 1")
+        if chunk < 1:
+            raise ValueError("chunk must be >= 1")
+        self.fmt = fmt
+        self.slots = batch_slots
+        self.chunk = chunk
+        self.n_in = qparams.input_size
+        self.n_h = qparams.hidden_size
+        # params live on device once; every step call reuses the same buffers
+        self._w = jnp.asarray(qparams.w, jnp.int32)
+        self._b = jnp.asarray(qparams.b, jnp.int32)
+        # power-of-two t_step buckets, largest first
+        self._buckets = [1 << k for k in range(chunk.bit_length() - 1, -1, -1)
+                         if (1 << k) <= chunk]
+        self._qh = jnp.zeros((batch_slots, self.n_h), jnp.int32)
+        self._qc = jnp.zeros((batch_slots, self.n_h), jnp.int32)
+        self.active: dict[int, SensorStream] = {}
+        self.steps_run = 0              # batched kernel invocations so far
+        self.timesteps_run = 0          # sum of t_step over those invocations
+
+        fwd_kwargs = dict(
+            backend=backend, fmt=fmt, luts=luts, return_sequence=True,
+            interpret=interpret, time_tile=time_tile,
+            block_b=batch_slots if block_b is None else block_b,
+        )
+
+        def step_fn(w, b, qx, qh, qc, lane_mask):
+            seq, (h, c) = lstm_forward(LSTMParams(w, b), qx, h0=qh, c0=qc,
+                                       **fwd_kwargs)
+            keep = lane_mask[:, None]
+            return seq, jnp.where(keep, h, qh), jnp.where(keep, c, qc)
+
+        # jit re-specialises per input shape, i.e. once per t_step bucket
+        self._step = jax.jit(step_fn)
+
+    # --- scheduling ---------------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [s for s in range(self.slots) if s not in self.active]
+
+    def submit(self, stream: SensorStream) -> bool:
+        """Claim a slot for ``stream`` (mid-flight join); False if full.
+
+        Malformed streams raise immediately — before the free-slot check —
+        so a bad request can't hide in the queue until a slot frees up.
+        """
+        qxs = np.asarray(stream.qxs)
+        if not np.issubdtype(qxs.dtype, np.integer):
+            raise TypeError(
+                f"stream {stream.rid}: inputs must be integer fixed point "
+                f"(quantise with repro.core.fxp.quantize first), got {qxs.dtype}")
+        qxs = qxs.astype(np.int32)
+        if qxs.ndim != 2 or qxs.shape[1] != self.n_in:
+            raise ValueError(f"stream {stream.rid}: want (T, {self.n_in}) "
+                             f"int32 inputs, got {qxs.shape}")
+        if len(qxs) == 0:
+            raise ValueError(f"stream {stream.rid}: empty stream")
+        free = self.free_slots()
+        if not free:
+            return False
+        slot = free[0]
+        stream.qxs = qxs
+        stream.cursor = 0
+        stream.h_seq = np.zeros((len(qxs), self.n_h), np.int32)
+        h0 = np.zeros(self.n_h, np.int32) if stream.qh0 is None else np.asarray(stream.qh0, np.int32)
+        c0 = np.zeros(self.n_h, np.int32) if stream.qc0 is None else np.asarray(stream.qc0, np.int32)
+        self._qh = self._qh.at[slot].set(jnp.asarray(h0))
+        self._qc = self._qc.at[slot].set(jnp.asarray(c0))
+        self.active[slot] = stream
+        return True
+
+    def _pick_t_step(self) -> int:
+        shortest = min(s.remaining for s in self.active.values())
+        for b in self._buckets:
+            if b <= shortest:
+                return b
+        return 1  # unreachable: buckets always contain 1
+
+    def step(self) -> None:
+        """One batched kernel call: advance every active slot ``t_step``."""
+        if not self.active:
+            return
+        t_step = self._pick_t_step()
+        x = np.zeros((self.slots, t_step, self.n_in), np.int32)
+        mask = np.zeros((self.slots,), bool)
+        for slot, s in self.active.items():
+            x[slot] = s.qxs[s.cursor : s.cursor + t_step]
+            mask[slot] = True
+
+        seq, self._qh, self._qc = self._step(
+            self._w, self._b, jnp.asarray(x), self._qh, self._qc,
+            jnp.asarray(mask))
+        self.steps_run += 1
+        self.timesteps_run += t_step
+
+        seq_np = np.asarray(seq)
+        finished = []
+        for slot, s in self.active.items():
+            s.h_seq[s.cursor : s.cursor + t_step] = seq_np[slot]
+            s.cursor += t_step
+            if s.remaining == 0:
+                finished.append(slot)
+        if finished:
+            qh_np, qc_np = np.asarray(self._qh), np.asarray(self._qc)
+            for slot in finished:
+                s = self.active.pop(slot)   # slot freed for the next submit
+                s.qh = qh_np[slot].copy()
+                s.qc = qc_np[slot].copy()
+                s.done = True
+
+    def run(self, streams: list[SensorStream]) -> list[SensorStream]:
+        """Drive ``streams`` to completion with continuous batching.
+
+        Streams beyond ``batch_slots`` queue and join as slots free up; the
+        per-stream results (``h_seq``, ``qh``, ``qc``) are bit-identical to
+        ``lstm_forward(..., backend="pallas_fxp")`` on each stream alone.
+        """
+        pending = list(streams)
+        while pending or self.active:
+            while pending and self.submit(pending[0]):
+                pending.pop(0)
+            self.step()
+        return streams

@@ -1,0 +1,73 @@
+"""Regenerate the integer-exact golden fixture for the fxp LSTM datapath.
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+Rewrites ``lstm_fxp_golden.json`` next to this file.  See README.md for when
+(and when not) to regenerate.  Inputs and parameters are drawn as raw
+integers from a fixed seed — no float quantisation on the input side — so
+the fixture is reproducible everywhere; the LUT tables are float32 sampled
+once and stored verbatim (float32 -> double -> JSON round-trips exactly).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fxp import FxpFormat
+from repro.core.lstm import LSTMParams, lstm_layer_fxp
+from repro.core.lut import make_lut_pair
+
+SEED = 20260730
+B, T, N_IN, N_H = 2, 12, 3, 10
+FRAC, TOTAL = 8, 16
+LUT_DEPTH = 64
+
+OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_golden.json"
+
+
+def main() -> None:
+    fmt = FxpFormat(FRAC, TOTAL)
+    rng = np.random.default_rng(SEED)
+    # magnitudes ~ [-2, 2] in (8,16): small enough that int32 accumulation
+    # is exact, large enough to exercise the LUT range and saturation
+    qxs = rng.integers(-2 << FRAC, 2 << FRAC, (B, T, N_IN), dtype=np.int32)
+    qw = rng.integers(-1 << FRAC, 1 << FRAC, (N_IN + N_H, 4 * N_H), dtype=np.int32)
+    qb = rng.integers(-1 << (FRAC - 1), 1 << (FRAC - 1), (4 * N_H,), dtype=np.int32)
+
+    luts = make_lut_pair(LUT_DEPTH)
+    qp = LSTMParams(w=jnp.asarray(qw), b=jnp.asarray(qb))
+    h_seq, (qh, qc) = lstm_layer_fxp(qp, jnp.asarray(qxs), fmt, luts,
+                                     return_sequence=True)
+
+    def lut_entry(name):
+        table, spec = luts[name]
+        return {"lo": spec.bounds[0], "hi": spec.bounds[1],
+                "table": [float(v) for v in np.asarray(table)]}
+
+    golden = {
+        "description": "integer-exact golden for the (x,y) fxp LSTM datapath; "
+                       "regenerate with tests/golden/regen.py (see README.md)",
+        "seed": SEED,
+        "fmt": {"frac_bits": FRAC, "total_bits": TOTAL},
+        "lut": {"depth": LUT_DEPTH,
+                "sigmoid": lut_entry("sigmoid"),
+                "tanh": lut_entry("tanh")},
+        "qxs": qxs.tolist(),
+        "qw": qw.tolist(),
+        "qb": qb.tolist(),
+        "outputs": {
+            "h_seq": np.asarray(h_seq).tolist(),
+            "qh": np.asarray(qh).tolist(),
+            "qc": np.asarray(qc).tolist(),
+        },
+    }
+    OUT_PATH.write_text(json.dumps(golden, indent=1) + "\n")
+    print(f"wrote {OUT_PATH} ({OUT_PATH.stat().st_size} bytes)")
+
+
+if __name__ == "__main__":
+    main()

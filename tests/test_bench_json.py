@@ -1,0 +1,56 @@
+"""The perf-trajectory file is append-only: prior runs survive every write,
+including writes over corrupt or foreign files (ISSUE 2 satellite — history
+must never be silently overwritten)."""
+
+import json
+import pathlib
+import sys
+
+# benchmarks/ is a namespace package rooted at the repo top level
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1]))
+
+from benchmarks.run import append_run, load_trajectory  # noqa: E402
+
+ROWS_A = [{"name": "kernel/x", "us_per_call": 1.0, "derived": "a"}]
+ROWS_B = [{"name": "kernel/y", "us_per_call": 2.0, "derived": "b"}]
+
+
+def test_append_creates_then_merges(tmp_path):
+    path = str(tmp_path / "traj.json")
+    assert append_run(path, ROWS_A, only="kernels", now="t0") == 1
+    assert append_run(path, ROWS_B, only=None, now="t1") == 2
+    history = json.loads(pathlib.Path(path).read_text())
+    assert [run["time"] for run in history] == ["t0", "t1"]
+    assert history[0]["rows"] == ROWS_A          # prior entries intact
+    assert history[1]["rows"] == ROWS_B
+    assert history[0]["only"] == "kernels"
+
+
+def test_corrupt_file_is_backed_up_not_overwritten(tmp_path):
+    path = tmp_path / "traj.json"
+    path.write_text("{not json at all")
+    assert append_run(str(path), ROWS_A, now="t0") == 1
+    bak = tmp_path / "traj.json.bak"
+    assert bak.read_text() == "{not json at all"  # old bytes preserved
+    assert json.loads(path.read_text())[0]["rows"] == ROWS_A
+
+
+def test_non_list_file_is_backed_up(tmp_path):
+    path = tmp_path / "traj.json"
+    path.write_text('{"rows": []}')
+    assert load_trajectory(str(path)) == []
+    assert (tmp_path / "traj.json.bak").read_text() == '{"rows": []}'
+
+
+def test_backups_do_not_clobber_each_other(tmp_path):
+    path = tmp_path / "traj.json"
+    path.write_text("first corruption")
+    load_trajectory(str(path))
+    path.write_text("second corruption")
+    load_trajectory(str(path))
+    assert (tmp_path / "traj.json.bak").read_text() == "first corruption"
+    assert (tmp_path / "traj.json.bak1").read_text() == "second corruption"
+
+
+def test_missing_file_yields_empty(tmp_path):
+    assert load_trajectory(str(tmp_path / "nope.json")) == []

@@ -1,0 +1,86 @@
+"""Golden regression: the fxp datapath's integers, pinned to a committed file.
+
+Quantisation drift (rounding, saturation order, LUT indexing) fails as an
+exact-integer diff against ``tests/golden/lstm_fxp_golden.json`` instead of
+a tolerance failure.  Regeneration workflow: ``tests/golden/README.md``.
+"""
+
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fxp import FxpFormat
+from repro.core.lstm import LSTMParams, lstm_layer_fxp
+from repro.core.lut import LutSpec, build_table
+from repro.kernels.lstm_fxp_seq import lstm_sequence_fxp_pallas
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "lstm_fxp_golden.json"
+
+
+@pytest.fixture(scope="module")
+def golden():
+    g = json.loads(GOLDEN_PATH.read_text())
+    g["_fmt"] = FxpFormat(**g["fmt"])
+    for name in ("sigmoid", "tanh"):
+        g["lut"][name]["table_f32"] = np.asarray(
+            g["lut"][name]["table"], np.float32)
+    return g
+
+
+def _stored_luts(g):
+    """LUT dict in ``make_lut_pair`` form, from the *stored* float32 tables."""
+    out = {}
+    for name in ("sigmoid", "tanh"):
+        e = g["lut"][name]
+        spec = LutSpec(name, g["lut"]["depth"], e["lo"], e["hi"])
+        out[name] = (jnp.asarray(e["table_f32"]), spec)
+    return out
+
+
+def test_lut_tables_have_not_drifted(golden):
+    """Freshly built tables must match the committed ones; if this fails the
+    LUT construction changed — regenerate deliberately (see README)."""
+    for name in ("sigmoid", "tanh"):
+        e = golden["lut"][name]
+        spec = LutSpec(name, golden["lut"]["depth"], e["lo"], e["hi"])
+        np.testing.assert_allclose(
+            np.asarray(build_table(spec)), e["table_f32"], atol=1e-7,
+            err_msg=f"{name} LUT construction drifted from the golden file")
+
+
+def test_simulator_matches_golden_integers(golden):
+    fmt = golden["_fmt"]
+    qp = LSTMParams(w=jnp.asarray(golden["qw"], jnp.int32),
+                    b=jnp.asarray(golden["qb"], jnp.int32))
+    h_seq, (qh, qc) = lstm_layer_fxp(
+        qp, jnp.asarray(golden["qxs"], jnp.int32), fmt, _stored_luts(golden),
+        return_sequence=True)
+    out = golden["outputs"]
+    np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(out["h_seq"]))
+    np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
+    np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"]))
+
+
+@pytest.mark.parametrize("time_tile", [None, 3, 5])
+def test_pallas_kernel_matches_golden_integers(golden, time_tile):
+    """The fused kernel (both tilings: 12 % 3 == 0, 12 % 5 != 0) reproduces
+    the committed integers exactly."""
+    fmt = golden["_fmt"]
+    luts = _stored_luts(golden)
+    (sig_t, sig_s), (tanh_t, tanh_s) = luts["sigmoid"], luts["tanh"]
+    h_seq, qh, qc = lstm_sequence_fxp_pallas(
+        jnp.asarray(golden["qxs"], jnp.int32),
+        jnp.asarray(golden["qw"], jnp.int32),
+        jnp.asarray(golden["qb"], jnp.int32),
+        None, None, sig_t, tanh_t,
+        frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
+        sig_lo=sig_s.bounds[0], sig_hi=sig_s.bounds[1],
+        tanh_lo=tanh_s.bounds[0], tanh_hi=tanh_s.bounds[1],
+        return_sequence=True, block_b=2, time_tile=time_tile, interpret=True)
+    out = golden["outputs"]
+    np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(out["h_seq"]))
+    np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
+    np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"]))

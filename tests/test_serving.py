@@ -1,4 +1,9 @@
-"""Serving: prefill/decode == full forward; continuous batching token-exact."""
+"""Serving: prefill/decode == full forward; continuous batching token-exact.
+
+Two engines under test: the LM ``ServingEngine`` (token-level continuous
+batching) and the sensor-fleet ``SensorFleetEngine`` (ISSUE 2: many
+independent LSTM streams batched through the fused fxp kernel, bit-identical
+to per-stream execution)."""
 
 import jax
 import jax.numpy as jnp
@@ -6,8 +11,12 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
+from repro.core.fxp import FxpFormat, quantize
+from repro.core.lstm import LSTMParams, init_lstm_params, lstm_forward
+from repro.core.lut import make_lut_pair
 from repro.models.transformer import build, forward
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
 
 ARCHS = ["qwen3-4b", "gemma2-2b", "mamba2-780m", "jamba-1.5-large-398b",
          "granite-moe-3b-a800m"]
@@ -64,3 +73,121 @@ def test_cache_slot_lifecycle():
     assert st.free_slots() == [0, 2, 3]
     st.release(1)
     assert st.free_slots() == [0, 1, 2, 3]
+
+
+# ---------------------------------------------------------------------------
+# SensorFleetEngine: continuous batching over the fused fxp datapath
+# ---------------------------------------------------------------------------
+
+FMT = FxpFormat(8, 16)
+N_IN, N_H = 2, 12
+
+
+def _fleet_setup(key=0, depth=64):
+    params = init_lstm_params(jax.random.PRNGKey(key), N_IN, N_H)
+    qp = LSTMParams(w=quantize(params.w, FMT), b=quantize(params.b, FMT))
+    return qp, make_lut_pair(depth)
+
+
+def _make_streams(lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [SensorStream(rid=i, qxs=np.asarray(quantize(
+                jnp.asarray(rng.normal(size=(L, N_IN)).astype(np.float32)), FMT)))
+            for i, L in enumerate(lens)]
+
+
+def _per_stream_oracle(qp, luts, stream):
+    seq, (h, c) = lstm_forward(
+        qp, jnp.asarray(stream.qxs)[None], backend="pallas_fxp", fmt=FMT,
+        luts=luts, block_b=1, return_sequence=True, interpret=True)
+    return np.asarray(seq[0]), np.asarray(h[0]), np.asarray(c[0])
+
+
+def _assert_stream_exact(qp, luts, stream):
+    seq_ref, h_ref, c_ref = _per_stream_oracle(qp, luts, stream)
+    np.testing.assert_array_equal(stream.h_seq, seq_ref,
+                                  err_msg=f"stream {stream.rid} h_seq")
+    np.testing.assert_array_equal(stream.qh, h_ref)
+    np.testing.assert_array_equal(stream.qc, c_ref)
+
+
+def test_fleet_bit_identical_to_per_stream():
+    """The acceptance criterion: ragged lengths, fewer slots than streams,
+    time-tiled kernel — every stream's integers match solo execution."""
+    qp, luts = _fleet_setup()
+    streams = _make_streams([5, 9, 16, 7, 23])
+    eng = SensorFleetEngine(qp, FMT, luts, batch_slots=2, chunk=8,
+                            time_tile=4, interpret=True)
+    eng.run(streams)
+    assert all(s.done for s in streams)
+    for s in streams:
+        _assert_stream_exact(qp, luts, s)
+
+
+def test_fleet_slot_reuse_after_completion():
+    """More streams than slots: slots recycle, engine drains fully, and the
+    recycled slots' state is re-initialised per stream (fast fxp backend)."""
+    qp, luts = _fleet_setup()
+    streams = _make_streams([4, 4, 4, 6, 3, 8, 5], seed=3)
+    eng = SensorFleetEngine(qp, FMT, luts, batch_slots=3, chunk=4,
+                            backend="fxp")
+    eng.run(streams)
+    assert all(s.done for s in streams)
+    assert eng.free_slots() == [0, 1, 2] and not eng.active
+    for s in streams:
+        ref_h, _ = lstm_forward(qp, jnp.asarray(s.qxs)[None], backend="fxp",
+                                fmt=FMT, luts=luts)
+        np.testing.assert_array_equal(s.qh, np.asarray(ref_h[0]))
+
+
+def test_fleet_mid_flight_join():
+    """A stream submitted while others are mid-sequence joins a free slot and
+    still comes out bit-identical (its recurrence starts at its own t=0)."""
+    qp, luts = _fleet_setup()
+    early = _make_streams([16, 12], seed=5)
+    late = _make_streams([10], seed=6)[0]
+    late.rid = 99
+    eng = SensorFleetEngine(qp, FMT, luts, batch_slots=3, chunk=4,
+                            time_tile=2, interpret=True)
+    for s in early:
+        assert eng.submit(s)
+    eng.step()
+    eng.step()                      # early streams are now mid-flight
+    assert eng.submit(late)         # joins slot 2 while 0/1 are advancing
+    while eng.active:
+        eng.step()
+    for s in early + [late]:
+        assert s.done
+        _assert_stream_exact(qp, luts, s)
+
+
+def test_fleet_nonzero_initial_state():
+    """Per-stream h0/c0 ride through slot initialisation untouched."""
+    qp, luts = _fleet_setup()
+    (stream,) = _make_streams([7], seed=9)
+    rng = np.random.default_rng(11)
+    stream.qh0 = rng.integers(-50, 50, N_H).astype(np.int32)
+    stream.qc0 = rng.integers(-50, 50, N_H).astype(np.int32)
+    eng = SensorFleetEngine(qp, FMT, luts, batch_slots=2, chunk=4,
+                            backend="fxp")
+    eng.run([stream])
+    ref_h, ref_c = lstm_forward(
+        qp, jnp.asarray(stream.qxs)[None], backend="fxp", fmt=FMT, luts=luts,
+        h0=jnp.asarray(stream.qh0)[None], c0=jnp.asarray(stream.qc0)[None])
+    np.testing.assert_array_equal(stream.qh, np.asarray(ref_h[0]))
+    np.testing.assert_array_equal(stream.qc, np.asarray(ref_c[0]))
+
+
+def test_fleet_engine_validation():
+    qp, luts = _fleet_setup()
+    with pytest.raises(ValueError, match="single-layer"):
+        SensorFleetEngine([qp, qp], FMT, luts)
+    with pytest.raises(ValueError, match="batch_slots"):
+        SensorFleetEngine(qp, FMT, luts, batch_slots=0)
+    eng = SensorFleetEngine(qp, FMT, luts, batch_slots=1, backend="fxp")
+    with pytest.raises(ValueError, match="empty stream"):
+        eng.submit(SensorStream(rid=0, qxs=np.zeros((0, N_IN), np.int32)))
+    with pytest.raises(ValueError, match="want"):
+        eng.submit(SensorStream(rid=1, qxs=np.zeros((4, N_IN + 1), np.int32)))
+    with pytest.raises(TypeError, match="quantise"):  # floats never truncate
+        eng.submit(SensorStream(rid=2, qxs=np.zeros((4, N_IN), np.float32)))
