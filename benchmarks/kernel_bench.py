@@ -74,6 +74,35 @@ def run():
                             f"time_tile={tile}; "
                             f"model_cycles={tm.fused_fxp_sequence_cycles(shape)}"})
 
+    # 2-layer stack (ISSUE 3): the multi-layer datapath — ref-path wall time
+    # of the stacked simulator (the oracle the fused stack kernel is
+    # integer-equal to) + the analytic per-layer cycle model.
+    b, n_in, h, t = 1, 1, 20, 24
+    qxs2 = jnp.asarray(RNG.integers(-4096, 4096, (b, t, n_in)), jnp.int32)
+    qw_l0 = jnp.asarray(RNG.integers(-1024, 1024, (n_in + h, 4 * h)), jnp.int32)
+    qb_l0 = jnp.asarray(RNG.integers(-512, 512, (4 * h,)), jnp.int32)
+    qw_l1 = jnp.asarray(RNG.integers(-1024, 1024, (2 * h, 4 * h)), jnp.int32)
+    qb_l1 = jnp.asarray(RNG.integers(-512, 512, (4 * h,)), jnp.int32)
+
+    def stack2(x, w0, b0, w1, b1):
+        seq, _, _ = ref.lstm_sequence_fxp_ref(
+            x, w0, b0, None, None, sig_t, tanh_t, return_sequence=True,
+            sig_bounds=sig_s.bounds, tanh_bounds=tanh_s.bounds)
+        return ref.lstm_sequence_fxp_ref(
+            seq, w1, b1, None, None, sig_t, tanh_t,
+            sig_bounds=sig_s.bounds, tanh_bounds=tanh_s.bounds)
+
+    fn = jax.jit(stack2)
+    us = timeit(fn, qxs2, qw_l0, qb_l0, qw_l1, qb_l1, n=5)
+    shape0 = tm.LstmModelShape(n_seq=t, n_i=n_in, n_h=h, n_f=h, n_o=1)
+    shape1 = tm.LstmModelShape(n_seq=t, n_i=h, n_h=h, n_f=h, n_o=1)
+    cyc2 = (tm.fused_fxp_sequence_cycles(shape0)
+            + tm.fused_fxp_sequence_cycles(shape1))
+    rows.append({"name": "kernel/lstm_seq_fxp_2layer", "us_per_call": round(us, 1),
+                 "derived": f"(8;16) LUT256 B{b} T{t} H{h} L2; us=ref simulator; "
+                            f"stack kernel keeps the inter-layer h-seq in VMEM; "
+                            f"model_cycles={cyc2}"})
+
     # fleet-serving throughput (ISSUE 2): SensorFleetEngine continuously
     # batching ragged sensor streams; fxp backend so host wall time is the
     # compiled jnp scan, not the Python-interpret Pallas body.
@@ -87,20 +116,27 @@ def run():
                              .astype(np.int32))
                 for i, L in enumerate(r.integers(30, 61, n))]
 
-    eng = SensorFleetEngine(qp, fmt, luts, batch_slots=slots, chunk=8,
-                            backend="fxp")
-    eng.run(make_streams(slots, 1))          # warm every t_step shape bucket
-    streams = make_streams(n_streams, 2)
-    calls0 = eng.steps_run
-    t0 = time.perf_counter()
-    eng.run(streams)
-    dt = time.perf_counter() - t0
-    calls = eng.steps_run - calls0
-    sensor_steps = sum(len(s.qxs) for s in streams)
-    rows.append({"name": "serving/lstm_fleet", "us_per_call": round(dt * 1e6 / calls, 1),
-                 "derived": f"{n_streams} ragged streams via {slots} slots H{h}; "
-                            f"{calls} batched calls; "
-                            f"{sensor_steps / dt:.0f} sensor-steps/s host"})
+    def fleet_row(name, qparams, extra=""):
+        eng = SensorFleetEngine(qparams, fmt, luts, batch_slots=slots, chunk=8,
+                                backend="fxp")
+        eng.run(make_streams(slots, 1))      # warm every t_step shape bucket
+        streams = make_streams(n_streams, 2)
+        calls0 = eng.steps_run
+        t0 = time.perf_counter()
+        eng.run(streams)
+        dt = time.perf_counter() - t0
+        calls = eng.steps_run - calls0
+        sensor_steps = sum(len(s.qxs) for s in streams)
+        return {"name": name, "us_per_call": round(dt * 1e6 / calls, 1),
+                "derived": f"{n_streams} ragged streams via {slots} slots H{h}"
+                           f"{extra}; {calls} batched calls; "
+                           f"{sensor_steps / dt:.0f} sensor-steps/s host"}
+
+    rows.append(fleet_row("serving/lstm_fleet", qp))
+    # stacked fleet (ISSUE 3): all layers' (L, slots, H) state carried per step
+    rows.append(fleet_row("serving/lstm_fleet_2layer",
+                          [qp, LSTMParams(w=qw_l1, b=qb_l1)],
+                          extra=" L2 all-layer state"))
 
     spec = LutSpec("sigmoid", 256)
     table = build_table(spec)

@@ -46,11 +46,17 @@ def main(argv=None):
                          "lockstep batch")
     ap.add_argument("--slots", type=int, default=16,
                     help="engine batch slots (--engine only)")
+    ap.add_argument("--layers", type=int, default=1,
+                    help="stacked LSTM depth: L > 1 serves all layers' "
+                         "(h, c) per slot; on pallas_fxp the stack runs as "
+                         "one fused kernel with the inter-layer sequence "
+                         "resident in VMEM")
     args = ap.parse_args(argv)
 
     # --- train on one sensor (paper) ---------------------------------------
     data = make_traffic_dataset(seed=0)
-    params, _ = train_traffic_model(data, epochs=args.epochs)
+    params, _ = train_traffic_model(data, epochs=args.epochs,
+                                    num_layers=args.layers)
     print(f"float test MSE: {evaluate_mse(params, data.x_test, data.y_test):.5f}")
 
     # --- PTQ sweep: pick the paper config -----------------------------------
@@ -101,8 +107,11 @@ def serve_fleet_engine(qmodel, args):
     fmt = qmodel.fmt
     luts = make_lut_pair(qmodel.lut_depth) if qmodel.lut_depth else None
     rng = np.random.default_rng(0)
+    n_layers = (len(qmodel.lstm) if isinstance(qmodel.lstm, (list, tuple))
+                else 1)
     print(f"fleet engine: {args.sensors} ragged sensor streams via "
-          f"{args.slots} slots, backend={args.backend!r}")
+          f"{args.slots} slots, backend={args.backend!r}, "
+          f"{n_layers}-layer stack (all layers' state carried per slot)")
 
     streams = []
     for s in range(args.sensors):
@@ -119,8 +128,10 @@ def serve_fleet_engine(qmodel, args):
     eng.run(streams)
     dt = time.time() - t0
 
-    # dense head on each stream's final hidden state, then dequantise
-    qh = jnp.asarray(np.stack([s.qh for s in streams]))
+    # dense head on each stream's TOP-layer final hidden state, then
+    # dequantise (multi-layer engines hand back (L, H) per stream)
+    qh = jnp.asarray(np.stack([s.qh if s.qh.ndim == 1 else s.qh[-1]
+                               for s in streams]))
     qy = fxp_mod.fxp_matmul(qh, qmodel.dense_w, fmt, bias=qmodel.dense_b)
     preds = np.asarray(fxp_mod.dequantize(qy, fmt))[:, 0]
     steps = sum(len(s.qxs) for s in streams)

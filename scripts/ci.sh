@@ -8,7 +8,11 @@ set -eu
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 case "${1:-all}" in
-  fast) exec python -m pytest -x -q -m "not slow" ;;
+  # fast runs the HLO-analyzer suite explicitly and un-deselected first, so
+  # the roofline parser can never silently regress to its seed-broken state
+  # (flops=0.0, ~6x traffic overcount) even if those tests grow markers.
+  fast) python -m pytest -x -q tests/test_hlo_analysis.py && \
+        exec python -m pytest -x -q -m "not slow" ;;
   slow) exec python -m pytest -q -m slow ;;
   all)  exec python -m pytest -x -q ;;
   *) echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;

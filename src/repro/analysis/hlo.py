@@ -74,6 +74,31 @@ def _shape_dims(type_str: str):
     return dt, [int(d) for d in dims.split(",") if d]
 
 
+def _split_operands(s: str) -> list[str]:
+    """Split an operand list on *top-level* commas only.
+
+    Shape strings themselves contain commas (``f32[16,32]{1,0}``), so a naive
+    ``s.split(",")`` shears every multi-dim operand in half — the exact bug
+    that made ``_dot_flops`` return 0.0 against current XLA text.  Track
+    ``[]``/``{}``/``()`` nesting depth instead.
+    """
+    out, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    tail = "".join(cur).strip()
+    if tail:
+        out.append(tail)
+    return out
+
+
 @dataclasses.dataclass
 class _Comp:
     name: str
@@ -140,7 +165,8 @@ def _dot_flops(rhs: str, shapes: dict[str, str]) -> float:
     if not m:
         return 0.0
     # first operand type: inline "f32[a,b]{..} %name" or lookup by name
-    first_arg = m.group(1).split(",")[0].strip()
+    operands = _split_operands(m.group(1))
+    first_arg = operands[0] if operands else ""
     dt, lhs_dims = _shape_dims(first_arg)
     if lhs_dims is None:
         name_m = re.search(r"%([\w.\-]+)", first_arg)
@@ -181,10 +207,15 @@ def _analyze_comp(comp: _Comp, shapes: dict[str, str]):
         if op_kind in ("parameter", "constant", "tuple", "get-tuple-element",
                        "bitcast"):
             pass
+        elif op_kind in ("while", "conditional"):
+            # control flow: the operand tuple aliases the carried state
+            # (donated buffers) — per-iteration traffic is charged inside the
+            # body/cond/branch computations, not at the call site
+            pass
         elif op_kind == "dynamic-update-slice":
             # in-place slice write: traffic = the written slice (2nd operand)
             # x2 (read + write), NOT the full accumulator buffer
-            ops_list = call_m.group(1).split(",") if call_m else []
+            ops_list = _split_operands(call_m.group(1)) if call_m else []
             upd = _shape_bytes(ops_list[1]) if len(ops_list) > 1 else 0
             comp.traffic += 2 * upd
         elif op_kind in ("dynamic-slice", "slice", "gather"):
@@ -203,8 +234,7 @@ def _analyze_comp(comp: _Comp, shapes: dict[str, str]):
             out_type = stripped.split(" ", 1)[0].split("{")[0]
             matched = 0
             rest = 0
-            for opnd in (call_m.group(1).split(",") if call_m else []):
-                opnd = opnd.strip()
+            for opnd in (_split_operands(call_m.group(1)) if call_m else []):
                 type_str = opnd
                 if not _SHAPE_RE.search(opnd):
                     nm2 = re.search(r"%([\w.\-]+)", opnd)
@@ -216,7 +246,12 @@ def _analyze_comp(comp: _Comp, shapes: dict[str, str]):
                 else:
                     rest += b
             if matched:
-                comp.alias_bytes += matched + out_b
+                # The fusion's output aliases the accumulator operand (XLA
+                # updates loop-carried DUS accumulators in place), so the
+                # whole streamed set costs ONE pass over each matched buffer
+                # across the loop — charging out_b on top double-counts the
+                # write pass (the 25.2 MB-vs-6-pass seed failure).
+                comp.alias_bytes += matched
                 comp.traffic += rest
             else:
                 comp.traffic += out_b + opnd_b

@@ -73,10 +73,22 @@ bottleneck story.  Float backends take float ``xs``; fxp backends take int32
 the tiled path at ``n_seq >> time_tile``, is locked down by
 ``tests/test_backend_equiv.py`` and the golden fixtures in ``tests/golden/``.
 
+Multi-layer state (``return_state``): ``lstm_forward(...,
+return_state="all")`` returns EVERY layer's final ``(h, c)`` as per-layer
+lists (default ``"top"`` keeps the historical top-layer pair), and
+``h0``/``c0`` accept per-layer lists or a stacked ``(L, ...)`` array — so a
+chunked continuation of a *stacked* LSTM is exact on every backend.  On
+``"pallas_fxp"``, a uniform-``H`` stack additionally fuses into ONE kernel
+(``lstm_sequence_fxp_stack_pallas``): the per-step loop chains the layers,
+keeping the inter-layer hidden sequence in VMEM instead of bouncing it
+through HBM between layers.
+
 Fleet serving: ``repro.serving.lstm_engine.SensorFleetEngine`` continuously
-batches many independent sensor streams through ``lstm_forward(...,
-backend="pallas_fxp")`` with per-slot ``h0``/``c0`` carry — bit-identical to
-running each stream alone (``tests/test_serving.py``).
+batches many independent sensor streams — single-layer or stacked (state
+``(L, slots, H)``, carried via ``return_state="all"``) — through
+``lstm_forward(..., backend="pallas_fxp")`` with per-slot ``h0``/``c0``
+carry, bit-identical to running each stream alone
+(``tests/test_serving.py``).
 """
 
 from __future__ import annotations
@@ -428,6 +440,7 @@ def lstm_forward(
     h0=None,
     c0=None,
     return_sequence: bool = False,
+    return_state: str = "top",
     num_layers: int | None = None,
     interpret: bool | None = None,
     block_b: int = 128,
@@ -439,8 +452,11 @@ def lstm_forward(
     Parameters
     ----------
     params : ``LSTMParams`` or a list of them (one per stacked layer; layer
-        ``l``'s ``input_size`` must equal layer ``l-1``'s ``hidden_size`` —
-        inter-layer traffic is the full hidden-state sequence).
+        ``l``'s ``input_size`` must equal layer ``l-1``'s ``hidden_size``).
+        Uniform-``H`` stacks on ``"pallas_fxp"`` run as ONE kernel with the
+        inter-layer hidden sequence resident in VMEM
+        (``lstm_sequence_fxp_stack_pallas``); every other case runs layer by
+        layer, where inter-layer traffic is the full hidden-state sequence.
     xs : ``(B, n_seq, n_in)`` or ``(n_seq, n_in)``.  Float for the float
         backends; int32 fixed point (already quantised to ``fmt``) for
         ``"fxp"``/``"pallas_fxp"``.
@@ -448,8 +464,14 @@ def lstm_forward(
     fmt, luts : fixed-point format + optional ``make_lut_pair`` tables
         (fxp backends only).
     h0, c0 : initial state — a single ``(B, n_h)`` array (applied to layer 0
-        of a single-layer stack) or a per-layer list; default zeros.
+        of a single-layer stack), a per-layer list, or a stacked ``(L, ...)``
+        array (multi-layer, uniform ``H``); default zeros.
     return_sequence : also return the top layer's per-step hidden states.
+    return_state : ``"top"`` (default) returns the top layer's ``(h_T, c_T)``
+        — backward compatible; ``"all"`` returns per-layer lists
+        ``([h_T^0..h_T^{L-1}], [c_T^0..c_T^{L-1}])`` so a chunked
+        continuation of a *stacked* LSTM is exact: feed the lists back as
+        ``h0``/``c0`` of the next chunk and the integers match one long call.
     num_layers : optional cross-check against ``len(params)``.
     interpret : Pallas interpret mode; ``None`` = auto (compiled on TPU,
         interpret elsewhere so every backend runs everywhere).
@@ -458,12 +480,15 @@ def lstm_forward(
         double-buffered ``time_tile``-step chunks (``None`` = whole sequence
         in one block); integer-equal either way.  See the module docstring.
 
-    Returns ``(h_T, c_T)`` of the top layer, or
-    ``(h_seq, (h_T, c_T))`` when ``return_sequence`` is set — the same
-    convention as ``lstm_layer``.
+    Returns ``(h_T, c_T)`` (top layer, or per-layer lists with
+    ``return_state="all"``), or ``(h_seq, (h_T, c_T))`` when
+    ``return_sequence`` is set — the same convention as ``lstm_layer``.
     """
     if backend not in LSTM_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {LSTM_BACKENDS}")
+    if return_state not in ("top", "all"):
+        raise ValueError(
+            f"return_state must be 'top' or 'all', got {return_state!r}")
 
     layers = list(params) if isinstance(params, (list, tuple)) else [params]
     if num_layers is not None and num_layers != len(layers):
@@ -484,6 +509,7 @@ def lstm_forward(
     # The Pallas kernels take a single (B, T, n_in) batch axis; fold extra
     # leading dims into it (and unfold on the way out) so every backend
     # accepts the same (..., n_seq, n_in) inputs.
+    xs_ndim = jnp.asarray(xs).ndim      # pre-fold, for state_for's rank check
     squeeze_batch = False
     lead_shape = None
     if backend in _PALLAS_BACKENDS:
@@ -503,30 +529,71 @@ def lstm_forward(
         if isinstance(s, (list, tuple)):
             s = s[layer_idx]
         elif len(layers) > 1:
-            raise ValueError("multi-layer stacks take per-layer h0/c0 lists")
+            # A stacked array has one MORE axis than a per-layer state (whose
+            # rank matches xs minus the time axis plus H, i.e. xs.ndim - 1),
+            # so the rank check keeps a (B, H) single-layer-convention array
+            # from being silently mistaken for (L, ...) when B == L.
+            s = jnp.asarray(s)
+            if s.ndim != xs_ndim or s.shape[0] != len(layers):
+                raise ValueError(
+                    "multi-layer stacks take per-layer h0/c0 lists or a "
+                    f"stacked ({len(layers)}, ..., n_h) array of rank "
+                    f"{xs_ndim}, got shape {s.shape}")
+            s = s[layer_idx]
         if squeeze_batch:
             return s[None]
         if lead_shape is not None:
             return s.reshape(-1, s.shape[-1])
         return s
 
-    h = c = None
-    for li, p in enumerate(layers):
-        need_seq = return_sequence or li < len(layers) - 1
-        seq, h, c = _forward_one_layer(
-            p, xs, state_for(li, h0), state_for(li, c0), need_seq, backend,
-            fmt, luts, interpret, block_b, block_h, time_tile)
-        if need_seq:
+    # Uniform-H stacks on pallas_fxp fuse into ONE kernel: the per-step loop
+    # chains the layers, so the inter-layer hidden-state sequence never
+    # bounces through HBM between layers (see kernels/lstm_fxp_seq.py).
+    hidden_sizes = {p.hidden_size for p in layers}
+    if backend == "pallas_fxp" and len(layers) > 1 and len(hidden_sizes) == 1:
+        from repro.kernels.lstm_fxp_seq import lstm_sequence_fxp_stack_pallas
+
+        def stacked_state(s):
+            if s is None:
+                return None
+            return jnp.stack([state_for(li, s) for li in range(len(layers))])
+
+        out = lstm_sequence_fxp_stack_pallas(
+            xs, [p.w for p in layers], [p.b for p in layers],
+            stacked_state(h0), stacked_state(c0),
+            frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
+            return_sequence=return_sequence, block_b=block_b,
+            time_tile=time_tile, interpret=interpret,
+            **_lut_kernel_args(luts),
+        )
+        if return_sequence:
+            seq, h_all, c_all = out
             xs = seq
+        else:
+            h_all, c_all = out
+        hs, cs = list(h_all), list(c_all)
+    else:
+        hs, cs = [], []
+        for li, p in enumerate(layers):
+            need_seq = return_sequence or li < len(layers) - 1
+            seq, h, c = _forward_one_layer(
+                p, xs, state_for(li, h0), state_for(li, c0), need_seq, backend,
+                fmt, luts, interpret, block_b, block_h, time_tile)
+            hs.append(h)
+            cs.append(c)
+            if need_seq:
+                xs = seq
 
     if squeeze_batch:
-        h, c = h[0], c[0]
+        hs = [h[0] for h in hs]
+        cs = [c[0] for c in cs]
         xs = xs[0] if return_sequence else xs
     elif lead_shape is not None:
-        h = h.reshape(*lead_shape, h.shape[-1])
-        c = c.reshape(*lead_shape, c.shape[-1])
+        hs = [h.reshape(*lead_shape, h.shape[-1]) for h in hs]
+        cs = [c.reshape(*lead_shape, c.shape[-1]) for c in cs]
         if return_sequence:
             xs = xs.reshape(*lead_shape, *xs.shape[-2:])
+    state = (hs, cs) if return_state == "all" else (hs[-1], cs[-1])
     if return_sequence:
-        return xs, (h, c)
-    return h, c
+        return xs, state
+    return state

@@ -35,9 +35,13 @@ __all__ = [
 
 @dataclasses.dataclass
 class QuantizedLstmModel:
-    """Fixed-point snapshot of the traffic model (LSTM + dense head)."""
+    """Fixed-point snapshot of the traffic model (LSTM + dense head).
 
-    lstm: LSTMParams            # int32 storage of (x,y) fixed point
+    ``lstm`` is a bare ``LSTMParams`` for the paper's single-layer model, or
+    a per-layer list for stacked models — either form flows straight into
+    ``lstm_forward`` and ``SensorFleetEngine``."""
+
+    lstm: Any                   # LSTMParams or [LSTMParams], int32 (x,y) storage
     dense_w: jax.Array
     dense_b: jax.Array
     fmt: FxpFormat
@@ -58,12 +62,16 @@ jax.tree_util.register_pytree_node(
 
 def quantize_lstm_model(params: Any, fmt: FxpFormat, lut_depth: int | None) -> QuantizedLstmModel:
     """PTQ of the trained float model (params as produced by
-    ``repro.models.lstm_model.init_traffic_model``)."""
+    ``repro.models.lstm_model.init_traffic_model``; single-layer or
+    stacked)."""
+    def q_layer(p: LSTMParams) -> LSTMParams:
+        return LSTMParams(w=fxp_mod.quantize(p.w, fmt),
+                          b=fxp_mod.quantize(p.b, fmt))
+
+    lstm = params["lstm"]
     return QuantizedLstmModel(
-        lstm=LSTMParams(
-            w=fxp_mod.quantize(params["lstm"].w, fmt),
-            b=fxp_mod.quantize(params["lstm"].b, fmt),
-        ),
+        lstm=([q_layer(p) for p in lstm] if isinstance(lstm, (list, tuple))
+              else q_layer(lstm)),
         dense_w=fxp_mod.quantize(params["dense"]["w"], fmt),
         dense_b=fxp_mod.quantize(params["dense"]["b"], fmt),
         fmt=fmt,

@@ -1,5 +1,6 @@
 """Fused fixed-point LSTM *sequence* — Pallas TPU kernel (paper C1–C5 in one
-kernel), with double-buffered time-tiling for arbitrarily long sequences.
+kernel), with double-buffered time-tiling for arbitrarily long sequences and
+in-VMEM multi-layer stacking.
 
 This is the bitstream-exact datapath run the way the FPGA actually runs it:
 the paper's 17534 inf/s come from a design where the stacked-gate weights,
@@ -9,37 +10,48 @@ BRAM between recursions.  The pure-jnp path ``repro.core.lstm.lstm_layer_fxp``
 simulates the same arithmetic but scans at the Python/XLA level, paying a
 per-step HBM round-trip — exactly the throughput bottleneck the paper removes.
 
-One ``pallas_call`` performs all ``n_seq`` steps:
+One ``pallas_call`` performs all ``n_seq`` steps of all ``L`` layers:
 
-* int32 stacked-gate weights ``(4, F, H)``, biases and both LUT tables are
+* int32 stacked-gate weights ``(L*4, F, H)``, biases and both LUT tables are
   loaded into VMEM once (C5);
-* each step is one int32-accumulate matmul over ``[x_t, h]`` (C1), a
-  round-half-up shift + saturate back to the ``(x, y)`` format (C4), the
-  LUT gather for all four gates (C3, as a one-hot MXU contraction), and the
-  fused elementwise tail (C2) — all against VMEM-resident tiles;
-* ``h``/``c`` are carried as int32, so HBM traffic for state is O(1) in
-  sequence length, matching the float ``lstm_sequence_pallas``.
+* each step is, per layer, one int32-accumulate matmul over ``[x_t, h]``
+  (C1), a round-half-up shift + saturate back to the ``(x, y)`` format (C4),
+  the LUT gather for all four gates (C3, as a one-hot MXU contraction), and
+  the fused elementwise tail (C2) — all against VMEM-resident tiles;
+* ``h``/``c`` of **every** layer are carried as int32 in VMEM, so HBM traffic
+  for state is O(1) in sequence length, matching ``lstm_sequence_pallas``.
+
+Multi-layer stacking (``lstm_sequence_fxp_stack_pallas``): a stacked LSTM's
+dataflow lets layer ``l`` consume layer ``l-1``'s hidden state *of the same
+timestep*, so the kernel chains all ``L`` layers inside the per-step loop —
+the inter-layer hidden-state sequence is never materialised in HBM (the naive
+alternative runs the single-layer kernel ``L`` times and bounces the full
+``(B, T, H)`` sequence through HBM between layers).  Layers may have
+different input widths (layer 0: ``n_in``, layers >= 1: ``H``); weight rows
+are zero-padded to a common ``F = max(n_in, H) + H`` — zero rows against
+zero-padded inputs add nothing to the int32 accumulators, preserving
+bit-exactness.
 
 Time-tiling (``time_tile``): with the default ``time_tile=None`` the whole
 ``(bb, T, n_in)`` input block must fit in one VMEM window, which bounds
 ``n_seq``.  Passing ``time_tile=tt`` adds a second (inner, sequential) grid
 dimension over ``ceil(T / tt)`` time chunks: each grid step sees only a
-``(bb, tt, n_in)`` input window while ``h``/``c`` persist across chunks in
-VMEM *scratch* (the BRAM analogue — state never round-trips HBM between
-chunks).  Because consecutive grid steps read consecutive input windows,
-Pallas's pipeline emitter overlaps the DMA of chunk ``t+1`` with the compute
-of chunk ``t`` (double buffering), so the recurrence streams sequences of
-any length at the single-block kernel's steady-state rate.  A ragged tail
-(``T % tt != 0``) is padded and masked inside the kernel, preserving
-integer-exactness.
+``(bb, tt, n_in)`` input window while every layer's ``h``/``c`` persist
+across chunks in VMEM *scratch* (the BRAM analogue — state never round-trips
+HBM between chunks).  Because consecutive grid steps read consecutive input
+windows, Pallas's pipeline emitter overlaps the DMA of chunk ``t+1`` with the
+compute of chunk ``t`` (double buffering), so the recurrence streams
+sequences of any length at the single-block kernel's steady-state rate.  A
+ragged tail (``T % tt != 0``) is padded and masked inside the kernel,
+preserving integer-exactness.
 
 Bit-exactness: every operation replicates ``repro.core.fxp`` /
 ``repro.core.lut`` arithmetic operation-for-operation (same rounding mode,
 same saturation points, same float32 index computation), so in interpret
-mode the kernel is *integer-equal* to ``lstm_layer_fxp`` — asserted across
-the paper's Fig. 6 ``(x, y)`` sweep and Table 1 LUT depths in
-``tests/test_lstm_forward.py``, and across the backend × shape × time-tile
-product in ``tests/test_backend_equiv.py``.  Oracle:
+mode the kernel is *integer-equal* to ``lstm_layer_fxp`` (layer by layer for
+stacks) — asserted across the paper's Fig. 6 ``(x, y)`` sweep and Table 1
+LUT depths in ``tests/test_lstm_forward.py``, and across the backend x shape
+x time-tile x depth product in ``tests/test_backend_equiv.py``.  Oracle:
 ``repro.kernels.ref.lstm_sequence_fxp_ref``.
 """
 
@@ -52,7 +64,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["lstm_sequence_fxp_pallas"]
+__all__ = ["lstm_sequence_fxp_pallas", "lstm_sequence_fxp_stack_pallas"]
 
 
 def _int_dot(a, b):
@@ -64,6 +76,7 @@ def _int_dot(a, b):
 def _lstm_seq_fxp_kernel(
     xs_ref, w_ref, b_ref, sig_ref, tanh_ref, h0_ref, c0_ref,
     *refs,
+    n_layers: int,
     time_tile: int,
     n_seq: int,
     has_tail: bool,
@@ -80,7 +93,7 @@ def _lstm_seq_fxp_kernel(
     mxu_onehot: bool,
     return_sequence: bool,
 ):
-    h_scr, c_scr = refs[-2], refs[-1]
+    h_scr, c_scr = refs[-2], refs[-1]       # (L, bb, H): every layer's state
     out_refs = refs[:-2]
     if return_sequence:
         h_seq_ref, h_out_ref, c_out_ref = out_refs
@@ -94,8 +107,10 @@ def _lstm_seq_fxp_kernel(
         h_scr[...] = h0_ref[...]
         c_scr[...] = c0_ref[...]
 
-    w = w_ref[...]                      # (4, F, H) int32 — loaded once (C5)
-    b = b_ref[...]                      # (4, H) int32
+    w = w_ref[...]                      # (L*4, F, H) int32 — loaded once (C5)
+    b = b_ref[...]                      # (L*4, H) int32
+    F, H = w.shape[1], w.shape[2]
+    in_w = F - H                        # padded input width (= n_in for L=1)
     scale = 2.0 ** (-frac_bits)         # one LSB, same constant fxp.dequantize uses
     half = (1 << (frac_bits - 1)) if frac_bits > 0 else 0
 
@@ -139,35 +154,47 @@ def _lstm_seq_fxp_kernel(
     t0 = tb * time_tile                    # global index of this chunk's step 0
 
     def step(t, hc):
-        qh, qc = hc
-        qx_t = xs_ref[:, t, :]                         # (bb, n_in) dynamic slice
-        qxh = jnp.concatenate([qx_t, qh], axis=-1)     # (bb, F)
-        # C1: stacked-gate matmul — per-gate int32 accumulators are identical
-        # to the (F, 4H) stacked form, so gate-major keeps bit-exactness.
-        z = [rescale(_int_dot(qxh, w[g]) + (b[g][None, :] << frac_bits))
-             for g in range(4)]
-        i_t = act_sig(z[0])
-        f_t = act_sig(z[1])
-        g_t = act_tanh(z[2])
-        o_t = act_sig(z[3])
-        # C2: fused elementwise tail, same saturation order as the oracle
-        # (each product rescaled+saturated, then the sum saturated).
-        qc_new = sat(fmul(f_t, qc) + fmul(i_t, g_t))
-        qh_new = fmul(o_t, act_tanh(qc_new))
-        if has_tail:
-            # Padded steps past n_seq must not advance the recurrence.
-            valid = t0 + t < n_seq
-            qh_new = jnp.where(valid, qh_new, qh)
-            qc_new = jnp.where(valid, qc_new, qc)
+        hs, cs = hc                                    # (L, bb, H) each
+        inp = xs_ref[:, t, :]                          # (bb, in_w) dynamic slice
+        new_h, new_c = [], []
+        for l in range(n_layers):                      # unrolled at trace time
+            qh, qc = hs[l], cs[l]
+            qxh = jnp.concatenate([inp, qh], axis=-1)  # (bb, F)
+            # C1: stacked-gate matmul — per-gate int32 accumulators are
+            # identical to the (F, 4H) stacked form, so gate-major keeps
+            # bit-exactness; zero-padded rows x zero-padded inputs add 0.
+            z = [rescale(_int_dot(qxh, w[4 * l + g])
+                         + (b[4 * l + g][None, :] << frac_bits))
+                 for g in range(4)]
+            i_t = act_sig(z[0])
+            f_t = act_sig(z[1])
+            g_t = act_tanh(z[2])
+            o_t = act_sig(z[3])
+            # C2: fused elementwise tail, same saturation order as the oracle
+            # (each product rescaled+saturated, then the sum saturated).
+            qc_new = sat(fmul(f_t, qc) + fmul(i_t, g_t))
+            qh_new = fmul(o_t, act_tanh(qc_new))
+            if has_tail:
+                # Padded steps past n_seq must not advance the recurrence.
+                valid = t0 + t < n_seq
+                qh_new = jnp.where(valid, qh_new, qh)
+                qc_new = jnp.where(valid, qc_new, qc)
+            new_h.append(qh_new)
+            new_c.append(qc_new)
+            if l + 1 < n_layers:
+                # Layer l's fresh h_t is layer l+1's input AT THIS TIMESTEP —
+                # it stays in VMEM/registers, never visiting HBM.
+                inp = (qh_new if H == in_w else
+                       jnp.pad(qh_new, ((0, 0), (0, in_w - H))))
         if return_sequence:
-            h_seq_ref[:, t, :] = qh_new
-        return (qh_new, qc_new)
+            h_seq_ref[:, t, :] = new_h[-1]             # top layer only
+        return jnp.stack(new_h), jnp.stack(new_c)
 
-    qh, qc = jax.lax.fori_loop(0, time_tile, step, (h_scr[...], c_scr[...]))
-    h_scr[...] = qh                        # state persists to the next chunk
-    c_scr[...] = qc
-    h_out_ref[...] = qh                    # same (i, 0) block every chunk:
-    c_out_ref[...] = qc                    # the final chunk's write survives
+    hs, cs = jax.lax.fori_loop(0, time_tile, step, (h_scr[...], c_scr[...]))
+    h_scr[...] = hs                        # state persists to the next chunk
+    c_scr[...] = cs
+    h_out_ref[...] = hs                    # same (i, 0) block every chunk:
+    c_out_ref[...] = cs                    # the final chunk's write survives
 
 
 @functools.partial(
@@ -182,8 +209,9 @@ def _lstm_seq_fxp_call(
     frac_bits, total_bits, sig_lo, sig_hi, tanh_lo, tanh_hi,
     return_sequence, block_b, time_tile, mxu_onehot, interpret,
 ):
-    B, T, n_in = qxs.shape
-    H = w4.shape[-1]
+    B, T, in_w = qxs.shape
+    L4, F, H = w4.shape
+    L = L4 // 4
     use_lut = sig_table.shape[0] > 1 or tanh_table.shape[0] > 1
     sig_depth = sig_table.shape[0]
     tanh_depth = tanh_table.shape[0]
@@ -192,8 +220,8 @@ def _lstm_seq_fxp_call(
     pad_b = (-B) % bb
     if pad_b:
         qxs = jnp.pad(qxs, ((0, pad_b), (0, 0), (0, 0)))
-        qh0 = jnp.pad(qh0, ((0, pad_b), (0, 0)))
-        qc0 = jnp.pad(qc0, ((0, pad_b), (0, 0)))
+        qh0 = jnp.pad(qh0, ((0, 0), (0, pad_b), (0, 0)))
+        qc0 = jnp.pad(qc0, ((0, 0), (0, pad_b), (0, 0)))
     Bp = B + pad_b
 
     tt = T if time_tile is None else min(time_tile, T)
@@ -206,7 +234,7 @@ def _lstm_seq_fxp_call(
     qmin, qmax = -(1 << (total_bits - 1)), (1 << (total_bits - 1)) - 1
     kernel = functools.partial(
         _lstm_seq_fxp_kernel,
-        time_tile=tt, n_seq=T, has_tail=bool(pad_t),
+        n_layers=L, time_tile=tt, n_seq=T, has_tail=bool(pad_t),
         frac_bits=frac_bits, qmin=qmin, qmax=qmax,
         sig_lo=sig_lo, sig_step=(sig_hi - sig_lo) / sig_depth, sig_depth=sig_depth,
         tanh_lo=tanh_lo, tanh_step=(tanh_hi - tanh_lo) / tanh_depth,
@@ -215,12 +243,12 @@ def _lstm_seq_fxp_call(
     )
 
     out_specs = [
-        pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
-        pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
+        pl.BlockSpec((L, bb, H), lambda i, t: (0, i, 0)),
+        pl.BlockSpec((L, bb, H), lambda i, t: (0, i, 0)),
     ]
     out_shape = [
-        jax.ShapeDtypeStruct((Bp, H), jnp.int32),
-        jax.ShapeDtypeStruct((Bp, H), jnp.int32),
+        jax.ShapeDtypeStruct((L, Bp, H), jnp.int32),
+        jax.ShapeDtypeStruct((L, Bp, H), jnp.int32),
     ]
     if return_sequence:
         out_specs = [pl.BlockSpec((bb, tt, H), lambda i, t: (i, t, 0))] + out_specs
@@ -233,19 +261,19 @@ def _lstm_seq_fxp_call(
         # the VMEM scratch legally carries h/c from chunk to chunk.
         grid=(Bp // bb, n_tt),
         in_specs=[
-            pl.BlockSpec((bb, tt, n_in), lambda i, t: (i, t, 0)),
-            pl.BlockSpec((4, n_in + H, H), lambda i, t: (0, 0, 0)),
-            pl.BlockSpec((4, H), lambda i, t: (0, 0)),
+            pl.BlockSpec((bb, tt, in_w), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((L4, F, H), lambda i, t: (0, 0, 0)),
+            pl.BlockSpec((L4, H), lambda i, t: (0, 0)),
             pl.BlockSpec((1, sig_depth), lambda i, t: (0, 0)),
             pl.BlockSpec((1, tanh_depth), lambda i, t: (0, 0)),
-            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
-            pl.BlockSpec((bb, H), lambda i, t: (i, 0)),
+            pl.BlockSpec((L, bb, H), lambda i, t: (0, i, 0)),
+            pl.BlockSpec((L, bb, H), lambda i, t: (0, i, 0)),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((bb, H), jnp.int32),    # h carried across time chunks
-            pltpu.VMEM((bb, H), jnp.int32),    # c carried across time chunks
+            pltpu.VMEM((L, bb, H), jnp.int32),  # h, all layers, across chunks
+            pltpu.VMEM((L, bb, H), jnp.int32),  # c, all layers, across chunks
         ],
         # Neither grid dimension is safely parallelisable: time chunks carry
         # the recurrence, and batch tiles re-initialise the shared scratch.
@@ -257,9 +285,104 @@ def _lstm_seq_fxp_call(
 
     if return_sequence:
         h_seq, h, c = outs
-        return h_seq[:B, :T], h[:B], c[:B]
+        return h_seq[:B, :T], h[:, :B], c[:, :B]
     h, c = outs
-    return h[:B], c[:B]
+    return h[:, :B], c[:, :B]
+
+
+def _pack_gate_major(qw, qb, n_in_l, in_w, H):
+    """One layer's stacked ``(F_l, 4H)`` weights -> gate-major ``(4, F, H)``
+    with the input rows at ``[0:n_in_l]`` and the hidden rows at
+    ``[in_w:in_w+H]``; the gap rows are zero (they meet zero-padded inputs)."""
+    F_l = qw.shape[0]
+    wl = qw.reshape(F_l, 4, H).transpose(1, 0, 2)           # (4, F_l, H)
+    if n_in_l == in_w:
+        packed = wl
+    else:
+        packed = jnp.zeros((4, in_w + H, H), jnp.int32)
+        packed = packed.at[:, :n_in_l, :].set(wl[:, :n_in_l, :])
+        packed = packed.at[:, in_w:, :].set(wl[:, n_in_l:, :])
+    return packed, qb.reshape(4, H)
+
+
+def lstm_sequence_fxp_stack_pallas(
+    qxs: jax.Array,                 # (B, T, n_in) int32 fixed point
+    qws,                            # length-L sequence of (F_l, 4H) int32
+    qbs,                            # length-L sequence of (4H,) int32
+    qh0: jax.Array | None = None,   # (L, B, H) int32
+    qc0: jax.Array | None = None,   # (L, B, H) int32
+    sig_table: jax.Array | None = None,   # (depth,) float32 LUT, None = exact sigmoid
+    tanh_table: jax.Array | None = None,  # (depth,) float32 LUT, None = exact tanh
+    *,
+    frac_bits: int = 8,
+    total_bits: int = 16,
+    sig_lo: float = -8.0,
+    sig_hi: float = 8.0,
+    tanh_lo: float = -4.0,
+    tanh_hi: float = 4.0,
+    return_sequence: bool = False,
+    block_b: int = 128,
+    time_tile: int | None = None,
+    mxu_onehot: bool = True,
+    interpret: bool = False,
+):
+    """Run an ``L``-layer quantised stack in ONE Pallas kernel.
+
+    All layers must share the hidden size ``H`` (layer ``l >= 1`` therefore
+    has input size ``H``); layer 0's input size is ``qxs.shape[-1]``.  The
+    per-step loop chains the layers, so the inter-layer hidden sequence stays
+    in VMEM — integer-equal to running ``lstm_layer_fxp`` layer by layer.
+    Returns ``(qh, qc)`` of shape ``(L, B, H)``, or ``(qh_seq, qh, qc)`` with
+    ``return_sequence=True`` (``qh_seq`` is the top layer's ``(B, T, H)``).
+    """
+    if time_tile is not None and time_tile < 1:
+        raise ValueError(f"time_tile must be >= 1, got {time_tile}")
+    qws, qbs = list(qws), list(qbs)
+    if len(qws) != len(qbs) or not qws:
+        raise ValueError("qws and qbs must be equal-length, non-empty lists")
+    L = len(qws)
+    H = qws[0].shape[1] // 4
+    n_in = qxs.shape[-1]
+    B = qxs.shape[0]
+    for l, w in enumerate(qws):
+        if w.shape[1] // 4 != H:
+            raise ValueError(
+                f"stacked kernel needs a uniform hidden size: layer {l} has "
+                f"H={w.shape[1] // 4}, layer 0 has H={H}")
+        exp_in = n_in if l == 0 else H
+        if w.shape[0] != exp_in + H:
+            raise ValueError(
+                f"layer {l}: want weights ({exp_in + H}, {4 * H}), got {w.shape}")
+
+    in_w = max(n_in, H) if L > 1 else n_in
+    if n_in < in_w:
+        qxs = jnp.pad(qxs, ((0, 0), (0, 0), (0, in_w - n_in)))
+    packed = [_pack_gate_major(w, b, n_in if l == 0 else H, in_w, H)
+              for l, (w, b) in enumerate(zip(qws, qbs))]
+    w4 = jnp.concatenate([p[0] for p in packed], axis=0)    # (L*4, F, H)
+    b4 = jnp.concatenate([p[1] for p in packed], axis=0)    # (L*4, H)
+
+    if qh0 is None:
+        qh0 = jnp.zeros((L, B, H), jnp.int32)
+    if qc0 is None:
+        qc0 = jnp.zeros((L, B, H), jnp.int32)
+    if (sig_table is None) != (tanh_table is None):
+        raise ValueError("pass both LUT tables or neither")
+    # depth-1 dummies signal "no LUT" to the jitted call (real tables have
+    # depth >= 2, enforced by LutSpec).
+    if sig_table is None:
+        sig_table = jnp.zeros((1,), jnp.float32)
+    if tanh_table is None:
+        tanh_table = jnp.zeros((1,), jnp.float32)
+    return _lstm_seq_fxp_call(
+        qxs, w4, b4,
+        jnp.asarray(sig_table, jnp.float32), jnp.asarray(tanh_table, jnp.float32),
+        qh0, qc0,
+        frac_bits=frac_bits, total_bits=total_bits,
+        sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
+        return_sequence=return_sequence, block_b=block_b, time_tile=time_tile,
+        mxu_onehot=mxu_onehot, interpret=interpret,
+    )
 
 
 def lstm_sequence_fxp_pallas(
@@ -283,7 +406,7 @@ def lstm_sequence_fxp_pallas(
     mxu_onehot: bool = True,
     interpret: bool = False,
 ):
-    """Run the whole quantised recurrence in one Pallas kernel.
+    """Run the whole quantised recurrence in one Pallas kernel (one layer).
 
     Weight layout is the stacked ``(n_in + H, 4H)`` of ``LSTMParams`` (gate
     blocks i,f,g,o along the last axis); it is reshaped to gate-major
@@ -295,32 +418,22 @@ def lstm_sequence_fxp_pallas(
     ``n_seq`` is unbounded.  Both paths are integer-equal to
     ``lstm_layer_fxp``.  Returns ``(qh_T, qc_T)`` int32, or
     ``(qh_seq, qh_T, qc_T)`` with ``return_sequence=True``.
+
+    This is the ``L = 1`` face of ``lstm_sequence_fxp_stack_pallas`` — the
+    same kernel executes both.
     """
-    if time_tile is not None and time_tile < 1:
-        raise ValueError(f"time_tile must be >= 1, got {time_tile}")
-    F = qw.shape[0]
-    H = qw.shape[1] // 4
-    B = qxs.shape[0]
-    w4 = qw.reshape(F, 4, H).transpose(1, 0, 2)
-    b4 = qb.reshape(4, H)
-    if qh0 is None:
-        qh0 = jnp.zeros((B, H), jnp.int32)
-    if qc0 is None:
-        qc0 = jnp.zeros((B, H), jnp.int32)
-    if (sig_table is None) != (tanh_table is None):
-        raise ValueError("pass both LUT tables or neither")
-    # depth-1 dummies signal "no LUT" to the jitted call (real tables have
-    # depth >= 2, enforced by LutSpec).
-    if sig_table is None:
-        sig_table = jnp.zeros((1,), jnp.float32)
-    if tanh_table is None:
-        tanh_table = jnp.zeros((1,), jnp.float32)
-    return _lstm_seq_fxp_call(
-        qxs, w4, b4,
-        jnp.asarray(sig_table, jnp.float32), jnp.asarray(tanh_table, jnp.float32),
-        qh0, qc0,
+    out = lstm_sequence_fxp_stack_pallas(
+        qxs, [qw], [qb],
+        None if qh0 is None else qh0[None],
+        None if qc0 is None else qc0[None],
+        sig_table, tanh_table,
         frac_bits=frac_bits, total_bits=total_bits,
         sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
         return_sequence=return_sequence, block_b=block_b, time_tile=time_tile,
         mxu_onehot=mxu_onehot, interpret=interpret,
     )
+    if return_sequence:
+        h_seq, h, c = out
+        return h_seq, h[0], c[0]
+    h, c = out
+    return h[0], c[0]

@@ -31,11 +31,25 @@ __all__ = [
 
 
 def init_traffic_model(key: jax.Array, input_size: int = 1, hidden_size: int = 20,
-                       out_size: int = 1, dtype=jnp.float32) -> dict[str, Any]:
+                       out_size: int = 1, dtype=jnp.float32,
+                       num_layers: int = 1) -> dict[str, Any]:
+    """``num_layers=1`` (the paper's Fig. 1 model) stores a bare
+    ``LSTMParams`` under ``"lstm"``; deeper stacks (the follow-up
+    parameterised-architecture direction) store a per-layer list, which
+    ``lstm_forward`` — and therefore training, PTQ and the fleet engine —
+    accepts directly."""
     k1, k2 = jax.random.split(key)
+    if num_layers == 1:
+        lstm = init_lstm_params(k1, input_size, hidden_size, dtype)
+    else:
+        keys = jax.random.split(k1, num_layers)
+        lstm = [init_lstm_params(keys[li],
+                                 input_size if li == 0 else hidden_size,
+                                 hidden_size, dtype)
+                for li in range(num_layers)]
     limit = (6.0 / (hidden_size + out_size)) ** 0.5
     return {
-        "lstm": init_lstm_params(k1, input_size, hidden_size, dtype),
+        "lstm": lstm,
         "dense": {
             "w": jax.random.uniform(k2, (hidden_size, out_size), dtype, -limit, limit),
             "b": jnp.zeros((out_size,), dtype),
@@ -56,6 +70,10 @@ def traffic_forward(params: dict[str, Any], xs: jax.Array,
     cell; both route through ``lstm_layer`` directly.
     """
     if cell is not None or "sigmoid_fn" in kwargs or "tanh_fn" in kwargs:
+        if isinstance(params["lstm"], (list, tuple)):
+            raise ValueError("the legacy cell/activation-injection path is "
+                             "single-layer; stacked models go through "
+                             "lstm_forward backends")
         h, _ = lstm_layer(params["lstm"], xs, cell=cell or lstm_cell_fused,
                           **kwargs)
     else:
@@ -91,12 +109,15 @@ def train_traffic_model(
     epochs: int = 30,
     lr0: float = 0.01,
     hidden_size: int = 20,
+    num_layers: int = 1,
     verbose: bool = False,
 ) -> tuple[dict[str, Any], list[float]]:
-    """Full-precision training, faithful to §5.1."""
+    """Full-precision training, faithful to §5.1 (``num_layers > 1`` trains
+    the stacked variant through the same recipe)."""
     key = jax.random.PRNGKey(seed)
     params = init_traffic_model(key, input_size=data.x_train.shape[-1],
-                                hidden_size=hidden_size)
+                                hidden_size=hidden_size,
+                                num_layers=num_layers)
     opt = adam()  # paper betas/eps are the defaults
     opt_state = opt.init(params)
     sched = step_decay_schedule(lr0, step_size=3, gamma=0.5)

@@ -1,19 +1,20 @@
 """Multi-sensor LSTM serving engine: continuous batching over the fxp datapath.
 
 The paper deploys one sensor's quantised LSTM on one XC7S15; its follow-up
-parameterised-architecture work scales one cell design to many concurrent
-sensor workloads.  This engine is that fleet-scale restatement on TPU:
-``SensorFleetEngine`` holds the quantised parameters device-resident once
-and continuously batches many *independent* sensor streams through
-``repro.core.lstm.lstm_forward(backend="pallas_fxp")`` — the C1–C5 fused
-kernel — with per-slot ``h``/``c`` state so every stream's recurrence is
-bit-identical to running it alone.
+parameterised-architecture work scales one cell design to deeper models and
+many concurrent sensor workloads.  This engine is that fleet-scale
+restatement on TPU: ``SensorFleetEngine`` holds the quantised parameters
+device-resident once and continuously batches many *independent* sensor
+streams through ``repro.core.lstm.lstm_forward(backend="pallas_fxp")`` — the
+C1–C5 fused kernel — with per-slot, per-layer ``h``/``c`` state so every
+stream's recurrence is bit-identical to running it alone.
 
 Design (mirrors ``repro.serving.engine.ServingEngine``, the LM analogue):
 
 * **slots** — a fixed batch of ``batch_slots`` lanes; each active stream owns
-  one lane's ``(h, c)`` rows.  Finished streams release their slot and new
-  streams join mid-flight (continuous batching at sensor granularity).
+  one lane's ``(h, c)`` rows *in every layer*.  Finished streams release
+  their slot and new streams join mid-flight (continuous batching at sensor
+  granularity).
 * **chunked advance** — each engine step advances all active slots by the
   same number of timesteps ``t_step``: the largest power-of-two bucket
   ``<= min(chunk, shortest remaining stream)``.  Chunking with carried state
@@ -28,15 +29,18 @@ Design (mirrors ``repro.serving.engine.ServingEngine``, the LM analogue):
   is discarded with a ``where`` on the slot axis, so occupancy never changes
   the bits of occupied lanes.
 
-The engine is single-layer by construction: ``lstm_forward`` returns only
-the *top* layer's ``(h, c)``, so a chunked continuation of a stacked LSTM
-would lose the lower layers' carry.  Stack layers inside one call instead.
+Stacked models: pass a *list* of per-layer ``LSTMParams`` (uniform hidden
+size ``H``).  Per-slot state is ``(L, slots, H)`` and every engine step
+carries ALL layers' ``(h, c)`` via ``lstm_forward(..., return_state="all")``,
+so the chunked continuation of the whole stack is exact — on
+``backend="pallas_fxp"`` the stack additionally runs as one fused kernel
+with the inter-layer hidden sequence resident in VMEM
+(``lstm_sequence_fxp_stack_pallas``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -50,15 +54,20 @@ __all__ = ["SensorStream", "SensorFleetEngine"]
 
 @dataclasses.dataclass
 class SensorStream:
-    """One sensor's quantised input stream and its per-step results."""
+    """One sensor's quantised input stream and its per-step results.
+
+    For an ``L``-layer engine, ``qh0``/``qc0``/``qh``/``qc`` are ``(L, H)``
+    (single-layer engines keep the ``(H,)`` form for backward compatibility);
+    ``h_seq`` is always the top layer's ``(T, H)``.
+    """
 
     rid: int
     qxs: np.ndarray                     # (T, n_in) int32, quantised to fmt
-    qh0: np.ndarray | None = None       # (H,) int32 initial state (default 0)
+    qh0: np.ndarray | None = None       # (H,) or (L, H) int32 initial state (default 0)
     qc0: np.ndarray | None = None
-    h_seq: np.ndarray | None = None     # (T, H) int32, filled as chunks land
-    qh: np.ndarray | None = None        # (H,) int32 final hidden state
-    qc: np.ndarray | None = None        # (H,) int32 final cell state
+    h_seq: np.ndarray | None = None     # (T, H) int32 top layer, filled as chunks land
+    qh: np.ndarray | None = None        # (H,) or (L, H) int32 final hidden state
+    qc: np.ndarray | None = None        # (H,) or (L, H) int32 final cell state
     done: bool = False
     cursor: int = 0                     # timesteps consumed so far
 
@@ -68,11 +77,12 @@ class SensorStream:
 
 
 class SensorFleetEngine:
-    """Slot-based continuous batching of sensor streams into ``pallas_fxp``."""
+    """Slot-based continuous batching of (stacked) sensor LSTMs into
+    ``pallas_fxp``."""
 
     def __init__(
         self,
-        qparams: LSTMParams,
+        qparams,
         fmt: FxpFormat,
         luts: dict | None = None,
         *,
@@ -83,11 +93,14 @@ class SensorFleetEngine:
         block_b: int | None = None,
         interpret: bool | None = None,
     ):
-        if isinstance(qparams, (list, tuple)):
+        layers = list(qparams) if isinstance(qparams, (list, tuple)) else [qparams]
+        if not layers:
+            raise ValueError("qparams must name at least one layer")
+        hidden = {p.hidden_size for p in layers}
+        if len(hidden) > 1:
             raise ValueError(
-                "SensorFleetEngine serves a single-layer LSTM: lstm_forward "
-                "returns only the top layer's state, so a chunked multi-layer "
-                "continuation would drop the lower layers' carry")
+                "SensorFleetEngine carries per-slot state as one (L, slots, H) "
+                f"buffer, which needs a uniform hidden size; got {sorted(hidden)}")
         if batch_slots < 1:
             raise ValueError("batch_slots must be >= 1")
         if chunk < 1:
@@ -95,30 +108,40 @@ class SensorFleetEngine:
         self.fmt = fmt
         self.slots = batch_slots
         self.chunk = chunk
-        self.n_in = qparams.input_size
-        self.n_h = qparams.hidden_size
+        self.n_layers = len(layers)
+        self.n_in = layers[0].input_size
+        self.n_h = layers[0].hidden_size
+        for li, p in enumerate(layers[1:], start=1):
+            if p.input_size != self.n_h:
+                raise ValueError(
+                    f"layer {li}: input_size {p.input_size} != hidden_size "
+                    f"{self.n_h} of the layer below")
         # params live on device once; every step call reuses the same buffers
-        self._w = jnp.asarray(qparams.w, jnp.int32)
-        self._b = jnp.asarray(qparams.b, jnp.int32)
+        self._ws = [jnp.asarray(p.w, jnp.int32) for p in layers]
+        self._bs = [jnp.asarray(p.b, jnp.int32) for p in layers]
         # power-of-two t_step buckets, largest first
         self._buckets = [1 << k for k in range(chunk.bit_length() - 1, -1, -1)
                          if (1 << k) <= chunk]
-        self._qh = jnp.zeros((batch_slots, self.n_h), jnp.int32)
-        self._qc = jnp.zeros((batch_slots, self.n_h), jnp.int32)
+        # ALL layers' carry, one lane per slot: the multi-layer state plumbing
+        self._qh = jnp.zeros((self.n_layers, batch_slots, self.n_h), jnp.int32)
+        self._qc = jnp.zeros((self.n_layers, batch_slots, self.n_h), jnp.int32)
         self.active: dict[int, SensorStream] = {}
         self.steps_run = 0              # batched kernel invocations so far
         self.timesteps_run = 0          # sum of t_step over those invocations
 
         fwd_kwargs = dict(
             backend=backend, fmt=fmt, luts=luts, return_sequence=True,
-            interpret=interpret, time_tile=time_tile,
+            return_state="all", interpret=interpret, time_tile=time_tile,
             block_b=batch_slots if block_b is None else block_b,
         )
 
-        def step_fn(w, b, qx, qh, qc, lane_mask):
-            seq, (h, c) = lstm_forward(LSTMParams(w, b), qx, h0=qh, c0=qc,
-                                       **fwd_kwargs)
-            keep = lane_mask[:, None]
+        def step_fn(ws, bs, qx, qh, qc, lane_mask):
+            params = [LSTMParams(w, b) for w, b in zip(ws, bs)]
+            seq, (hs, cs) = lstm_forward(
+                params, qx, h0=list(qh), c0=list(qc), **fwd_kwargs)
+            keep = lane_mask[None, :, None]
+            h = jnp.stack(hs)
+            c = jnp.stack(cs)
             return seq, jnp.where(keep, h, qh), jnp.where(keep, c, qc)
 
         # jit re-specialises per input shape, i.e. once per t_step bucket
@@ -128,6 +151,20 @@ class SensorFleetEngine:
 
     def free_slots(self) -> list[int]:
         return [s for s in range(self.slots) if s not in self.active]
+
+    def _state_init(self, rid: int, s0, name: str) -> np.ndarray:
+        """Normalise a stream's initial state to ``(L, H)`` (zeros default;
+        ``(H,)`` accepted as layer 0 of a single-layer engine)."""
+        if s0 is None:
+            return np.zeros((self.n_layers, self.n_h), np.int32)
+        s0 = np.asarray(s0, np.int32)
+        if s0.shape == (self.n_h,) and self.n_layers == 1:
+            return s0[None]
+        if s0.shape != (self.n_layers, self.n_h):
+            raise ValueError(
+                f"stream {rid}: {name} must be ({self.n_layers}, {self.n_h}) "
+                f"(or ({self.n_h},) for a single-layer engine), got {s0.shape}")
+        return s0
 
     def submit(self, stream: SensorStream) -> bool:
         """Claim a slot for ``stream`` (mid-flight join); False if full.
@@ -146,6 +183,8 @@ class SensorFleetEngine:
                              f"int32 inputs, got {qxs.shape}")
         if len(qxs) == 0:
             raise ValueError(f"stream {stream.rid}: empty stream")
+        h0 = self._state_init(stream.rid, stream.qh0, "qh0")
+        c0 = self._state_init(stream.rid, stream.qc0, "qc0")
         free = self.free_slots()
         if not free:
             return False
@@ -153,10 +192,8 @@ class SensorFleetEngine:
         stream.qxs = qxs
         stream.cursor = 0
         stream.h_seq = np.zeros((len(qxs), self.n_h), np.int32)
-        h0 = np.zeros(self.n_h, np.int32) if stream.qh0 is None else np.asarray(stream.qh0, np.int32)
-        c0 = np.zeros(self.n_h, np.int32) if stream.qc0 is None else np.asarray(stream.qc0, np.int32)
-        self._qh = self._qh.at[slot].set(jnp.asarray(h0))
-        self._qc = self._qc.at[slot].set(jnp.asarray(c0))
+        self._qh = self._qh.at[:, slot].set(jnp.asarray(h0))
+        self._qc = self._qc.at[:, slot].set(jnp.asarray(c0))
         self.active[slot] = stream
         return True
 
@@ -179,7 +216,7 @@ class SensorFleetEngine:
             mask[slot] = True
 
         seq, self._qh, self._qc = self._step(
-            self._w, self._b, jnp.asarray(x), self._qh, self._qc,
+            self._ws, self._bs, jnp.asarray(x), self._qh, self._qc,
             jnp.asarray(mask))
         self.steps_run += 1
         self.timesteps_run += t_step
@@ -195,16 +232,21 @@ class SensorFleetEngine:
             qh_np, qc_np = np.asarray(self._qh), np.asarray(self._qc)
             for slot in finished:
                 s = self.active.pop(slot)   # slot freed for the next submit
-                s.qh = qh_np[slot].copy()
-                s.qc = qc_np[slot].copy()
+                if self.n_layers == 1:      # back-compat: (H,) for one layer
+                    s.qh = qh_np[0, slot].copy()
+                    s.qc = qc_np[0, slot].copy()
+                else:
+                    s.qh = qh_np[:, slot].copy()
+                    s.qc = qc_np[:, slot].copy()
                 s.done = True
 
     def run(self, streams: list[SensorStream]) -> list[SensorStream]:
         """Drive ``streams`` to completion with continuous batching.
 
         Streams beyond ``batch_slots`` queue and join as slots free up; the
-        per-stream results (``h_seq``, ``qh``, ``qc``) are bit-identical to
-        ``lstm_forward(..., backend="pallas_fxp")`` on each stream alone.
+        per-stream results (``h_seq``, ``qh``, ``qc`` — all layers) are
+        bit-identical to ``lstm_forward(..., backend="pallas_fxp",
+        return_state="all")`` on each stream alone.
         """
         pending = list(streams)
         while pending or self.active:

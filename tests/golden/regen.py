@@ -1,12 +1,15 @@
-"""Regenerate the integer-exact golden fixture for the fxp LSTM datapath.
+"""Regenerate the integer-exact golden fixtures for the fxp LSTM datapath.
 
     PYTHONPATH=src python tests/golden/regen.py
 
-Rewrites ``lstm_fxp_golden.json`` next to this file.  See README.md for when
-(and when not) to regenerate.  Inputs and parameters are drawn as raw
-integers from a fixed seed — no float quantisation on the input side — so
-the fixture is reproducible everywhere; the LUT tables are float32 sampled
-once and stored verbatim (float32 -> double -> JSON round-trips exactly).
+Rewrites ``lstm_fxp_golden.json`` (single layer) and
+``lstm_fxp_stack2_golden.json`` (2-layer stack: per-layer final states + the
+top layer's hidden sequence — the multi-layer state-plumbing contract) next
+to this file.  See README.md for when (and when not) to regenerate.  Inputs
+and parameters are drawn as raw integers from a fixed seed — no float
+quantisation on the input side — so the fixtures are reproducible
+everywhere; the LUT tables are float32 sampled once and stored verbatim
+(float32 -> double -> JSON round-trips exactly).
 """
 
 from __future__ import annotations
@@ -27,6 +30,54 @@ FRAC, TOTAL = 8, 16
 LUT_DEPTH = 64
 
 OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_golden.json"
+STACK_OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_stack2_golden.json"
+
+
+def _lut_entry(luts, name):
+    table, spec = luts[name]
+    return {"lo": spec.bounds[0], "hi": spec.bounds[1],
+            "table": [float(v) for v in np.asarray(table)]}
+
+
+def regen_stack2() -> None:
+    """2-layer fixture: layer-by-layer ``lstm_layer_fxp`` is the oracle; the
+    fused stack kernel must reproduce every layer's integers."""
+    fmt = FxpFormat(FRAC, TOTAL)
+    rng = np.random.default_rng(SEED + 1)
+    qxs = rng.integers(-2 << FRAC, 2 << FRAC, (B, T, N_IN), dtype=np.int32)
+    qw1 = rng.integers(-1 << FRAC, 1 << FRAC, (N_IN + N_H, 4 * N_H), dtype=np.int32)
+    qb1 = rng.integers(-1 << (FRAC - 1), 1 << (FRAC - 1), (4 * N_H,), dtype=np.int32)
+    qw2 = rng.integers(-1 << FRAC, 1 << FRAC, (2 * N_H, 4 * N_H), dtype=np.int32)
+    qb2 = rng.integers(-1 << (FRAC - 1), 1 << (FRAC - 1), (4 * N_H,), dtype=np.int32)
+
+    luts = make_lut_pair(LUT_DEPTH)
+    qp1 = LSTMParams(w=jnp.asarray(qw1), b=jnp.asarray(qb1))
+    qp2 = LSTMParams(w=jnp.asarray(qw2), b=jnp.asarray(qb2))
+    seq1, (qh1, qc1) = lstm_layer_fxp(qp1, jnp.asarray(qxs), fmt, luts,
+                                      return_sequence=True)
+    seq2, (qh2, qc2) = lstm_layer_fxp(qp2, seq1, fmt, luts,
+                                      return_sequence=True)
+
+    golden = {
+        "description": "integer-exact golden for the 2-layer fxp LSTM stack "
+                       "(all-layer state); regenerate with "
+                       "tests/golden/regen.py (see README.md)",
+        "seed": SEED + 1,
+        "fmt": {"frac_bits": FRAC, "total_bits": TOTAL},
+        "lut": {"depth": LUT_DEPTH,
+                "sigmoid": _lut_entry(luts, "sigmoid"),
+                "tanh": _lut_entry(luts, "tanh")},
+        "qxs": qxs.tolist(),
+        "qw": [qw1.tolist(), qw2.tolist()],
+        "qb": [qb1.tolist(), qb2.tolist()],
+        "outputs": {
+            "h_seq_top": np.asarray(seq2).tolist(),
+            "qh": [np.asarray(qh1).tolist(), np.asarray(qh2).tolist()],
+            "qc": [np.asarray(qc1).tolist(), np.asarray(qc2).tolist()],
+        },
+    }
+    STACK_OUT_PATH.write_text(json.dumps(golden, indent=1) + "\n")
+    print(f"wrote {STACK_OUT_PATH} ({STACK_OUT_PATH.stat().st_size} bytes)")
 
 
 def main() -> None:
@@ -71,3 +122,4 @@ def main() -> None:
 
 if __name__ == "__main__":
     main()
+    regen_stack2()

@@ -163,6 +163,120 @@ def test_time_tiled_multi_layer_stack_integer_equal():
     np.testing.assert_array_equal(np.asarray(a[1]), np.asarray(b[1]))
 
 
+def _stack_params(n_layers, n_in, n_h, fmt, key=0):
+    qps = []
+    for li in range(n_layers):
+        p = init_lstm_params(jax.random.PRNGKey(key + li),
+                             n_in if li == 0 else n_h, n_h)
+        qps.append(LSTMParams(w=quantize(p.w, fmt), b=quantize(p.b, fmt)))
+    return qps
+
+
+# (L, n_seq, n_h, b, time_tile): stacked depth x ragged tails x odd H
+STACK_SHAPES = [
+    (2, 24, 12, 3, 4),
+    (2, 17, 33, 2, 5),     # H=33 not tile-aligned, ragged tail
+    (3, 16, 10, 2, None),  # un-tiled 3-deep stack
+]
+
+
+@pytest.mark.parametrize("n_layers,n_seq,n_h,b,tile", STACK_SHAPES)
+def test_stacked_all_layer_state_integer_equal(n_layers, n_seq, n_h, b, tile):
+    """return_state="all": every layer's (h, c) integer-equal between the
+    fxp simulator and the fused multi-layer Pallas kernel (which keeps the
+    inter-layer hidden sequence in VMEM)."""
+    fmt = FxpFormat(8, 16)
+    qps = _stack_params(n_layers, 2, n_h, fmt)
+    xs = jnp.asarray(RNG.normal(size=(b, n_seq, 2)).astype(np.float32))
+    qxs = quantize(xs, fmt)
+    luts = make_lut_pair(64)
+    outs = {
+        be: lstm_forward(qps, qxs, backend=be, fmt=fmt, luts=luts, block_b=2,
+                         time_tile=tile if be == "pallas_fxp" else None,
+                         return_sequence=True, return_state="all")
+        for be in FXP_BACKENDS
+    }
+    _assert_int_equal_pairwise(outs)
+    seq, (hs, cs) = outs["fxp"]
+    assert len(hs) == len(cs) == n_layers
+    assert seq.shape == (b, n_seq, n_h)
+    np.testing.assert_array_equal(np.asarray(seq[:, -1]), np.asarray(hs[-1]))
+
+
+@pytest.mark.parametrize("n_layers,n_seq,n_h,b,tile", STACK_SHAPES)
+@pytest.mark.parametrize("backend", FXP_BACKENDS)
+def test_stacked_chunked_continuation_integer_equal(n_layers, n_seq, n_h, b,
+                                                    tile, backend):
+    """The tentpole contract: two half-sequence calls with carried ALL-layer
+    state are integer-equal to one full call — exactly what the fleet engine
+    relies on to serve stacked models in chunks."""
+    fmt = FxpFormat(8, 16)
+    qps = _stack_params(n_layers, 2, n_h, fmt, key=3)
+    xs = jnp.asarray(RNG.normal(size=(b, n_seq, 2)).astype(np.float32))
+    qxs = quantize(xs, fmt)
+    luts = make_lut_pair(64)
+    kw = dict(backend=backend, fmt=fmt, luts=luts, block_b=2,
+              time_tile=tile if backend == "pallas_fxp" else None)
+
+    seq_full, (hs_full, cs_full) = lstm_forward(
+        qps, qxs, return_sequence=True, return_state="all", **kw)
+
+    cut = n_seq // 2
+    seq_a, (hs_a, cs_a) = lstm_forward(
+        qps, qxs[:, :cut], return_sequence=True, return_state="all", **kw)
+    seq_b, (hs_b, cs_b) = lstm_forward(
+        qps, qxs[:, cut:], h0=hs_a, c0=cs_a,
+        return_sequence=True, return_state="all", **kw)
+
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(seq_a), np.asarray(seq_b)], axis=1),
+        np.asarray(seq_full))
+    for li in range(n_layers):
+        np.testing.assert_array_equal(np.asarray(hs_b[li]),
+                                      np.asarray(hs_full[li]),
+                                      err_msg=f"layer {li} h")
+        np.testing.assert_array_equal(np.asarray(cs_b[li]),
+                                      np.asarray(cs_full[li]),
+                                      err_msg=f"layer {li} c")
+
+
+def test_stacked_state_accepts_stacked_array():
+    """h0/c0 may be one (L, B, H) array instead of per-layer lists."""
+    fmt = FxpFormat(8, 16)
+    qps = _stack_params(2, 2, 10, fmt, key=5)
+    xs = jnp.asarray(RNG.normal(size=(2, 8, 2)).astype(np.float32))
+    qxs = quantize(xs, fmt)
+    rng = np.random.default_rng(0)
+    h0 = jnp.asarray(rng.integers(-40, 40, (2, 2, 10)), jnp.int32)
+    c0 = jnp.asarray(rng.integers(-40, 40, (2, 2, 10)), jnp.int32)
+    a = lstm_forward(qps, qxs, backend="fxp", fmt=fmt,
+                     h0=h0, c0=c0, return_state="all")
+    bk = lstm_forward(qps, qxs, backend="fxp", fmt=fmt,
+                      h0=[h0[0], h0[1]], c0=[c0[0], c0[1]],
+                      return_state="all")
+    _assert_int_equal_pairwise({"stacked-array": a, "per-layer-list": bk})
+    # a (B, H) single-layer-convention array must NOT be mistaken for a
+    # stacked (L, ...) one when B == L: the rank check rejects it loudly
+    with pytest.raises(ValueError, match="per-layer h0/c0"):
+        lstm_forward(qps, qxs, backend="fxp", fmt=fmt, h0=h0[0], c0=c0[0])
+
+
+def test_return_state_top_is_backward_compatible():
+    """Default return_state="top" keeps the historical (h_T, c_T) contract,
+    equal to the last element of the "all" lists."""
+    fmt = FxpFormat(8, 16)
+    qps = _stack_params(2, 2, 10, fmt, key=6)
+    xs = jnp.asarray(RNG.normal(size=(2, 8, 2)).astype(np.float32))
+    qxs = quantize(xs, fmt)
+    h_top, c_top = lstm_forward(qps, qxs, backend="fxp", fmt=fmt)
+    hs, cs = lstm_forward(qps, qxs, backend="fxp", fmt=fmt,
+                          return_state="all")
+    np.testing.assert_array_equal(np.asarray(h_top), np.asarray(hs[-1]))
+    np.testing.assert_array_equal(np.asarray(c_top), np.asarray(cs[-1]))
+    with pytest.raises(ValueError, match="return_state"):
+        lstm_forward(qps, qxs, backend="fxp", fmt=fmt, return_state="bottom")
+
+
 def test_time_tile_validation():
     fmt = FxpFormat(8, 16)
     params, xs = _setup(2, 8, 6, 2)

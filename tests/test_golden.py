@@ -15,19 +15,31 @@ import pytest
 from repro.core.fxp import FxpFormat
 from repro.core.lstm import LSTMParams, lstm_layer_fxp
 from repro.core.lut import LutSpec, build_table
-from repro.kernels.lstm_fxp_seq import lstm_sequence_fxp_pallas
+from repro.kernels.lstm_fxp_seq import (lstm_sequence_fxp_pallas,
+                                        lstm_sequence_fxp_stack_pallas)
 
 GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "lstm_fxp_golden.json"
+STACK_PATH = (pathlib.Path(__file__).parent / "golden"
+              / "lstm_fxp_stack2_golden.json")
 
 
-@pytest.fixture(scope="module")
-def golden():
-    g = json.loads(GOLDEN_PATH.read_text())
+def _load(path):
+    g = json.loads(path.read_text())
     g["_fmt"] = FxpFormat(**g["fmt"])
     for name in ("sigmoid", "tanh"):
         g["lut"][name]["table_f32"] = np.asarray(
             g["lut"][name]["table"], np.float32)
     return g
+
+
+@pytest.fixture(scope="module")
+def golden():
+    return _load(GOLDEN_PATH)
+
+
+@pytest.fixture(scope="module")
+def golden_stack():
+    return _load(STACK_PATH)
 
 
 def _stored_luts(g):
@@ -82,5 +94,48 @@ def test_pallas_kernel_matches_golden_integers(golden, time_tile):
         return_sequence=True, block_b=2, time_tile=time_tile, interpret=True)
     out = golden["outputs"]
     np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(out["h_seq"]))
+    np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
+    np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"]))
+
+
+def test_stack_simulator_matches_golden_integers(golden_stack):
+    """Layer-by-layer simulator reproduces the committed 2-layer integers
+    (all layers' final states + the top hidden sequence)."""
+    g = golden_stack
+    fmt = g["_fmt"]
+    luts = _stored_luts(g)
+    xs = jnp.asarray(g["qxs"], jnp.int32)
+    out = g["outputs"]
+    for li in range(2):
+        qp = LSTMParams(w=jnp.asarray(g["qw"][li], jnp.int32),
+                        b=jnp.asarray(g["qb"][li], jnp.int32))
+        xs, (qh, qc) = lstm_layer_fxp(qp, xs, fmt, luts, return_sequence=True)
+        np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"][li]),
+                                      err_msg=f"layer {li} qh")
+        np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"][li]),
+                                      err_msg=f"layer {li} qc")
+    np.testing.assert_array_equal(np.asarray(xs), np.asarray(out["h_seq_top"]))
+
+
+@pytest.mark.parametrize("time_tile", [None, 5])
+def test_stack_kernel_matches_golden_integers(golden_stack, time_tile):
+    """The fused multi-layer kernel (inter-layer sequence in VMEM) reproduces
+    the committed 2-layer integers exactly, tiled and un-tiled."""
+    g = golden_stack
+    fmt = g["_fmt"]
+    luts = _stored_luts(g)
+    (sig_t, sig_s), (tanh_t, tanh_s) = luts["sigmoid"], luts["tanh"]
+    h_seq, qh, qc = lstm_sequence_fxp_stack_pallas(
+        jnp.asarray(g["qxs"], jnp.int32),
+        [jnp.asarray(w, jnp.int32) for w in g["qw"]],
+        [jnp.asarray(b, jnp.int32) for b in g["qb"]],
+        None, None, sig_t, tanh_t,
+        frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
+        sig_lo=sig_s.bounds[0], sig_hi=sig_s.bounds[1],
+        tanh_lo=tanh_s.bounds[0], tanh_hi=tanh_s.bounds[1],
+        return_sequence=True, block_b=2, time_tile=time_tile, interpret=True)
+    out = g["outputs"]
+    np.testing.assert_array_equal(np.asarray(h_seq),
+                                  np.asarray(out["h_seq_top"]))
     np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
     np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"]))

@@ -89,6 +89,16 @@ def _fleet_setup(key=0, depth=64):
     return qp, make_lut_pair(depth)
 
 
+def _stack_setup(n_layers, key=0, depth=64):
+    """Per-layer quantised params for an L-layer stack (uniform H)."""
+    qps = []
+    for li in range(n_layers):
+        p = init_lstm_params(jax.random.PRNGKey(key + li),
+                             N_IN if li == 0 else N_H, N_H)
+        qps.append(LSTMParams(w=quantize(p.w, FMT), b=quantize(p.b, FMT)))
+    return qps, make_lut_pair(depth)
+
+
 def _make_streams(lens, seed=0):
     rng = np.random.default_rng(seed)
     return [SensorStream(rid=i, qxs=np.asarray(quantize(
@@ -178,10 +188,77 @@ def test_fleet_nonzero_initial_state():
     np.testing.assert_array_equal(stream.qc, np.asarray(ref_c[0]))
 
 
+# --- stacked (L >= 2) fleet serving: the ISSUE 3 acceptance criterion -------
+
+
+def _per_stream_stack_oracle(qps, luts, stream, backend="fxp"):
+    """Solo run of the whole stack with all-layer state returned."""
+    h0 = c0 = None
+    if stream.qh0 is not None:
+        h0 = [jnp.asarray(stream.qh0[li])[None] for li in range(len(qps))]
+        c0 = [jnp.asarray(stream.qc0[li])[None] for li in range(len(qps))]
+    seq, (hs, cs) = lstm_forward(
+        qps, jnp.asarray(stream.qxs)[None], backend=backend, fmt=FMT,
+        luts=luts, h0=h0, c0=c0, return_sequence=True, return_state="all",
+        block_b=1, interpret=True)
+    return (np.asarray(seq[0]),
+            np.stack([np.asarray(h[0]) for h in hs]),
+            np.stack([np.asarray(c[0]) for c in cs]))
+
+
+@pytest.mark.parametrize("n_layers,backend", [(2, "pallas_fxp"), (3, "fxp")])
+def test_fleet_multi_layer_bit_identical(n_layers, backend):
+    """A stacked fleet run is integer-equal, for EVERY layer's (h, c), to the
+    per-stream oracle — chunked continuation carries all layers' state."""
+    qps, luts = _stack_setup(n_layers)
+    streams = _make_streams([5, 9, 16, 7, 23])
+    eng = SensorFleetEngine(qps, FMT, luts, batch_slots=2, chunk=8,
+                            time_tile=4 if backend == "pallas_fxp" else None,
+                            backend=backend, interpret=True)
+    eng.run(streams)
+    assert all(s.done for s in streams)
+    for s in streams:
+        seq_ref, h_ref, c_ref = _per_stream_stack_oracle(qps, luts, s,
+                                                         backend="fxp")
+        assert s.qh.shape == (n_layers, N_H)
+        np.testing.assert_array_equal(s.h_seq, seq_ref,
+                                      err_msg=f"stream {s.rid} h_seq")
+        np.testing.assert_array_equal(s.qh, h_ref,
+                                      err_msg=f"stream {s.rid} qh (all layers)")
+        np.testing.assert_array_equal(s.qc, c_ref,
+                                      err_msg=f"stream {s.rid} qc (all layers)")
+
+
+def test_fleet_multi_layer_nonzero_initial_state():
+    """(L, H) per-stream initial state rides through slot init per layer."""
+    qps, luts = _stack_setup(2, key=4)
+    (stream,) = _make_streams([7], seed=9)
+    rng = np.random.default_rng(11)
+    stream.qh0 = rng.integers(-50, 50, (2, N_H)).astype(np.int32)
+    stream.qc0 = rng.integers(-50, 50, (2, N_H)).astype(np.int32)
+    eng = SensorFleetEngine(qps, FMT, luts, batch_slots=2, chunk=4,
+                            backend="fxp")
+    eng.run([stream])
+    _, h_ref, c_ref = _per_stream_stack_oracle(qps, luts, stream)
+    np.testing.assert_array_equal(stream.qh, h_ref)
+    np.testing.assert_array_equal(stream.qc, c_ref)
+
+
 def test_fleet_engine_validation():
     qp, luts = _fleet_setup()
-    with pytest.raises(ValueError, match="single-layer"):
-        SensorFleetEngine([qp, qp], FMT, luts)
+    # stacked params are served now; what's rejected is a malformed stack
+    with pytest.raises(ValueError, match="input_size"):
+        SensorFleetEngine([qp, qp], FMT, luts)   # layer 1 input != H below
+    qp_wide = _fleet_setup(key=2)[0]
+    qp_h8 = LSTMParams(w=jnp.zeros((N_IN + 8, 32), jnp.int32),
+                       b=jnp.zeros((32,), jnp.int32))
+    with pytest.raises(ValueError, match="uniform hidden size"):
+        SensorFleetEngine([qp_wide, qp_h8], FMT, luts)
+    eng2 = SensorFleetEngine(_stack_setup(2)[0], FMT, luts, batch_slots=1,
+                             backend="fxp")
+    with pytest.raises(ValueError, match="qh0"):   # (H,) state needs L == 1
+        eng2.submit(SensorStream(rid=7, qxs=np.zeros((4, N_IN), np.int32),
+                                 qh0=np.zeros(N_H, np.int32)))
     with pytest.raises(ValueError, match="batch_slots"):
         SensorFleetEngine(qp, FMT, luts, batch_slots=0)
     eng = SensorFleetEngine(qp, FMT, luts, batch_slots=1, backend="fxp")

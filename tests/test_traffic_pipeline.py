@@ -72,3 +72,31 @@ def test_table1_trend_lut_depth(trained):
     fp_act = float(jnp.mean((quantized_lstm_forward(qm0, xs) - ys) ** 2))
     assert mses[64] > mses[128] > mses[256]             # paper Table 1 direction
     assert mses[256] < 1.25 * fp_act                    # 256 ~ full precision
+
+
+def test_stacked_traffic_model_trains_and_quantises():
+    """num_layers=2 flows through the whole pipeline: training (fused
+    backend over the param list), PTQ (per-layer), and the bitstream-exact
+    quantised forward — the model the stacked fleet engine serves."""
+    from repro.models.lstm_model import init_traffic_model, traffic_forward
+
+    data = make_traffic_dataset(seed=0)
+    params, history = train_traffic_model(data, epochs=2, num_layers=2,
+                                          hidden_size=10)
+    assert isinstance(params["lstm"], list) and len(params["lstm"]) == 2
+    assert history[-1] < history[0]              # the stack still learns
+    xs = jnp.asarray(data.x_test[:16])
+    assert traffic_forward(params, xs).shape == (16, 1)
+
+    qm = quantize_lstm_model(params, FxpFormat(8, 16), 256)
+    assert len(qm.lstm) == 2
+    pred = quantized_lstm_forward(qm, xs)
+    assert pred.shape == (16, 1)
+    # fxp and the fused multi-layer Pallas stack kernel are integer-equal,
+    # so the dequantised predictions are bitwise identical
+    pred_k = quantized_lstm_forward(qm, xs, backend="pallas_fxp")
+    np.testing.assert_array_equal(np.asarray(pred), np.asarray(pred_k))
+
+    # the legacy single-layer cell path refuses stacked params loudly
+    with pytest.raises(ValueError, match="single-layer"):
+        traffic_forward(params, xs, cell=lambda *a, **k: None)
