@@ -1,22 +1,38 @@
 """Paper Fig. 6: test-set MSE vs fractional bits (4..12, 16-bit total,
 activations full precision).  Paper claim: MSE stops improving beyond x=8
-(their 0.1722 plateau) -> (8,16) is the chosen config."""
+(their 0.1722 plateau) -> (8,16) is the chosen config.
 
-import jax.numpy as jnp
+Beyond-paper QAT series (ISSUE 4): the same sweep with the model
+*fine-tuned under the quantiser* (``repro.qat``) before freezing — at low
+fractional widths QAT recovers accuracy PTQ cannot, which is the whole
+point of training-in-the-loop precision search.
+
+Standalone run appends to the perf trajectory like the kernel rows do:
+
+    PYTHONPATH=src:. python benchmarks/fig6_frac_bits.py          # -> BENCH_kernels.json
+    PYTHONPATH=src:. python benchmarks/fig6_frac_bits.py --json other.json
+"""
 
 from benchmarks.common import trained_traffic_model
 from repro.core.fxp import FxpFormat
-from repro.core.quantize import quantize_lstm_model, quantized_lstm_forward
+from repro.core.quantize import quantize_lstm_model
+from repro.models.lstm_model import evaluate_quantized_mse
+
+QAT_FRAC_BITS = (4, 6, 8)       # low-bit points where fine-tuning matters
+QAT_EPOCHS = 2
+QAT_MAX_SAMPLES = 2048
 
 
 def run():
+    from repro.qat.qat_lstm import finetune_qat, freeze
+
     data, params, fp_mse, _ = trained_traffic_model()
-    xs, ys = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    xs, ys = data.x_test, data.y_test
     rows = []
     mses = {}
     for fb in (4, 5, 6, 7, 8, 10, 12):
         qm = quantize_lstm_model(params, FxpFormat(fb, 16), lut_depth=None)
-        mse = float(jnp.mean((quantized_lstm_forward(qm, xs) - ys) ** 2))
+        mse = evaluate_quantized_mse(qm, xs, ys)
         mses[fb] = mse
         rows.append({
             "name": f"fig6/frac_bits_{fb}",
@@ -30,4 +46,31 @@ def run():
         "derived": f"mse8/mse12={plateau:.3f} "
                    f"paper_claim_plateau_at_8={'PASS' if plateau < 1.1 else 'FAIL'}",
     })
+    # QAT series, same formats as the PTQ points above
+    for fb in QAT_FRAC_BITS:
+        fmt = FxpFormat(fb, 16)
+        qat_params, _ = finetune_qat(params, data, fmt, None,
+                                     epochs=QAT_EPOCHS,
+                                     max_samples=QAT_MAX_SAMPLES)
+        qat_mse = evaluate_quantized_mse(freeze(qat_params, fmt, None), xs, ys)
+        rows.append({
+            "name": f"fig6/qat_frac_bits_{fb}",
+            "us_per_call": 0.0,
+            "derived": f"mse={qat_mse:.6f} ptq_mse={mses[fb]:.6f} "
+                       f"qat_over_ptq={qat_mse / mses[fb]:.3f}x",
+        })
     return rows
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+
+    root = pathlib.Path(__file__).parents[1]
+    sys.path.insert(0, str(root))
+    from benchmarks.run import main
+
+    argv = ["--only", "fig6"] + sys.argv[1:]
+    if not any(a == "--json" or a.startswith("--json=") for a in argv):
+        argv += ["--json", str(root / "BENCH_kernels.json")]
+    main(argv)

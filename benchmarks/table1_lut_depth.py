@@ -5,6 +5,11 @@ vs full-precision-activation MSE 0.1722 — the claim is CONVERGENCE: depth
 256 is within a few percent of full precision.  We reproduce the trend on
 the synthetic series (DESIGN.md §4) and report the ratio to full precision,
 which is series-independent.
+
+Standalone run appends to the perf trajectory like the kernel rows do:
+
+    PYTHONPATH=src:. python benchmarks/table1_lut_depth.py        # -> BENCH_kernels.json
+    PYTHONPATH=src:. python benchmarks/table1_lut_depth.py --json other.json
 """
 
 import jax.numpy as jnp
@@ -12,6 +17,7 @@ import jax.numpy as jnp
 from benchmarks.common import timeit, trained_traffic_model
 from repro.core.fxp import FxpFormat
 from repro.core.quantize import quantize_lstm_model, quantized_lstm_forward
+from repro.models.lstm_model import evaluate_quantized_mse
 
 
 def run():
@@ -21,13 +27,13 @@ def run():
 
     # full-precision-activation quantised baseline (paper's 0.1722 analogue)
     qm0 = quantize_lstm_model(params, fmt, lut_depth=None)
-    base_mse = float(jnp.mean((quantized_lstm_forward(qm0, xs) - ys) ** 2))
+    base_mse = evaluate_quantized_mse(qm0, xs, ys)
 
     rows = []
     for depth in (64, 128, 256, 512):
         qm = quantize_lstm_model(params, fmt, lut_depth=depth)
         us = timeit(quantized_lstm_forward, qm, xs, n=3, warmup=1)
-        mse = float(jnp.mean((quantized_lstm_forward(qm, xs) - ys) ** 2))
+        mse = evaluate_quantized_mse(qm, xs, ys)
         rows.append({
             "name": f"table1/lut_depth_{depth}",
             "us_per_call": round(us, 1),
@@ -42,3 +48,17 @@ def run():
     })
     # explicit trend check: monotone decreasing, 256 close to fp
     return rows
+
+
+if __name__ == "__main__":
+    import pathlib
+    import sys
+
+    root = pathlib.Path(__file__).parents[1]
+    sys.path.insert(0, str(root))
+    from benchmarks.run import main
+
+    argv = ["--only", "table1"] + sys.argv[1:]
+    if not any(a == "--json" or a.startswith("--json=") for a in argv):
+        argv += ["--json", str(root / "BENCH_kernels.json")]
+    main(argv)

@@ -28,7 +28,8 @@ import numpy as np
 from repro.core.fxp import FxpFormat
 from repro.core.quantize import quantize_lstm_model, quantized_lstm_forward
 from repro.data.traffic import make_pems_like_series, make_windows, normalize
-from repro.models.lstm_model import evaluate_mse, train_traffic_model
+from repro.models.lstm_model import (evaluate_mse, evaluate_quantized_mse,
+                                     train_traffic_model)
 from repro.data.traffic import make_traffic_dataset
 
 
@@ -51,6 +52,15 @@ def main(argv=None):
                          "(h, c) per slot; on pallas_fxp the stack runs as "
                          "one fused kernel with the inter-layer sequence "
                          "resident in VMEM")
+    ap.add_argument("--qat", action="store_true",
+                    help="fine-tune under the quantiser (repro.qat) at a "
+                         "calibrated low-bit format and serve the QAT-frozen "
+                         "model instead of the (8,16) PTQ one — the "
+                         "training-side half of the energy story")
+    ap.add_argument("--qat-frac-bits", type=int, default=4,
+                    help="fractional bits of the QAT operating point "
+                         "(total width sized by range calibration)")
+    ap.add_argument("--qat-epochs", type=int, default=2)
     args = ap.parse_args(argv)
 
     # --- train on one sensor (paper) ---------------------------------------
@@ -63,9 +73,34 @@ def main(argv=None):
     xs_t, ys_t = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
     for fb, depth in [(6, 128), (8, 256)]:
         qm = quantize_lstm_model(params, FxpFormat(fb, 16), depth)
-        mse = float(jnp.mean((quantized_lstm_forward(qm, xs_t) - ys_t) ** 2))
+        mse = evaluate_quantized_mse(qm, xs_t, ys_t)
         print(f"PTQ ({fb},16) LUT{depth}: MSE {mse:.5f}")
-    qmodel = quantize_lstm_model(params, FxpFormat(8, 16), 256)
+
+    if args.qat:
+        # --- QAT: fine-tune under the quantiser, freeze losslessly ----------
+        from repro.core.timing_model import (SPARTAN7, LstmModelShape,
+                                             parameterised_energy_per_inference_uj,
+                                             stack_shapes)
+        from repro.qat.calibrate import calibrated_format
+        from repro.qat.qat_lstm import finetune_qat, freeze
+
+        depth = 256
+        fmt = calibrated_format(params, data.x_train[:256], args.qat_frac_bits)
+        ptq = quantize_lstm_model(params, fmt, depth)
+        ptq_mse = evaluate_quantized_mse(ptq, xs_t, ys_t)
+        qat_params, _ = finetune_qat(params, data, fmt, depth,
+                                     epochs=args.qat_epochs)
+        qmodel = freeze(qat_params, fmt, depth)
+        qat_mse = evaluate_quantized_mse(qmodel, xs_t, ys_t)
+        uj = parameterised_energy_per_inference_uj(
+            stack_shapes(LstmModelShape(), args.layers), SPARTAN7["XC7S15"],
+            fmt.total_bits, depth)
+        print(f"QAT ({fmt.frac_bits},{fmt.total_bits}) LUT{depth}: "
+              f"MSE {qat_mse:.5f} (PTQ same format: {ptq_mse:.5f}, "
+              f"x{ptq_mse / qat_mse:.2f}) ~{uj:.2f} uJ/inf modeled")
+        print("serving the QAT-frozen model (bit-exact to QAT eval forward)")
+    else:
+        qmodel = quantize_lstm_model(params, FxpFormat(8, 16), 256)
 
     if args.engine:
         serve_fleet_engine(qmodel, args)

@@ -10,9 +10,13 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 case "${1:-all}" in
   # fast runs the HLO-analyzer suite explicitly and un-deselected first, so
   # the roofline parser can never silently regress to its seed-broken state
-  # (flops=0.0, ~6x traffic overcount) even if those tests grow markers.
+  # (flops=0.0, ~6x traffic overcount) even if those tests grow markers;
+  # then the QAT exactness gate (train-under-the-quantiser == deployed
+  # integers), then everything not marked slow.  The slow tier picks up the
+  # QAT fine-tuning sweep via its 'slow' marker.
   fast) python -m pytest -x -q tests/test_hlo_analysis.py && \
-        exec python -m pytest -x -q -m "not slow" ;;
+        python -m pytest -x -q -m "qat and not slow" && \
+        exec python -m pytest -x -q -m "not slow and not qat" ;;
   slow) exec python -m pytest -q -m slow ;;
   all)  exec python -m pytest -x -q ;;
   *) echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "FxpFormat",
+    "int_bits_for",
     "quantize",
     "dequantize",
     "saturate",
@@ -77,6 +78,36 @@ class FxpFormat:
             f"({self.frac_bits},{self.total_bits}) fixed point: "
             f"range [{self.min_value}, {self.max_value}], lsb {self.scale}"
         )
+
+    @classmethod
+    def for_range(cls, max_abs: float, total_bits: int = 16,
+                  headroom_bits: int = 0) -> "FxpFormat":
+        """The format covering ``|value| <= max_abs`` (to within one LSB at
+        the exact power-of-two boundary, where ``max_abs`` saturates to
+        ``qmax``) with the most fractional bits a ``total_bits`` budget
+        allows: ``int_bits_for(max_abs) + headroom_bits`` integer bits, the
+        rest fractional.  Raises when the budget cannot hold the range at
+        even one fractional bit.  This is the analytic core of QAT range
+        calibration (``repro.qat.calibrate``)."""
+        n_int = int_bits_for(max_abs) + headroom_bits
+        frac = total_bits - n_int
+        if frac < 1:
+            raise ValueError(
+                f"range +-{max_abs} needs {n_int} integer bits, leaving no "
+                f"fractional bits in a {total_bits}-bit budget")
+        return cls(frac_bits=frac, total_bits=total_bits)
+
+
+def int_bits_for(max_abs: float) -> int:
+    """Integer bits (sign included) so ``max_abs`` fits: the smallest ``n``
+    with ``max_abs <= 2**(n-1)`` (0.9 -> 1, 3.5 -> 3; the exact boundary
+    2**(n-1) itself saturates by one LSB).  Shared by ``FxpFormat.for_range``
+    and the QAT calibration observers."""
+    import math
+
+    if max_abs <= 0.0:
+        return 1
+    return 1 + max(0, math.ceil(math.log2(max_abs)))
 
 
 def saturate(q: jax.Array, fmt: FxpFormat) -> jax.Array:

@@ -230,15 +230,9 @@ def lstm_cell_fused(
 
 
 def _lut_fxp(table: jax.Array, spec: lut_mod.LutSpec, q: jax.Array, fmt: FxpFormat) -> jax.Array:
-    """Apply a LUT to fixed-point inputs, returning fixed point.
-
-    The FPGA addresses the LUT with the top bits of the fixed-point value;
-    we reproduce that by dequantising the index computation only (exact —
-    it is integer arithmetic either way) and re-quantising the table output.
-    """
-    x = fxp_mod.dequantize(q, fmt)
-    y = lut_mod.lut_apply(x, table, spec)
-    return fxp_mod.quantize(y, fmt)
+    """Apply a LUT to fixed-point inputs, returning fixed point — shared
+    semantics in ``core.lut.lut_apply_fxp`` (also the QAT forward's LUT)."""
+    return lut_mod.lut_apply_fxp(q, table, spec, fmt)
 
 
 def lstm_cell_fxp(

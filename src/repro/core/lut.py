@@ -28,6 +28,7 @@ __all__ = [
     "LutSpec",
     "build_table",
     "lut_apply",
+    "lut_apply_fxp",
     "lut_sigmoid",
     "lut_tanh",
     "lut_gelu",
@@ -93,6 +94,24 @@ def lut_indices(x: jax.Array, spec: LutSpec) -> jax.Array:
 def lut_apply(x: jax.Array, table: jax.Array, spec: LutSpec) -> jax.Array:
     """Evaluate the LUT: clamp, index, gather.  Shape-preserving."""
     return jnp.take(table, lut_indices(x, spec), axis=0)
+
+
+def lut_apply_fxp(q: jax.Array, table: jax.Array, spec: LutSpec, fmt) -> jax.Array:
+    """Apply a LUT to fixed-point inputs, returning fixed point.
+
+    The FPGA addresses the LUT with the top bits of the fixed-point value; we
+    reproduce that by dequantising for the index computation only (exact — it
+    is integer arithmetic either way) and re-quantising the table output.
+    This is THE fxp-LUT semantics: ``core.lstm.lstm_cell_fxp`` (the bitstream
+    spec), the Pallas kernels' reference, and the QAT fake-quant ops
+    (``repro.qat.fakequant.fake_lut_act``) all evaluate exactly this.
+    ``fmt``: a ``repro.core.fxp.FxpFormat``.
+    """
+    from repro.core import fxp as fxp_mod
+
+    x = fxp_mod.dequantize(q, fmt)
+    y = lut_apply(x, table, spec)
+    return fxp_mod.quantize(y, fmt)
 
 
 @partial(jax.jit, static_argnames=("depth",))

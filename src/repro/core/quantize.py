@@ -6,6 +6,20 @@ while sweeping the fractional width ``x`` (Fig. 6) and the LUT depth
 (Table 1).  ``quantized_lstm_forward`` is that simulator; the sweeps in
 ``benchmarks/`` drive it.
 
+PTQ vs QAT — this module is the **PTQ** half and the shared freeze format:
+``quantize_lstm_model`` snapshots a float model's parameters onto the
+``(x, y)`` grid with no training in the loop (the paper's method).  The
+**QAT** half lives in ``repro.qat``: it *fine-tunes* the float model with
+straight-through fake-quant ops whose forward is the exact integer datapath,
+then freezes through this very function — ``repro.qat.qat_lstm.freeze`` IS
+``quantize_lstm_model``, because the QAT forward already computes on the
+quantised grid (``quantize(fake_quant(w)) == quantize(w)``), making the
+freeze lossless.  Both paths emit the same ``QuantizedLstmModel``, so
+everything downstream (``lstm_forward`` fxp backends, ``SensorFleetEngine``,
+the benchmarks) is agnostic to how the integers were obtained; the QAT-vs-PTQ
+accuracy gap at a given format is measured by ``repro.qat.search`` and the
+``fig6/qat_*`` benchmark rows.
+
 Beyond-paper: ``int8_channelwise`` implements the per-channel int8 weight
 quantisation used by the LM serving path (same C4 idea, modern scaling).
 """

@@ -42,6 +42,10 @@ __all__ = [
     "throughput_gops",
     "energy_per_inference_uj",
     "energy_efficiency_gopj",
+    "parameterised_dynamic_mw",
+    "parameterised_energy_per_inference_uj",
+    "stack_shapes",
+    "stacked_total_cycles",
     "STATE_OF_THE_ART",
 ]
 
@@ -196,6 +200,69 @@ def energy_per_inference_uj(total_mw: float, t_model_s: float) -> float:
 
 def energy_efficiency_gopj(gops: float, total_mw: float) -> float:
     return gops / (total_mw * 1e-3)
+
+
+# -- Parameterised bitwidth/LUT-depth energy (follow-up-paper direction) ------
+#
+# The follow-up (*Energy Efficient LSTM Accelerators ... through
+# Parameterised Architecture Design*, PAPERS.md) makes the datapath width a
+# per-configuration design variable.  First-order scaling at fixed clock:
+# ALU/DSP and weight-memory switching energy grow ~linearly with the operand
+# width y (narrower multipliers + fewer BRAM bits toggled per MAC), while the
+# activation LUTs contribute a small term growing ~logarithmically with depth
+# (address decode + one-of-N BRAM row).  We anchor the split at the paper's
+# measured (y=16, depth=256) operating point: 85 % of dynamic power scales
+# with width, 15 % with LUT depth.  Static power is a floor the sweep cannot
+# touch — which is exactly why Fig. 7 pushes toward the smallest device.
+
+_DYN_WIDTH_FRACTION = 0.85     # of dynamic power at the reference point
+_DYN_LUT_FRACTION = 0.15
+_REF_TOTAL_BITS = 16
+_REF_LUT_DEPTH = 256
+
+
+def parameterised_dynamic_mw(spec: FpgaSpec, total_bits: int = 16,
+                             lut_depth: int | None = 256) -> float:
+    """Dynamic power of a ``(x, y)`` datapath with LUT activations of the
+    given depth, scaled from the reference (16, 256) design point.
+    ``lut_depth=None`` (full-precision activations simulated off-chip) keeps
+    the reference LUT term — it models the deployed depth-256 tables."""
+    import math
+
+    width = total_bits / _REF_TOTAL_BITS
+    depth = _REF_LUT_DEPTH if lut_depth is None else lut_depth
+    lut = math.log2(max(depth, 2)) / math.log2(_REF_LUT_DEPTH)
+    return spec.dynamic_mw * (_DYN_WIDTH_FRACTION * width + _DYN_LUT_FRACTION * lut)
+
+
+def stack_shapes(s: LstmModelShape, n_layers: int) -> list[LstmModelShape]:
+    """Per-layer shapes of a uniform-``H`` stack: layer 0 sees the ``n_i``
+    inputs, every deeper layer sees the ``n_h`` hidden features below it."""
+    return [dataclasses.replace(s, n_i=s.n_i if li == 0 else s.n_h)
+            for li in range(n_layers)]
+
+
+def stacked_total_cycles(shapes) -> int:
+    """Eq. (5.1) numerator for an L-layer stack: each layer pays its own
+    Eq.-5.2 recurrence, the dense head (Eq. 5.3) runs once on the top
+    layer's features.  ``stacked_total_cycles([s]) == total_cycles(s)``."""
+    shapes = list(shapes)
+    return sum(lstm_layer_cycles(x) for x in shapes) + dense_cycles(shapes[-1])
+
+
+def parameterised_energy_per_inference_uj(
+    s, spec: FpgaSpec, total_bits: int = 16,
+    lut_depth: int | None = 256,
+) -> float:
+    """Modeled energy/inference (uJ) of one configuration — Eq. (5.1) timing
+    x (static + width/depth-scaled dynamic) power.  ``s`` is one
+    ``LstmModelShape`` or a per-layer list (stacked models pay every layer's
+    recurrence cycles).  This is the energy axis of the QAT Pareto search
+    (``repro.qat.search``)."""
+    shapes = list(s) if isinstance(s, (list, tuple)) else [s]
+    total_mw = spec.static_mw + parameterised_dynamic_mw(spec, total_bits, lut_depth)
+    return energy_per_inference_uj(total_mw,
+                                   stacked_total_cycles(shapes) / spec.clock_hz)
 
 
 # Paper Table 3 (verbatim): this work vs Eciton [4] vs the EEG LSTM [6].

@@ -27,6 +27,7 @@ __all__ = [
     "mse",
     "train_traffic_model",
     "evaluate_mse",
+    "evaluate_quantized_mse",
 ]
 
 
@@ -144,3 +145,14 @@ def _eval_mse(params, xs, ys):
 
 def evaluate_mse(params: dict[str, Any], xs, ys) -> float:
     return float(_eval_mse(params, jnp.asarray(xs), jnp.asarray(ys)))
+
+
+def evaluate_quantized_mse(qmodel, xs, ys, backend: str = "fxp") -> float:
+    """Test MSE of a frozen ``QuantizedLstmModel`` (PTQ or QAT — both emit
+    the same snapshot) through the bitstream-exact forward.  The single
+    scoring path of the Fig. 6/Table 1 sweeps, the e2e example and the QAT
+    Pareto search."""
+    from repro.core.quantize import quantized_lstm_forward
+
+    pred = quantized_lstm_forward(qmodel, jnp.asarray(xs), backend=backend)
+    return float(mse(pred, jnp.asarray(ys)))

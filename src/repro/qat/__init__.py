@@ -1,0 +1,40 @@
+"""Quantisation-aware training (QAT) for the fxp LSTM datapath.
+
+The paper trains in full precision and post-training-quantises (§5.2); its
+follow-up makes per-configuration bitwidth exploration the central energy
+lever.  This subsystem closes the training side of that loop:
+
+* ``fakequant`` — straight-through-estimator fake-quant ops whose *forward*
+  is the exact integer arithmetic of ``repro.core.fxp`` / ``repro.core.lut``
+  (same rounding, saturation and LUT midpoint tables), with ``custom_vjp``
+  float gradients.
+* ``qat_lstm`` — a QAT LSTM + dense-head model inserting fake-quant at every
+  paper quantisation point (weights, gate pre-activations, LUT activations,
+  cell state), plus ``freeze`` into ``core.quantize.QuantizedLstmModel``.
+* ``calibrate`` — range observers picking ``(x, y)`` formats from activation
+  statistics before fine-tuning.
+* ``search`` — the fractional-bits x LUT-depth Pareto driver (accuracy vs
+  modeled energy/inference).
+
+The load-bearing invariant (tested in ``tests/test_qat.py`` and pinned by
+``tests/golden/lstm_qat_frozen_golden.json``): the QAT eval forward is
+*integer-equal* to ``freeze(...)`` run through
+``lstm_forward(backend="pallas_fxp")`` and through ``SensorFleetEngine`` —
+what you train under is bit-for-bit what you deploy.
+"""
+
+from repro.qat.calibrate import (CalibrationStats, calibrated_format,
+                                 observe_traffic_model, suggest_format)
+from repro.qat.fakequant import (fake_act, fake_fxp_add, fake_fxp_matmul,
+                                 fake_fxp_mul, fake_lut_act, fake_quant)
+from repro.qat.qat_lstm import (finetune_qat, freeze, qat_lstm_forward,
+                                qat_quantize_params, qat_traffic_forward)
+
+__all__ = [
+    "fake_quant", "fake_fxp_matmul", "fake_fxp_mul", "fake_fxp_add",
+    "fake_act", "fake_lut_act",
+    "qat_traffic_forward", "qat_lstm_forward", "qat_quantize_params",
+    "finetune_qat", "freeze",
+    "observe_traffic_model", "suggest_format", "calibrated_format",
+    "CalibrationStats",
+]

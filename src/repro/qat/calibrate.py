@@ -1,0 +1,148 @@
+"""Range calibration: pick ``(x, y)`` fixed-point formats from activation
+statistics *before* fine-tuning.
+
+The paper fixes ``(8, 16)`` by sweeping (Fig. 6); the follow-up
+parameterised-architecture work makes the bitwidth a per-configuration
+design variable.  This module closes the choice analytically: run the
+trained float model over calibration data with **range observers** at every
+quantisation point (input, per-gate pre-activations, activations, cell
+state, hidden state, dense output, weights), and derive from the observed
+``max |value|`` how many integer bits the format needs — the rest of the
+budget goes to fractional bits.
+
+The deployed datapath uses ONE global ``(x, y)`` format (one ALU width, one
+shared LUT bus), so ``suggest_format`` reduces the per-tensor observations
+to the worst-case integer-bit demand; the per-tensor/per-gate detail is kept
+in ``CalibrationStats`` for reporting and for the Pareto search's headroom
+accounting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fxp as fxp_mod
+from repro.core.fxp import FxpFormat
+from repro.core.lstm import GATE_ORDER, LSTMParams
+
+__all__ = [
+    "CalibrationStats",
+    "observe_traffic_model",
+    "int_bits_needed",
+    "suggest_format",
+    "calibrated_format",
+]
+
+
+@dataclasses.dataclass
+class CalibrationStats:
+    """``max |value|`` per quantisation point, keyed
+    ``"<point>/l<layer>"`` (per-gate points: ``"preact_i/l0"`` etc.)."""
+
+    max_abs: dict[str, float]
+
+    def overall(self) -> float:
+        return max(self.max_abs.values())
+
+    def by_prefix(self, prefix: str) -> float:
+        vals = [v for k, v in self.max_abs.items() if k.startswith(prefix)]
+        if not vals:
+            raise KeyError(f"no observation matches prefix {prefix!r}")
+        return max(vals)
+
+
+def _observe_layer(p: LSTMParams, xs: jax.Array) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Instrumented float fused-cell scan: returns the hidden sequence and
+    the per-point max|.| over all steps/batch."""
+    n_h = p.hidden_size
+    batch_shape = xs.shape[:-2]
+    h0 = jnp.zeros((*batch_shape, n_h), jnp.float32)
+    c0 = jnp.zeros((*batch_shape, n_h), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        xh = jnp.concatenate([x_t, h], axis=-1)
+        z = xh @ p.w + p.b
+        zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
+        i_t = jax.nn.sigmoid(zi)
+        f_t = jax.nn.sigmoid(zf)
+        g_t = jnp.tanh(zg)
+        o_t = jax.nn.sigmoid(zo)
+        c_t = f_t * c + i_t * g_t
+        h_t = o_t * jnp.tanh(c_t)
+        obs = {f"preact_{name}": jnp.max(jnp.abs(zz))
+               for name, zz in zip(GATE_ORDER, (zi, zf, zg, zo))}
+        obs["cell"] = jnp.max(jnp.abs(c_t))
+        obs["hidden"] = jnp.max(jnp.abs(h_t))
+        return (h_t, c_t), (h_t, obs)
+
+    (_, _), (h_seq, obs_seq) = jax.lax.scan(
+        step, (h0, c0), jnp.moveaxis(xs, -2, 0))
+    maxes = {k: jnp.max(v) for k, v in obs_seq.items()}
+    return jnp.moveaxis(h_seq, 0, -2), maxes
+
+
+def observe_traffic_model(params: dict[str, Any], xs: jax.Array) -> CalibrationStats:
+    """Run the float traffic model over calibration windows ``xs``
+    (``(N, n_seq, n_i)``) and record every quantisation point's range."""
+    xs = jnp.asarray(xs, jnp.float32)
+    stats: dict[str, float] = {"input": float(jnp.max(jnp.abs(xs)))}
+    lstm = params["lstm"]
+    layers = list(lstm) if isinstance(lstm, (list, tuple)) else [lstm]
+    seq = xs
+    for li, p in enumerate(layers):
+        seq, maxes = _observe_layer(p, seq)
+        stats[f"weights/l{li}"] = float(jnp.max(jnp.abs(p.w)))
+        stats[f"bias/l{li}"] = float(jnp.max(jnp.abs(p.b)))
+        for k, v in maxes.items():
+            stats[f"{k}/l{li}"] = float(v)
+    h = seq[..., -1, :]
+    y = h @ params["dense"]["w"] + params["dense"]["b"]
+    stats["dense_w"] = float(jnp.max(jnp.abs(params["dense"]["w"])))
+    stats["dense_out"] = float(jnp.max(jnp.abs(y)))
+    return CalibrationStats(max_abs=stats)
+
+
+def int_bits_needed(max_abs: float) -> int:
+    """Integer bits (sign included) so that ``max_abs`` fits — delegates to
+    the shared formula in ``core.fxp`` (also used by ``FxpFormat.for_range``)
+    so the two can never disagree on a format for the same range."""
+    return fxp_mod.int_bits_for(max_abs)
+
+
+def suggest_format(stats: CalibrationStats, total_bits: int = 16,
+                   headroom_bits: int = 1) -> FxpFormat:
+    """Global ``(x, y)`` from the worst-case observed range.
+
+    ``headroom_bits`` guards against calibration-set under-coverage (QAT
+    fine-tuning shifts ranges slightly; saturation is graceful but systematic
+    clipping of the forget gate is not).  Fractional bits get whatever the
+    budget leaves: ``x = y - int_bits - headroom``, clamped to ``[1, y-1]``
+    (``FxpFormat.for_range``).
+    """
+    return FxpFormat.for_range(stats.overall(), total_bits, headroom_bits)
+
+
+def calibrated_format(params: dict[str, Any], xs: jax.Array,
+                      frac_bits: int, headroom_bits: int = 1,
+                      stats: CalibrationStats | None = None) -> FxpFormat:
+    """The Pareto-search entry point: given a *fractional* width under
+    exploration, size the total width so the observed dynamic range still
+    fits — ``y = x + int_bits + headroom``.  Raises (rather than silently
+    truncating the integer bits, which would saturate the observed range
+    systematically) when that exceeds the 16-bit ALU.  Pass ``stats`` to
+    reuse one ``observe_traffic_model`` pass across a whole sweep."""
+    if stats is None:
+        stats = observe_traffic_model(params, xs)
+    n_int = int_bits_needed(stats.overall()) + headroom_bits
+    total = frac_bits + n_int
+    if total > 16:
+        raise ValueError(
+            f"frac_bits={frac_bits} plus the {n_int} integer bits the "
+            f"observed range +-{stats.overall():.3g} needs exceeds the "
+            f"16-bit ALU width")
+    return FxpFormat(frac_bits=frac_bits, total_bits=total)

@@ -1,0 +1,217 @@
+"""Straight-through-estimator fake-quant ops, bit-exact to the fxp datapath.
+
+Every op here has the *same forward values* as the corresponding integer op
+in ``repro.core.fxp`` / ``repro.core.lut`` — not "close", identical.  The
+trick is the **on-grid float** representation: a fixed-point integer ``q``
+with format ``(x, y)`` maps to the float ``q * 2**-x``, which is exactly
+representable in float32 for every ``y <= 24`` (the value is a dyadic
+rational with at most ``y`` mantissa bits).  Each fake op
+
+1. quantises its on-grid float inputs (exact: ``quantize(dequantize(q)) == q``
+   — the float-int round trip is a bijection on the grid),
+2. runs the *actual* integer op from ``core.fxp``/``core.lut`` (same
+   rounding shift, same saturation, same LUT midpoint table and index math),
+3. dequantises the integer result back to an on-grid float.
+
+So a network built from these ops computes, value for value, the integers
+the deployed ``pallas_fxp`` kernel computes — ``quantize(output)`` recovers
+them exactly — while ``jax.grad`` sees smooth ``custom_vjp`` gradients:
+
+* ``fake_quant``      — clipped STE: identity inside the representable
+  range, zero outside (the saturating quantiser's subgradient).
+* ``fake_fxp_matmul`` — gradients of the float matmul (the rounding shift
+  and int32 accumulate are invisible to the backward pass).
+* ``fake_lut_act`` / ``fake_act`` — derivative of the *smooth* activation
+  at the input (the staircase LUT forward keeps the bitstream semantics;
+  the backward uses sigmoid'/tanh' so training signal survives).
+* ``fake_fxp_mul`` / ``fake_fxp_add`` — product/sum rules.
+
+``tests/test_qat.py`` asserts the integer equality op by op and end to end.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fxp as fxp_mod
+from repro.core import lut as lut_mod
+from repro.core.fxp import FxpFormat
+from repro.core.lut import LutSpec
+
+__all__ = [
+    "snap",
+    "fake_quant",
+    "fake_fxp_matmul",
+    "fake_fxp_mul",
+    "fake_fxp_add",
+    "fake_act",
+    "fake_lut_act",
+]
+
+
+def snap(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Project onto the ``(x, y)`` grid: ``dequantize(quantize(x))``.
+
+    Not differentiable (gradient of round is zero a.e.) — use ``fake_quant``
+    inside a loss.  ``snap`` is idempotent, and for on-grid inputs it is the
+    identity; it is the non-STE building block the fake ops share.
+    """
+    return fxp_mod.dequantize(fxp_mod.quantize(x, fmt), fmt)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant: the quantisation point itself (weights / inputs)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def fake_quant(x: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Forward: exact quantise -> dequantise.  Backward: clipped STE."""
+    return snap(x, fmt)
+
+
+def _fake_quant_fwd(x, fmt):
+    return snap(x, fmt), x
+
+
+def _fake_quant_bwd(fmt, x, g):
+    # Clipped STE: the saturating quantiser is flat outside the representable
+    # range, so gradient there is zero — this is what lets QAT *pull* weights
+    # back inside the range instead of oscillating at the clip boundary.
+    in_range = (x >= fmt.min_value) & (x <= fmt.max_value)
+    return (g * in_range.astype(g.dtype),)
+
+
+fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fake_fxp_matmul: the gate pre-activation quantisation point
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fake_fxp_matmul(a: jax.Array, w: jax.Array, b: jax.Array,
+                    fmt: FxpFormat) -> jax.Array:
+    """``a @ w + b`` through the integer ALU (int32 accumulate, one rounding
+    right-shift, saturation) — exactly ``core.fxp.fxp_matmul`` — returned as
+    on-grid floats.  ``a``: (..., F) on-grid, ``w``: (F, O), ``b``: (O,).
+    """
+    q = fxp_mod.fxp_matmul(
+        fxp_mod.quantize(a, fmt), fxp_mod.quantize(w, fmt), fmt,
+        bias=fxp_mod.quantize(b, fmt))
+    return fxp_mod.dequantize(q, fmt)
+
+
+def _fake_matmul_fwd(a, w, b, fmt):
+    return fake_fxp_matmul(a, w, b, fmt), (a, w)
+
+
+def _fake_matmul_bwd(fmt, res, g):
+    a, w = res
+    da = g @ w.T
+    dw = jnp.einsum("...i,...o->io", a, g)
+    db = g.reshape(-1, g.shape[-1]).sum(axis=0)
+    return da, dw, db
+
+
+fake_fxp_matmul.defvjp(_fake_matmul_fwd, _fake_matmul_bwd)
+
+
+# ---------------------------------------------------------------------------
+# fake_fxp_mul / fake_fxp_add: the cell-state quantisation points (3.4)/(3.5)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_fxp_mul(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Hadamard product through the 2-cycle ALU: full-width product, rounding
+    right-shift by ``x``, saturate — ``core.fxp.fxp_mul`` on the grid."""
+    q = fxp_mod.fxp_mul(fxp_mod.quantize(a, fmt), fxp_mod.quantize(b, fmt), fmt)
+    return fxp_mod.dequantize(q, fmt)
+
+
+def _fake_mul_fwd(a, b, fmt):
+    return fake_fxp_mul(a, b, fmt), (a, b)
+
+
+def _fake_mul_bwd(fmt, res, g):
+    a, b = res
+    return g * b, g * a
+
+
+fake_fxp_mul.defvjp(_fake_mul_fwd, _fake_mul_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_fxp_add(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
+    """Saturating add, ``core.fxp.fxp_add`` on the grid."""
+    q = fxp_mod.fxp_add(fxp_mod.quantize(a, fmt), fxp_mod.quantize(b, fmt), fmt)
+    return fxp_mod.dequantize(q, fmt)
+
+
+def _fake_add_fwd(a, b, fmt):
+    return fake_fxp_add(a, b, fmt), None
+
+
+def _fake_add_bwd(fmt, res, g):
+    return g, g
+
+
+fake_fxp_add.defvjp(_fake_add_fwd, _fake_add_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Activations: LUT (C3) and full-precision variants
+# ---------------------------------------------------------------------------
+
+_DFNS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "sigmoid": lambda x: jax.nn.sigmoid(x) * (1.0 - jax.nn.sigmoid(x)),
+    "tanh": lambda x: 1.0 - jnp.square(jnp.tanh(x)),
+}
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def fake_lut_act(x: jax.Array, table: jax.Array, spec: LutSpec,
+                 fmt: FxpFormat) -> jax.Array:
+    """The shared-LUT activation (C3) on fixed point: same index math,
+    midpoint table and output re-quantisation as the deployed datapath
+    (``core.lut.lut_apply_fxp``), with the smooth function's derivative as
+    the backward pass (the staircase has zero gradient a.e.)."""
+    q = lut_mod.lut_apply_fxp(fxp_mod.quantize(x, fmt), table, spec, fmt)
+    return fxp_mod.dequantize(q, fmt)
+
+
+def _fake_lut_fwd(x, table, spec, fmt):
+    return fake_lut_act(x, table, spec, fmt), x
+
+
+def _fake_lut_bwd(spec, fmt, x, g):
+    dx = g * _DFNS[spec.fn](x)
+    return dx, None  # the table is a buffer, not a trainable parameter
+
+
+fake_lut_act.defvjp(_fake_lut_fwd, _fake_lut_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def fake_act(x: jax.Array, fn: str, fmt: FxpFormat) -> jax.Array:
+    """Full-precision activation with quantised output — the ``luts=None``
+    path of ``lstm_cell_fxp`` (Fig. 6 quantises data but not activations):
+    ``quantize(fn(dequantize(q)))`` on the grid."""
+    return snap(lut_mod._FNS[fn](x), fmt)
+
+
+def _fake_act_fwd(x, fn, fmt):
+    return fake_act(x, fn, fmt), x
+
+
+def _fake_act_bwd(fn, fmt, x, g):
+    return (g * _DFNS[fn](x),)
+
+
+fake_act.defvjp(_fake_act_fwd, _fake_act_bwd)

@@ -1,0 +1,305 @@
+"""QAT LSTM + dense head: train *under* the quantiser, deploy bit-exactly.
+
+The model mirrors ``repro.models.lstm_model`` (Fig. 1: LSTM stack + dense
+head) but every paper quantisation point runs through the STE fake-quant ops
+of ``repro.qat.fakequant``:
+
+* **weights / biases** — ``fake_quant`` (clipped STE) before every matmul;
+* **gate pre-activations** — ``fake_fxp_matmul`` (int32 accumulate + rounding
+  shift, eq. 3.1–3.3/3.6);
+* **activations** — ``fake_lut_act`` (the shared C3 LUT, midpoint tables) or
+  ``fake_act`` (full-precision-activation mode, the Fig. 6 setting);
+* **cell state** — ``fake_fxp_mul``/``fake_fxp_add`` for eq. (3.4)/(3.5).
+
+Because each fake op's forward IS the corresponding ``core.fxp``/``core.lut``
+integer op, the QAT eval forward computes — value for value, on the on-grid
+float lattice — the integers of ``lstm_cell_fxp``.  ``freeze`` therefore
+reduces to ``core.quantize.quantize_lstm_model`` on the float master weights
+(``quantize(fake_quant(w)) == quantize(w)``), and the frozen model served by
+``lstm_forward(backend="pallas_fxp")`` or ``SensorFleetEngine`` returns
+integers equal to the QAT eval forward (asserted in ``tests/test_qat.py``,
+pinned by ``tests/golden/lstm_qat_frozen_golden.json``).
+
+Fine-tuning (``finetune_qat``) is built on ``training/trainer.py``'s
+canonical train step (``make_train_step``: grad -> global-norm clip -> adam)
+driven over shuffled minibatches of the traffic windows.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lut as lut_mod
+from repro.core.fxp import FxpFormat
+from repro.core.lstm import LSTMParams
+from repro.core.lut import make_lut_pair
+from repro.core.quantize import QuantizedLstmModel, quantize_lstm_model
+from repro.models.lstm_model import init_traffic_model, mse
+from repro.parallel.sharding import RunContext
+from repro.qat.fakequant import (fake_act, fake_fxp_add, fake_fxp_matmul,
+                                 fake_fxp_mul, fake_lut_act, fake_quant)
+from repro.training.optimizer import adam, step_decay_schedule
+from repro.training.trainer import TrainState, make_train_step
+
+__all__ = [
+    "qat_quantize_params",
+    "qat_lstm_cell",
+    "qat_lstm_forward",
+    "qat_traffic_forward",
+    "freeze",
+    "QatTrafficModel",
+    "finetune_qat",
+]
+
+
+def qat_quantize_params(params: dict[str, Any], fmt: FxpFormat) -> dict[str, Any]:
+    """Fake-quantise every weight/bias (the weight quantisation point).
+
+    Returns the same pytree structure with on-grid float values; gradients
+    flow back to the float master weights through the clipped STE.
+    """
+    def q(p: LSTMParams) -> LSTMParams:
+        return LSTMParams(w=fake_quant(p.w, fmt), b=fake_quant(p.b, fmt))
+
+    lstm = params["lstm"]
+    return {
+        "lstm": [q(p) for p in lstm] if isinstance(lstm, (list, tuple)) else q(lstm),
+        "dense": {"w": fake_quant(params["dense"]["w"], fmt),
+                  "b": fake_quant(params["dense"]["b"], fmt)},
+    }
+
+
+def _acts(fmt: FxpFormat, luts: dict | None):
+    """(sigmoid, tanh) fake activations — LUT (C3) or full precision."""
+    if luts is None:
+        return (lambda z: fake_act(z, "sigmoid", fmt),
+                lambda z: fake_act(z, "tanh", fmt))
+    sig_table, sig_spec = luts["sigmoid"]
+    tanh_table, tanh_spec = luts["tanh"]
+    return (lambda z: fake_lut_act(z, sig_table, sig_spec, fmt),
+            lambda z: fake_lut_act(z, tanh_table, tanh_spec, fmt))
+
+
+def qat_lstm_cell(
+    qp: LSTMParams,
+    x_t: jax.Array,
+    h: jax.Array,
+    c: jax.Array,
+    fmt: FxpFormat,
+    luts: dict | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One QAT cell step, op-for-op the schedule of ``lstm_cell_fxp``:
+    stacked-gate matmul (C1), LUT activations (C3), fixed-point elementwise
+    update (C2/C4).  ``qp`` must already be fake-quantised (on-grid); all
+    activations/state stay on-grid throughout."""
+    act_sig, act_tanh = _acts(fmt, luts)
+    xh = jnp.concatenate([x_t, h], axis=-1)
+    z = fake_fxp_matmul(xh, qp.w, qp.b, fmt)
+    zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
+    i_t = act_sig(zi)
+    f_t = act_sig(zf)
+    g_t = act_tanh(zg)
+    o_t = act_sig(zo)
+    c_t = fake_fxp_add(fake_fxp_mul(f_t, c, fmt), fake_fxp_mul(i_t, g_t, fmt), fmt)
+    h_t = fake_fxp_mul(o_t, act_tanh(c_t), fmt)
+    return h_t, c_t
+
+
+def qat_lstm_forward(
+    params,
+    xs: jax.Array,
+    fmt: FxpFormat,
+    luts: dict | None = None,
+    h0=None,
+    c0=None,
+    return_sequence: bool = False,
+    return_state: str = "top",
+):
+    """QAT forward of a (stacked) LSTM — the fake-quant mirror of
+    ``lstm_forward(backend="fxp")``.
+
+    ``params``: float ``LSTMParams`` or a per-layer list (master weights —
+    fake-quantised inside, so the weight-STE gradient reaches them).
+    ``xs``: float ``(..., n_seq, n_in)`` — fake-quantised on entry (the input
+    quantisation point).  ``h0``/``c0``: on-grid per-layer lists or a single
+    array, as in ``lstm_forward``.  Returns the ``lstm_forward`` convention:
+    ``(h, c)`` / per-layer lists / ``(h_seq, state)``.
+
+    Quantising any output with ``fmt`` yields exactly the integers of
+    ``lstm_forward(quantised params, quantised xs, backend="fxp"|"pallas_fxp")``.
+    """
+    if return_state not in ("top", "all"):
+        raise ValueError(f"return_state must be 'top' or 'all', got {return_state!r}")
+    layers = list(params) if isinstance(params, (list, tuple)) else [params]
+    qls = [LSTMParams(w=fake_quant(p.w, fmt), b=fake_quant(p.b, fmt))
+           for p in layers]
+
+    xs_ndim = jnp.asarray(xs).ndim  # per-layer state rank: xs rank - 1 + H
+
+    def state_for(li, s):
+        if s is None:
+            return None
+        if len(layers) == 1 and not isinstance(s, (list, tuple)):
+            return s
+        if isinstance(s, (list, tuple)):
+            if len(s) != len(layers):
+                raise ValueError(
+                    f"per-layer h0/c0 needs {len(layers)} entries, got {len(s)}")
+        else:
+            s = jnp.asarray(s)
+            # same loud rejection as lstm_forward: a stacked array must have
+            # one leading (L,) axis on top of the per-layer state rank
+            if s.ndim != xs_ndim or s.shape[0] != len(layers):
+                raise ValueError(
+                    "multi-layer QAT stacks take per-layer h0/c0 lists or a "
+                    f"stacked ({len(layers)}, ..., n_h) array of rank "
+                    f"{xs_ndim}, got shape {s.shape}")
+        return s[li]
+
+    seq = fake_quant(xs, fmt)
+    hs, cs = [], []
+    for li, qp in enumerate(qls):
+        need_seq = return_sequence or li < len(layers) - 1
+        n_h = qp.hidden_size
+        batch_shape = seq.shape[:-2]
+        h = state_for(li, h0)
+        c = state_for(li, c0)
+        h = h if h is not None else jnp.zeros((*batch_shape, n_h), jnp.float32)
+        c = c if c is not None else jnp.zeros((*batch_shape, n_h), jnp.float32)
+
+        def step(carry, x_t, qp=qp):
+            h, c = carry
+            h, c = qat_lstm_cell(qp, x_t, h, c, fmt, luts)
+            return (h, c), (h if need_seq else None)
+
+        xs_t = jnp.moveaxis(seq, -2, 0)
+        (h, c), out_seq = jax.lax.scan(step, (h, c), xs_t)
+        hs.append(h)
+        cs.append(c)
+        if need_seq:
+            seq = jnp.moveaxis(out_seq, 0, -2)
+
+    state = (hs, cs) if return_state == "all" else (hs[-1], cs[-1])
+    if return_sequence:
+        return seq, state
+    return state
+
+
+def qat_traffic_forward(params: dict[str, Any], xs: jax.Array, fmt: FxpFormat,
+                        luts: dict | None = None) -> jax.Array:
+    """QAT forward of the full traffic model (LSTM stack + dense head).
+
+    Float in, on-grid float out — exactly ``dequantize`` of the integers
+    ``quantized_lstm_forward(freeze(params, ...), xs)`` computes, so the two
+    are *equal as floats* (both sides are on the same grid).
+    """
+    h, _ = qat_lstm_forward(params["lstm"], xs, fmt, luts)
+    w = fake_quant(params["dense"]["w"], fmt)
+    b = fake_quant(params["dense"]["b"], fmt)
+    return fake_fxp_matmul(h, w, b, fmt)
+
+
+def freeze(params: dict[str, Any], fmt: FxpFormat,
+           lut_depth: int | None) -> QuantizedLstmModel:
+    """Freeze a QAT model to the deployable integer snapshot — **lossless**:
+    the QAT forward already computes on the quantised grid, and
+    ``quantize(fake_quant(w)) == quantize(w)``, so freezing the float master
+    weights directly through PTQ's ``quantize_lstm_model`` reproduces the
+    QAT eval integers exactly (the QAT<->PTQ freeze parity contract; golden
+    fixture ``tests/golden/lstm_qat_frozen_golden.json``)."""
+    return quantize_lstm_model(params, fmt, lut_depth)
+
+
+# ---------------------------------------------------------------------------
+# Fine-tuning on the canonical train step
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QatTrafficModel:
+    """Adapter exposing the QAT traffic model to ``make_train_step``'s
+    ``model.init``/``model.loss`` protocol."""
+
+    fmt: FxpFormat
+    lut_depth: int | None = None
+    input_size: int = 1
+    hidden_size: int = 20
+    out_size: int = 1
+    num_layers: int = 1
+
+    def __post_init__(self):
+        self.luts = make_lut_pair(self.lut_depth) if self.lut_depth else None
+
+    def init(self, key: jax.Array) -> dict[str, Any]:
+        return init_traffic_model(key, self.input_size, self.hidden_size,
+                                  self.out_size, num_layers=self.num_layers)
+
+    def loss(self, params, batch, ctx) -> tuple[jax.Array, dict]:
+        xs, ys = batch
+        pred = qat_traffic_forward(params, xs, self.fmt, self.luts)
+        return mse(pred, ys), {}
+
+
+def finetune_qat(
+    params: dict[str, Any],
+    data,
+    fmt: FxpFormat,
+    lut_depth: int | None = None,
+    *,
+    epochs: int = 3,
+    lr0: float = 1e-3,
+    batch_size: int = 64,
+    seed: int = 0,
+    max_samples: int | None = None,
+    verbose: bool = False,
+) -> tuple[dict[str, Any], list[float]]:
+    """Fine-tune ``params`` (a trained float traffic model) under the
+    quantiser for ``fmt``/``lut_depth``.
+
+    Built on ``training/trainer.py``'s ``make_train_step`` (grad ->
+    global-norm clip -> adam) over shuffled minibatches; lr decays with the
+    paper's StepLR shape (x0.5 every 3 epochs).  Returns the fine-tuned
+    float master params (freeze with ``freeze(...)``) and the per-epoch
+    mean-loss history.
+    """
+    is_stack = isinstance(params["lstm"], (list, tuple))
+    n_layers = len(params["lstm"]) if is_stack else 1
+    lstm0 = params["lstm"][0] if is_stack else params["lstm"]
+    model = QatTrafficModel(
+        fmt=fmt, lut_depth=lut_depth,
+        input_size=lstm0.input_size, hidden_size=lstm0.hidden_size,
+        out_size=params["dense"]["w"].shape[1], num_layers=n_layers)
+
+    xs = np.asarray(data.x_train)
+    ys = np.asarray(data.y_train)
+    if max_samples is not None:
+        xs, ys = xs[:max_samples], ys[:max_samples]
+    n_batches = max(1, len(xs) // batch_size)
+
+    opt = adam()  # paper betas/eps
+    sched = step_decay_schedule(lr0, step_size=3 * n_batches, gamma=0.5)
+    # NOT donated: the caller keeps (and typically reuses) the float master
+    # params across several sweep points; donation would delete their buffers.
+    step_fn = jax.jit(make_train_step(model, RunContext(), opt, sched))
+    state = TrainState(step=jnp.zeros((), jnp.int32), params=params,
+                       opt_state=opt.init(params))
+
+    rng = np.random.default_rng(seed)
+    history = []
+    for epoch in range(epochs):
+        order = rng.permutation(len(xs))[: n_batches * batch_size]
+        losses = []
+        for k in range(n_batches):
+            sl = order[k * batch_size : (k + 1) * batch_size]
+            state, metrics = step_fn(
+                state, (jnp.asarray(xs[sl]), jnp.asarray(ys[sl])))
+            losses.append(metrics["loss"])
+        history.append(float(jnp.mean(jnp.stack(losses))))
+        if verbose:
+            print(f"qat epoch {epoch:02d} train_mse={history[-1]:.5f}")
+    return state.params, history

@@ -1,0 +1,175 @@
+"""Automated precision / LUT-depth Pareto search: accuracy vs modeled energy.
+
+The paper picks ``(8, 16)`` + depth-256 LUTs by sweeping PTQ variants of one
+trained model (Fig. 6 / Table 1).  This driver extends that sweep into the
+follow-up paper's design space *with training in the loop*: for every
+operating point ``(frac_bits, lut_depth)`` it
+
+1. sizes the total width from calibration (``calibrate.calibrated_format``:
+   ``y = x + observed-int-bits + headroom``, 16-bit ALU cap),
+2. evaluates **PTQ** (freeze the float model directly — the paper's method),
+3. **QAT fine-tunes** the float model under that exact quantiser
+   (``qat_lstm.finetune_qat``) and freezes the result,
+4. scores both frozen models through the *deployment* datapath
+   (``quantized_lstm_forward``, integer-exact to ``pallas_fxp``), and
+5. attaches the modeled energy/inference of the configuration
+   (``core.timing_model.parameterised_energy_per_inference_uj``).
+
+The report (JSON-serialisable dict; ``--json`` writes it) lists every point
+with ``ptq_mse``/``qat_mse``/``energy_uj`` and marks the Pareto frontier of
+(energy, QAT MSE).  The QAT payoff shows up at low fractional widths, where
+fine-tuning under the coarse grid recovers accuracy PTQ cannot — opening
+operating points (lower energy at acceptable MSE) the PTQ-only sweep would
+discard.
+
+    PYTHONPATH=src python -m repro.qat.search --frac-bits 3 4 6 8 \
+        --lut-depths 64 256 --epochs 2 --json pareto_report.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import timing_model as tm
+from repro.core.quantize import quantize_lstm_model
+from repro.models.lstm_model import evaluate_mse, evaluate_quantized_mse
+from repro.qat.calibrate import calibrated_format, observe_traffic_model
+from repro.qat.qat_lstm import finetune_qat, freeze
+
+__all__ = ["pareto_search", "pareto_frontier", "main"]
+
+
+def pareto_frontier(points: list[dict[str, Any]],
+                    mse_key: str = "qat_mse") -> list[int]:
+    """Indices of the (energy, MSE) Pareto-optimal points: no other point is
+    at most as expensive AND strictly more accurate (or vice versa)."""
+    frontier = []
+    for i, p in enumerate(points):
+        dominated = any(
+            (q["energy_uj"] <= p["energy_uj"] and q[mse_key] < p[mse_key])
+            or (q["energy_uj"] < p["energy_uj"] and q[mse_key] <= p[mse_key])
+            for q in points)
+        if not dominated:
+            frontier.append(i)
+    return frontier
+
+
+def pareto_search(
+    data,
+    params: dict[str, Any],
+    *,
+    frac_bits: Sequence[int] = (3, 4, 5, 6, 8),
+    lut_depths: Sequence[int] = (64, 256),
+    epochs: int = 2,
+    lr0: float = 1e-3,
+    batch_size: int = 64,
+    max_samples: int | None = None,
+    spec: tm.FpgaSpec = tm.SPARTAN7["XC7S15"],
+    shape=None,      # LstmModelShape, per-layer list, or None (from params)
+    verbose: bool = False,
+) -> dict[str, Any]:
+    """Sweep ``frac_bits x lut_depths``, QAT-fine-tuning each point, and
+    return the accuracy-vs-energy Pareto report (JSON-serialisable)."""
+    xs_t, ys_t = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    lstm = params["lstm"]
+    layers = list(lstm) if isinstance(lstm, (list, tuple)) else [lstm]
+    if shape is None:
+        # one shape PER LAYER: a stacked model pays every layer's recurrence
+        shape = [tm.LstmModelShape(
+            n_seq=int(data.x_test.shape[1]), n_i=p.input_size,
+            n_h=p.hidden_size, n_f=layers[-1].hidden_size,
+            n_o=int(params["dense"]["w"].shape[1])) for p in layers]
+    shapes = list(shape) if isinstance(shape, (list, tuple)) else [shape]
+
+    float_mse = evaluate_mse(params, data.x_test, data.y_test)
+    # one calibration pass serves the whole sweep (the stats depend only on
+    # params and the calibration windows, not on the format under test)
+    stats = observe_traffic_model(params, data.x_train[:256])
+    points = []
+    for fb in frac_bits:
+        fmt = calibrated_format(params, data.x_train[:256], fb, stats=stats)
+        for depth in lut_depths:
+            ptq = quantize_lstm_model(params, fmt, depth)
+            ptq_mse = evaluate_quantized_mse(ptq, xs_t, ys_t)
+            qat_params, history = finetune_qat(
+                params, data, fmt, depth, epochs=epochs, lr0=lr0,
+                batch_size=batch_size, max_samples=max_samples)
+            qat_mse = evaluate_quantized_mse(freeze(qat_params, fmt, depth),
+                                             xs_t, ys_t)
+            energy = tm.parameterised_energy_per_inference_uj(
+                shapes, spec, fmt.total_bits, depth)
+            point = {
+                "frac_bits": fb,
+                "total_bits": fmt.total_bits,
+                "lut_depth": depth,
+                "ptq_mse": ptq_mse,
+                "qat_mse": qat_mse,
+                "qat_improvement": ptq_mse / qat_mse if qat_mse > 0 else float("inf"),
+                "energy_uj": energy,
+                "qat_train_history": history,
+            }
+            points.append(point)
+            if verbose:
+                print(f"({fb},{fmt.total_bits}) LUT{depth}: "
+                      f"PTQ {ptq_mse:.5f} QAT {qat_mse:.5f} "
+                      f"energy {energy:.2f} uJ")
+
+    frontier = pareto_frontier(points)
+    for i in frontier:
+        points[i]["pareto"] = True
+    s0 = shapes[0]
+    return {
+        "spec": spec.name,
+        "shape": {"n_seq": s0.n_seq, "n_i": s0.n_i, "n_h": s0.n_h,
+                  "n_f": s0.n_f, "n_o": s0.n_o, "n_layers": len(shapes)},
+        "float_mse": float_mse,
+        "epochs": epochs,
+        "points": points,
+        "pareto_indices": frontier,
+    }
+
+
+def main(argv=None) -> dict[str, Any]:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--frac-bits", type=int, nargs="+", default=[3, 4, 6, 8])
+    ap.add_argument("--lut-depths", type=int, nargs="+", default=[64, 256])
+    ap.add_argument("--epochs", type=int, default=2, help="QAT fine-tune epochs")
+    ap.add_argument("--train-epochs", type=int, default=12,
+                    help="float pre-training epochs")
+    ap.add_argument("--layers", type=int, default=1)
+    ap.add_argument("--max-samples", type=int, default=None,
+                    help="cap QAT fine-tuning samples/epoch (smoke tests)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the Pareto report here")
+    args = ap.parse_args(argv)
+
+    from repro.data.traffic import make_traffic_dataset
+    from repro.models.lstm_model import train_traffic_model
+
+    data = make_traffic_dataset(seed=0)
+    params, _ = train_traffic_model(data, epochs=args.train_epochs,
+                                    num_layers=args.layers)
+    report = pareto_search(
+        data, params, frac_bits=args.frac_bits, lut_depths=args.lut_depths,
+        epochs=args.epochs, max_samples=args.max_samples, verbose=True)
+
+    print(f"\nfloat MSE {report['float_mse']:.5f}; Pareto frontier "
+          f"(energy uJ -> QAT MSE):")
+    for i in report["pareto_indices"]:
+        p = report["points"][i]
+        print(f"  ({p['frac_bits']},{p['total_bits']}) LUT{p['lut_depth']}: "
+              f"{p['energy_uj']:.2f} uJ -> {p['qat_mse']:.5f} "
+              f"(PTQ {p['ptq_mse']:.5f}, x{p['qat_improvement']:.2f})")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=1)
+        print(f"wrote {args.json}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

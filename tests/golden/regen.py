@@ -2,14 +2,19 @@
 
     PYTHONPATH=src python tests/golden/regen.py
 
-Rewrites ``lstm_fxp_golden.json`` (single layer) and
+Rewrites ``lstm_fxp_golden.json`` (single layer),
 ``lstm_fxp_stack2_golden.json`` (2-layer stack: per-layer final states + the
-top layer's hidden sequence — the multi-layer state-plumbing contract) next
-to this file.  See README.md for when (and when not) to regenerate.  Inputs
-and parameters are drawn as raw integers from a fixed seed — no float
-quantisation on the input side — so the fixtures are reproducible
+top layer's hidden sequence — the multi-layer state-plumbing contract) and
+``lstm_qat_frozen_golden.json`` (a QAT-fine-tuned model frozen to integers —
+the trained-then-frozen QAT<->PTQ parity contract) next to this file.  See
+README.md for when (and when not) to regenerate.  Inputs and parameters of
+the first two are drawn as raw integers from a fixed seed — no float
+quantisation on the input side — so those fixtures are reproducible
 everywhere; the LUT tables are float32 sampled once and stored verbatim
-(float32 -> double -> JSON round-trips exactly).
+(float32 -> double -> JSON round-trips exactly).  The QAT fixture runs a
+short deterministic train + fine-tune, so regenerating it on different
+BLAS/hardware may drift the *committed weights* — the committed integers
+remain the authority either way (tests replay only stored data).
 """
 
 from __future__ import annotations
@@ -31,6 +36,12 @@ LUT_DEPTH = 64
 
 OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_golden.json"
 STACK_OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_stack2_golden.json"
+QAT_OUT_PATH = pathlib.Path(__file__).parent / "lstm_qat_frozen_golden.json"
+
+# QAT fixture knobs: small model + short fine-tune keeps the JSON compact
+QAT_FRAC, QAT_TOTAL, QAT_LUT_DEPTH = 6, 12, 64
+QAT_HIDDEN, QAT_TRAIN_EPOCHS, QAT_FT_EPOCHS = 10, 2, 1
+QAT_N_WINDOWS = 8
 
 
 def _lut_entry(luts, name):
@@ -80,6 +91,56 @@ def regen_stack2() -> None:
     print(f"wrote {STACK_OUT_PATH} ({STACK_OUT_PATH.stat().st_size} bytes)")
 
 
+def regen_qat() -> None:
+    """QAT-frozen fixture: train the paper model briefly, fine-tune it under
+    the quantiser, freeze, and pin the frozen integers AND their outputs on
+    a handful of test windows.  Tests replay only the committed integers —
+    through ``lstm_layer_fxp``, the Pallas kernel, and the QAT eval forward
+    (whose on-grid floats must quantise back to exactly these numbers)."""
+    from repro.data.traffic import make_traffic_dataset
+    from repro.models.lstm_model import train_traffic_model
+    from repro.qat.qat_lstm import finetune_qat, freeze
+    from repro.core import fxp as fxp_mod
+
+    fmt = FxpFormat(QAT_FRAC, QAT_TOTAL)
+    data = make_traffic_dataset(seed=0)
+    params, _ = train_traffic_model(data, epochs=QAT_TRAIN_EPOCHS,
+                                    hidden_size=QAT_HIDDEN)
+    params, _ = finetune_qat(params, data, fmt, QAT_LUT_DEPTH,
+                             epochs=QAT_FT_EPOCHS, max_samples=2048)
+    qm = freeze(params, fmt, QAT_LUT_DEPTH)
+
+    xs = jnp.asarray(data.x_test[:QAT_N_WINDOWS])
+    qxs = fxp_mod.quantize(xs, fmt)
+    luts = make_lut_pair(QAT_LUT_DEPTH)
+    h_seq, (qh, qc) = lstm_layer_fxp(qm.lstm, qxs, fmt, luts,
+                                     return_sequence=True)
+    qy = fxp_mod.fxp_matmul(qh, qm.dense_w, fmt, bias=qm.dense_b)
+
+    golden = {
+        "description": "trained-then-frozen QAT model: integer-exact "
+                       "QAT<->PTQ freeze parity fixture; regenerate with "
+                       "tests/golden/regen.py (see README.md)",
+        "fmt": {"frac_bits": QAT_FRAC, "total_bits": QAT_TOTAL},
+        "lut": {"depth": QAT_LUT_DEPTH,
+                "sigmoid": _lut_entry(luts, "sigmoid"),
+                "tanh": _lut_entry(luts, "tanh")},
+        "qxs": np.asarray(qxs).tolist(),
+        "qw": np.asarray(qm.lstm.w).tolist(),
+        "qb": np.asarray(qm.lstm.b).tolist(),
+        "dense_qw": np.asarray(qm.dense_w).tolist(),
+        "dense_qb": np.asarray(qm.dense_b).tolist(),
+        "outputs": {
+            "h_seq": np.asarray(h_seq).tolist(),
+            "qh": np.asarray(qh).tolist(),
+            "qc": np.asarray(qc).tolist(),
+            "qy": np.asarray(qy).tolist(),
+        },
+    }
+    QAT_OUT_PATH.write_text(json.dumps(golden, indent=1) + "\n")
+    print(f"wrote {QAT_OUT_PATH} ({QAT_OUT_PATH.stat().st_size} bytes)")
+
+
 def main() -> None:
     fmt = FxpFormat(FRAC, TOTAL)
     rng = np.random.default_rng(SEED)
@@ -123,3 +184,4 @@ def main() -> None:
 if __name__ == "__main__":
     main()
     regen_stack2()
+    regen_qat()

@@ -240,6 +240,50 @@ def test_stacked_chunked_continuation_integer_equal(n_layers, n_seq, n_h, b,
                                       err_msg=f"layer {li} c")
 
 
+@pytest.mark.parametrize("tile", [None, 4])
+def test_heterogeneous_h_stack_fallback_integer_equal(tile):
+    """ROADMAP open item: stacks with MIXED hidden sizes cannot fuse into
+    ``lstm_sequence_fxp_stack_pallas`` (its state buffer is (L, B, H)) and
+    must fall back to layer-by-layer — that fallback path must stay
+    integer-equal to ``lstm_layer_fxp`` chained per layer, tiled or not."""
+    from repro.core.lstm import lstm_layer_fxp
+
+    fmt = FxpFormat(8, 16)
+    sizes = [(2, 12), (12, 8), (8, 20)]     # H = 12 -> 8 -> 20
+    qps = []
+    for li, (n_in, n_h) in enumerate(sizes):
+        p = init_lstm_params(jax.random.PRNGKey(11 + li), n_in, n_h)
+        qps.append(LSTMParams(w=quantize(p.w, fmt), b=quantize(p.b, fmt)))
+    xs = jnp.asarray(RNG.normal(size=(3, 14, 2)).astype(np.float32))
+    qxs = quantize(xs, fmt)
+    luts = make_lut_pair(64)
+
+    # oracle: the readable per-layer simulator, chained by hand
+    seq_ref = qxs
+    hs_ref, cs_ref = [], []
+    for qp in qps:
+        seq_ref, (qh, qc) = lstm_layer_fxp(qp, seq_ref, fmt, luts,
+                                           return_sequence=True)
+        hs_ref.append(qh)
+        cs_ref.append(qc)
+
+    for backend in FXP_BACKENDS:
+        seq, (hs, cs) = lstm_forward(
+            qps, qxs, backend=backend, fmt=fmt, luts=luts, block_b=2,
+            time_tile=tile if backend == "pallas_fxp" else None,
+            return_sequence=True, return_state="all")
+        np.testing.assert_array_equal(np.asarray(seq), np.asarray(seq_ref),
+                                      err_msg=f"{backend} top h_seq")
+        for li in range(len(qps)):
+            np.testing.assert_array_equal(
+                np.asarray(hs[li]), np.asarray(hs_ref[li]),
+                err_msg=f"{backend} layer {li} h")
+            np.testing.assert_array_equal(
+                np.asarray(cs[li]), np.asarray(cs_ref[li]),
+                err_msg=f"{backend} layer {li} c")
+        assert [h.shape[-1] for h in hs] == [12, 8, 20], backend
+
+
 def test_stacked_state_accepts_stacked_array():
     """h0/c0 may be one (L, B, H) array instead of per-layer lists."""
     fmt = FxpFormat(8, 16)

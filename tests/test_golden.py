@@ -21,6 +21,8 @@ from repro.kernels.lstm_fxp_seq import (lstm_sequence_fxp_pallas,
 GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "lstm_fxp_golden.json"
 STACK_PATH = (pathlib.Path(__file__).parent / "golden"
               / "lstm_fxp_stack2_golden.json")
+QAT_PATH = (pathlib.Path(__file__).parent / "golden"
+            / "lstm_qat_frozen_golden.json")
 
 
 def _load(path):
@@ -40,6 +42,11 @@ def golden():
 @pytest.fixture(scope="module")
 def golden_stack():
     return _load(STACK_PATH)
+
+
+@pytest.fixture(scope="module")
+def golden_qat():
+    return _load(QAT_PATH)
 
 
 def _stored_luts(g):
@@ -115,6 +122,57 @@ def test_stack_simulator_matches_golden_integers(golden_stack):
         np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"][li]),
                                       err_msg=f"layer {li} qc")
     np.testing.assert_array_equal(np.asarray(xs), np.asarray(out["h_seq_top"]))
+
+
+@pytest.mark.qat
+def test_qat_frozen_golden_integers(golden_qat):
+    """The trained-then-frozen QAT fixture: the committed integer weights
+    replayed through (a) the fxp simulator, (b) the fused Pallas kernel and
+    (c) the QAT eval forward (on dequantised masters, quantised back) all
+    reproduce the committed outputs exactly — the QAT<->PTQ freeze-parity
+    contract pinned to a reviewable JSON diff."""
+    from repro.core.fxp import dequantize, fxp_matmul, quantize
+    from repro.qat.qat_lstm import qat_traffic_forward
+
+    g = golden_qat
+    fmt = g["_fmt"]
+    luts = _stored_luts(g)
+    qxs = jnp.asarray(g["qxs"], jnp.int32)
+    qp = LSTMParams(w=jnp.asarray(g["qw"], jnp.int32),
+                    b=jnp.asarray(g["qb"], jnp.int32))
+    dense_qw = jnp.asarray(g["dense_qw"], jnp.int32)
+    dense_qb = jnp.asarray(g["dense_qb"], jnp.int32)
+    out = g["outputs"]
+
+    # (a) simulator
+    h_seq, (qh, qc) = lstm_layer_fxp(qp, qxs, fmt, luts, return_sequence=True)
+    np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(out["h_seq"]))
+    np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
+    np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"]))
+    qy = fxp_matmul(qh, dense_qw, fmt, bias=dense_qb)
+    np.testing.assert_array_equal(np.asarray(qy), np.asarray(out["qy"]))
+
+    # (b) the deployed kernel
+    (sig_t, sig_s), (tanh_t, tanh_s) = luts["sigmoid"], luts["tanh"]
+    h_seq_k, qh_k, qc_k = lstm_sequence_fxp_pallas(
+        qxs, qp.w, qp.b, None, None, sig_t, tanh_t,
+        frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
+        sig_lo=sig_s.bounds[0], sig_hi=sig_s.bounds[1],
+        tanh_lo=tanh_s.bounds[0], tanh_hi=tanh_s.bounds[1],
+        return_sequence=True, block_b=4, time_tile=None, interpret=True)
+    np.testing.assert_array_equal(np.asarray(h_seq_k), np.asarray(out["h_seq"]))
+    np.testing.assert_array_equal(np.asarray(qh_k), np.asarray(out["qh"]))
+    np.testing.assert_array_equal(np.asarray(qc_k), np.asarray(out["qc"]))
+
+    # (c) QAT eval forward: dequantised masters are valid on-grid floats,
+    # and the fake-quant forward must land on exactly the same integers
+    params = {"lstm": LSTMParams(w=dequantize(qp.w, fmt),
+                                 b=dequantize(qp.b, fmt)),
+              "dense": {"w": dequantize(dense_qw, fmt),
+                        "b": dequantize(dense_qb, fmt)}}
+    pred = qat_traffic_forward(params, dequantize(qxs, fmt), fmt, luts)
+    np.testing.assert_array_equal(np.asarray(quantize(pred, fmt)),
+                                  np.asarray(out["qy"]))
 
 
 @pytest.mark.parametrize("time_tile", [None, 5])

@@ -1,0 +1,387 @@
+"""QAT subsystem: fake-quant ops bit-exact to the fxp datapath, freeze
+parity with deployment (pallas_fxp + SensorFleetEngine), calibration, and
+the precision/LUT-depth Pareto search.
+
+The load-bearing contract (ISSUE 4 acceptance): the QAT eval forward is
+*integer-equal* to ``freeze(...)`` -> ``lstm_forward(backend="pallas_fxp")``
+and to ``SensorFleetEngine`` serving of the frozen model.  Fast exactness
+tests carry the ``qat`` marker and are gated first in ``scripts/ci.sh
+fast``; the fine-tuning sweep rides the slow tier.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fxp import FxpFormat, dequantize, fxp_add, fxp_matmul, fxp_mul, quantize
+from repro.core.lstm import LSTMParams, init_lstm_params, lstm_forward
+from repro.core.lut import LutSpec, build_table, lut_apply_fxp, make_lut_pair
+from repro.core.quantize import quantized_lstm_forward
+from repro.models.lstm_model import init_traffic_model
+from repro.qat.calibrate import (calibrated_format, int_bits_needed,
+                                 observe_traffic_model, suggest_format)
+from repro.qat.fakequant import (fake_act, fake_fxp_add, fake_fxp_matmul,
+                                 fake_fxp_mul, fake_lut_act, fake_quant, snap)
+from repro.qat.qat_lstm import (finetune_qat, freeze, qat_lstm_forward,
+                                qat_traffic_forward)
+from repro.qat.search import pareto_frontier, pareto_search
+
+pytestmark = pytest.mark.qat
+
+RNG = np.random.default_rng(7)
+FMT = FxpFormat(8, 16)
+
+
+def _ongrid(shape, fmt=FMT, scale=2.0):
+    """Random on-grid floats (the lattice QAT activations live on)."""
+    return snap(jnp.asarray(RNG.normal(size=shape, scale=scale), jnp.float32), fmt)
+
+
+# ---------------------------------------------------------------------------
+# Fake ops: forward integer-exact, backward smooth
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", [FxpFormat(8, 16), FxpFormat(4, 10), FxpFormat(6, 12)])
+def test_fake_quant_is_grid_projection(fmt):
+    x = jnp.asarray(RNG.normal(size=(40,), scale=3.0), jnp.float32)
+    y = fake_quant(x, fmt)
+    # forward == dequantize(quantize(.)): same integers, and idempotent
+    np.testing.assert_array_equal(np.asarray(quantize(y, fmt)),
+                                  np.asarray(quantize(x, fmt)))
+    np.testing.assert_array_equal(np.asarray(fake_quant(y, fmt)), np.asarray(y))
+
+
+def test_fake_quant_clipped_ste_gradient():
+    fmt = FxpFormat(8, 10)  # range (-2, 2): easy to straddle
+    x = jnp.asarray([-5.0, -1.0, 0.3, 1.9, 5.0], jnp.float32)
+    g = jax.grad(lambda v: jnp.sum(fake_quant(v, fmt)))(x)
+    np.testing.assert_array_equal(np.asarray(g), [0.0, 1.0, 1.0, 1.0, 0.0])
+
+
+@pytest.mark.parametrize("fmt", [FxpFormat(8, 16), FxpFormat(5, 11)])
+def test_fake_matmul_matches_integer_alu(fmt):
+    a = _ongrid((3, 7), fmt, scale=0.5)
+    w = jnp.asarray(RNG.normal(size=(7, 4), scale=0.5), jnp.float32)
+    b = jnp.asarray(RNG.normal(size=(4,), scale=0.2), jnp.float32)
+    y = fake_fxp_matmul(a, w, b, fmt)
+    q_ref = fxp_matmul(quantize(a, fmt), quantize(w, fmt), fmt,
+                       bias=quantize(b, fmt))
+    np.testing.assert_array_equal(np.asarray(quantize(y, fmt)), np.asarray(q_ref))
+    # dequantize is exact, so the floats match too
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(dequantize(q_ref, fmt)))
+
+
+def test_fake_matmul_gradients_are_float_matmul_gradients():
+    a = _ongrid((3, 7), scale=0.5)
+    w = jnp.asarray(RNG.normal(size=(7, 4), scale=0.5), jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    g = jnp.asarray(RNG.normal(size=(3, 4)), jnp.float32)
+    da, dw, db = jax.grad(
+        lambda a, w, b: jnp.sum(fake_fxp_matmul(a, w, b, FMT) * g),
+        argnums=(0, 1, 2))(a, w, b)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(g @ w.T), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(a.T @ g), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(db), np.asarray(g.sum(0)), rtol=1e-6)
+
+
+def test_fake_mul_add_match_integer_ops():
+    a, b = _ongrid((5, 6), scale=0.7), _ongrid((5, 6), scale=0.7)
+    qa, qb = quantize(a, FMT), quantize(b, FMT)
+    np.testing.assert_array_equal(
+        np.asarray(quantize(fake_fxp_mul(a, b, FMT), FMT)),
+        np.asarray(fxp_mul(qa, qb, FMT)))
+    np.testing.assert_array_equal(
+        np.asarray(quantize(fake_fxp_add(a, b, FMT), FMT)),
+        np.asarray(fxp_add(qa, qb, FMT)))
+
+
+@pytest.mark.parametrize("fn,depth", [("sigmoid", 64), ("tanh", 64),
+                                      ("sigmoid", 256), ("tanh", 256)])
+def test_fake_lut_act_matches_fxp_lut(fn, depth):
+    spec = LutSpec(fn, depth)
+    table = build_table(spec)
+    x = _ongrid((64,), scale=3.0)
+    y = fake_lut_act(x, table, spec, FMT)
+    q_ref = lut_apply_fxp(quantize(x, FMT), table, spec, FMT)
+    np.testing.assert_array_equal(np.asarray(quantize(y, FMT)), np.asarray(q_ref))
+    # backward: the smooth derivative, not the staircase's zero
+    g = jax.grad(lambda v: jnp.sum(fake_lut_act(v, table, spec, FMT)))(x)
+    ref = (jax.nn.sigmoid(x) * (1 - jax.nn.sigmoid(x)) if fn == "sigmoid"
+           else 1 - jnp.tanh(x) ** 2)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(ref), rtol=1e-5)
+
+
+def test_fake_act_matches_full_precision_activation_path():
+    x = _ongrid((32,), scale=2.0)
+    for fn, ref_fn in (("sigmoid", jax.nn.sigmoid), ("tanh", jnp.tanh)):
+        y = fake_act(x, fn, FMT)
+        # the luts=None path of lstm_cell_fxp: quantize(fn(dequantize(q)))
+        q_ref = quantize(ref_fn(dequantize(quantize(x, FMT), FMT)), FMT)
+        np.testing.assert_array_equal(np.asarray(quantize(y, FMT)), np.asarray(q_ref))
+
+
+# ---------------------------------------------------------------------------
+# QAT forward == fxp backend, end to end
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("frac,total", [(8, 16), (4, 10)])
+@pytest.mark.parametrize("lut_depth", [None, 64])
+def test_qat_lstm_forward_integer_equal_to_fxp(frac, total, lut_depth):
+    fmt = FxpFormat(frac, total)
+    luts = make_lut_pair(lut_depth) if lut_depth else None
+    p = init_lstm_params(jax.random.PRNGKey(0), 2, 20)
+    xs = jnp.asarray(RNG.normal(size=(3, 12, 2)).astype(np.float32))
+    qp = LSTMParams(w=quantize(p.w, fmt), b=quantize(p.b, fmt))
+    seq_q, (qh, qc) = lstm_forward(qp, quantize(xs, fmt), backend="fxp",
+                                   fmt=fmt, luts=luts, return_sequence=True)
+    seq_f, (h, c) = qat_lstm_forward(p, xs, fmt, luts, return_sequence=True)
+    np.testing.assert_array_equal(np.asarray(quantize(seq_f, fmt)), np.asarray(seq_q))
+    np.testing.assert_array_equal(np.asarray(quantize(h, fmt)), np.asarray(qh))
+    np.testing.assert_array_equal(np.asarray(quantize(c, fmt)), np.asarray(qc))
+
+
+def test_qat_freeze_parity_full_model_both_backends():
+    """The acceptance contract: QAT eval forward == freeze -> fxp AND
+    freeze -> pallas_fxp, as exact float equality (both sides on-grid)."""
+    fmt = FxpFormat(8, 16)
+    for num_layers in (1, 2):
+        params = init_traffic_model(jax.random.PRNGKey(1), 1, 10,
+                                    num_layers=num_layers)
+        xs = jnp.asarray(RNG.normal(size=(4, 6, 1)).astype(np.float32))
+        pred_qat = qat_traffic_forward(params, xs, fmt, make_lut_pair(64))
+        qm = freeze(params, fmt, 64)
+        for backend in ("fxp", "pallas_fxp"):
+            pred = quantized_lstm_forward(qm, xs, backend=backend)
+            np.testing.assert_array_equal(
+                np.asarray(pred_qat), np.asarray(pred),
+                err_msg=f"L={num_layers} {backend}")
+
+
+def test_qat_stacked_state_shape_is_validated():
+    """Mis-shaped stacked h0/c0 is rejected loudly (as in lstm_forward),
+    not silently truncated to the first L layers."""
+    fmt = FxpFormat(8, 16)
+    ps = [init_lstm_params(jax.random.PRNGKey(20), 2, 10),
+          init_lstm_params(jax.random.PRNGKey(21), 10, 10)]
+    xs = jnp.asarray(RNG.normal(size=(2, 6, 2)).astype(np.float32))
+    bad = jnp.zeros((3, 2, 10), jnp.float32)       # state from a 3-layer model
+    with pytest.raises(ValueError, match="per-layer h0/c0|stacked"):
+        qat_lstm_forward(ps, xs, fmt, h0=bad, c0=bad)
+    with pytest.raises(ValueError, match="per-layer h0/c0"):
+        qat_lstm_forward(ps, xs, fmt, h0=[bad[0]], c0=[bad[0]])
+
+
+def test_qat_chunked_state_continuation_integer_equal():
+    """h0/c0 plumbing: a carried-state QAT continuation matches the fxp
+    backend's — the contract the fleet engine's chunking rides on."""
+    fmt = FxpFormat(8, 16)
+    luts = make_lut_pair(64)
+    ps = [init_lstm_params(jax.random.PRNGKey(3), 2, 10),
+          init_lstm_params(jax.random.PRNGKey(4), 10, 10)]
+    xs = jnp.asarray(RNG.normal(size=(2, 8, 2)).astype(np.float32))
+    seq_f, (hs, cs) = qat_lstm_forward(ps, xs[:, :4], fmt, luts,
+                                       return_sequence=True, return_state="all")
+    h2, c2 = qat_lstm_forward(ps, xs[:, 4:], fmt, luts, h0=hs, c0=cs)
+    seq_full, (h_full, c_full) = qat_lstm_forward(ps, xs, fmt, luts,
+                                                  return_sequence=True)
+    np.testing.assert_array_equal(np.asarray(h2), np.asarray(h_full))
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(c_full))
+
+
+@pytest.mark.parametrize("num_layers", [1, 2])
+def test_qat_integer_equal_to_fleet_engine(num_layers):
+    """Acceptance: SensorFleetEngine serving the frozen model returns
+    integers equal to the QAT eval forward, stream by ragged stream."""
+    from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
+
+    fmt = FxpFormat(8, 16)
+    luts = make_lut_pair(64)
+    params = init_traffic_model(jax.random.PRNGKey(2), 1, 10,
+                                num_layers=num_layers)
+    qm = freeze(params, fmt, 64)
+    lengths = [6, 11, 7, 9]
+    xs_all = [jnp.asarray(RNG.normal(size=(t, 1)).astype(np.float32))
+              for t in lengths]
+    streams = [SensorStream(rid=i, qxs=np.asarray(quantize(x, fmt)))
+               for i, x in enumerate(xs_all)]
+    eng = SensorFleetEngine(qm.lstm, fmt, luts, batch_slots=3, chunk=4)
+    eng.run(streams)
+
+    for s, xs in zip(streams, xs_all):
+        seq, (hs, cs) = qat_lstm_forward(
+            params["lstm"], xs[None], fmt, luts,
+            return_sequence=True, return_state="all")
+        np.testing.assert_array_equal(
+            np.asarray(quantize(seq[0], fmt)), s.h_seq,
+            err_msg=f"stream {s.rid} h_seq")
+        qh_qat = np.stack([np.asarray(quantize(h[0], fmt)) for h in hs])
+        qc_qat = np.stack([np.asarray(quantize(c[0], fmt)) for c in cs])
+        if num_layers == 1:
+            qh_qat, qc_qat = qh_qat[0], qc_qat[0]
+        np.testing.assert_array_equal(qh_qat, s.qh, err_msg=f"stream {s.rid} qh")
+        np.testing.assert_array_equal(qc_qat, s.qc, err_msg=f"stream {s.rid} qc")
+
+
+def test_qat_quantize_params_is_freeze_consistent():
+    """The on-grid weights the QAT forward sees quantise to exactly the
+    integers ``freeze`` deploys (and fake-quantising twice changes nothing)."""
+    from repro.qat.qat_lstm import qat_quantize_params
+
+    params = init_traffic_model(jax.random.PRNGKey(9), 1, 10)
+    qp = qat_quantize_params(params, FMT)
+    qm = freeze(params, FMT, None)
+    np.testing.assert_array_equal(np.asarray(quantize(qp["lstm"].w, FMT)),
+                                  np.asarray(qm.lstm.w))
+    np.testing.assert_array_equal(np.asarray(quantize(qp["dense"]["w"], FMT)),
+                                  np.asarray(qm.dense_w))
+    qp2 = qat_quantize_params(qp, FMT)
+    np.testing.assert_array_equal(np.asarray(qp2["lstm"].w),
+                                  np.asarray(qp["lstm"].w))
+
+
+def test_qat_gradients_flow_to_all_parameters():
+    fmt = FxpFormat(8, 16)
+    params = init_traffic_model(jax.random.PRNGKey(5), 1, 10)
+    xs = jnp.asarray(RNG.normal(size=(4, 6, 1)).astype(np.float32))
+    ys = jnp.asarray(RNG.normal(size=(4, 1)).astype(np.float32))
+
+    def loss(p):
+        return jnp.mean((qat_traffic_forward(p, xs, fmt, make_lut_pair(64)) - ys) ** 2)
+
+    grads = jax.grad(loss)(params)
+    for path, g in jax.tree_util.tree_flatten_with_path(grads)[0]:
+        assert float(jnp.sum(jnp.abs(g))) > 0.0, f"dead gradient at {path}"
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+
+def test_int_bits_needed():
+    assert int_bits_needed(0.0) == 1
+    assert int_bits_needed(0.9) == 1
+    assert int_bits_needed(1.0) == 1
+    assert int_bits_needed(1.1) == 2
+    assert int_bits_needed(3.5) == 3
+    assert int_bits_needed(8.0) == 4
+
+
+def test_observe_and_suggest_format():
+    params = init_traffic_model(jax.random.PRNGKey(6), 1, 12)
+    xs = jnp.asarray(RNG.normal(size=(32, 6, 1)).astype(np.float32))
+    stats = observe_traffic_model(params, xs)
+    # every quantisation point observed
+    for key in ("input", "weights/l0", "bias/l0", "preact_i/l0", "preact_f/l0",
+                "preact_g/l0", "preact_o/l0", "cell/l0", "hidden/l0",
+                "dense_w", "dense_out"):
+        assert key in stats.max_abs, key
+    assert stats.by_prefix("preact") <= stats.overall()
+    fmt = suggest_format(stats, total_bits=16)
+    assert fmt.total_bits == 16 and 1 <= fmt.frac_bits < 16
+    # the suggested format must actually cover the observed range
+    assert fmt.max_value >= stats.overall() / 2  # headroom bit may halve it
+
+
+def test_calibrated_format_sizes_total_bits():
+    params = init_traffic_model(jax.random.PRNGKey(6), 1, 12)
+    xs = jnp.asarray(RNG.normal(size=(32, 6, 1)).astype(np.float32))
+    f4 = calibrated_format(params, xs, 4)
+    f8 = calibrated_format(params, xs, 8)
+    assert f4.frac_bits == 4 and f8.frac_bits == 8
+    assert f8.total_bits - f4.total_bits == 4  # same int bits, wider fraction
+    with pytest.raises(ValueError, match="frac_bits"):
+        calibrated_format(params, xs, 16)
+
+
+def test_for_range_formula_and_budget_guard():
+    assert FxpFormat.for_range(0.9, 16).frac_bits == 15
+    assert FxpFormat.for_range(3.5, 16).frac_bits == 13
+    assert FxpFormat.for_range(3.5, 16, headroom_bits=1).frac_bits == 12
+    with pytest.raises(ValueError, match="integer bits"):
+        FxpFormat.for_range(1e9, 8)
+
+
+def test_stacked_energy_model_charges_every_layer():
+    from repro.core import timing_model as tm
+
+    s = tm.LstmModelShape()
+    assert tm.stacked_total_cycles([s]) == tm.total_cycles(s)
+    spec = tm.SPARTAN7["XC7S15"]
+    e1 = tm.parameterised_energy_per_inference_uj(s, spec, 16, 256)
+    e2 = tm.parameterised_energy_per_inference_uj(tm.stack_shapes(s, 2),
+                                                  spec, 16, 256)
+    assert e2 > 1.5 * e1       # the second layer's recurrence is not free
+
+
+def test_finetune_accepts_single_layer_list_form():
+    """A 1-element per-layer list (the form every other API takes) must not
+    crash the fine-tuner's shape introspection."""
+    import types
+
+    params = init_traffic_model(jax.random.PRNGKey(12), 1, 8)
+    params = {"lstm": [params["lstm"]], "dense": params["dense"]}
+    data = types.SimpleNamespace(
+        x_train=RNG.normal(size=(64, 6, 1)).astype(np.float32),
+        y_train=RNG.normal(size=(64, 1)).astype(np.float32))
+    out, hist = finetune_qat(params, data, FMT, None, epochs=1, batch_size=32)
+    assert isinstance(out["lstm"], list) and len(hist) == 1
+
+
+# ---------------------------------------------------------------------------
+# Pareto search machinery (pure parts fast; fine-tune sweep on the slow tier)
+# ---------------------------------------------------------------------------
+
+
+def test_pareto_frontier_marks_non_dominated_points():
+    pts = [
+        {"energy_uj": 1.0, "qat_mse": 0.30},   # cheapest
+        {"energy_uj": 2.0, "qat_mse": 0.10},   # frontier
+        {"energy_uj": 2.5, "qat_mse": 0.20},   # dominated by [1]
+        {"energy_uj": 3.0, "qat_mse": 0.05},   # most accurate
+        {"energy_uj": 3.5, "qat_mse": 0.05},   # dominated (same mse, pricier)
+    ]
+    assert pareto_frontier(pts) == [0, 1, 3]
+
+
+@pytest.mark.slow
+def test_qat_beats_ptq_at_low_bits_and_search_reports_pareto():
+    """The Fig.-6-with-training story: at a low-bit operating point QAT
+    fine-tuning strictly improves test MSE over same-format PTQ, and the
+    search emits a well-formed Pareto report."""
+    from repro.data.traffic import make_traffic_dataset
+    from repro.models.lstm_model import train_traffic_model
+
+    data = make_traffic_dataset(seed=0)
+    params, _ = train_traffic_model(data, epochs=8)
+    report = pareto_search(
+        data, params, frac_bits=(4, 8), lut_depths=(64,), epochs=2,
+        max_samples=2048)
+    assert len(report["points"]) == 2
+    assert report["pareto_indices"]
+    for p in report["points"]:
+        assert p["energy_uj"] > 0 and p["qat_mse"] > 0
+    low = next(p for p in report["points"] if p["frac_bits"] == 4)
+    assert low["qat_mse"] < low["ptq_mse"], (
+        f"QAT ({low['qat_mse']:.5f}) must strictly beat PTQ "
+        f"({low['ptq_mse']:.5f}) at the low-bit point")
+    # energy axis orders by width: fewer total bits -> cheaper inference
+    by_bits = sorted(report["points"], key=lambda p: p["total_bits"])
+    assert by_bits[0]["energy_uj"] < by_bits[-1]["energy_uj"]
+
+
+@pytest.mark.slow
+def test_finetune_qat_learns_under_the_quantiser():
+    """Fine-tuning reduces the QAT train loss (the forward is the integer
+    datapath, so this is literally learning under deployment arithmetic)."""
+    from repro.data.traffic import make_traffic_dataset
+    from repro.models.lstm_model import train_traffic_model
+
+    data = make_traffic_dataset(seed=0)
+    params, _ = train_traffic_model(data, epochs=4)
+    fmt = calibrated_format(params, data.x_train[:256], 4)
+    _, hist = finetune_qat(params, data, fmt, 64, epochs=3, max_samples=2048)
+    assert hist[-1] < hist[0]
