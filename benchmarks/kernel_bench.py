@@ -116,9 +116,9 @@ def run():
                              .astype(np.int32))
                 for i, L in enumerate(r.integers(30, 61, n))]
 
-    def fleet_row(name, qparams, extra=""):
+    def fleet_row(name, qparams, extra="", mesh=None):
         eng = SensorFleetEngine(qparams, fmt, luts, batch_slots=slots, chunk=8,
-                                backend="fxp")
+                                backend="fxp", mesh=mesh)
         eng.run(make_streams(slots, 1))      # warm every t_step shape bucket
         streams = make_streams(n_streams, 2)
         calls0 = eng.steps_run
@@ -137,6 +137,18 @@ def run():
     rows.append(fleet_row("serving/lstm_fleet_2layer",
                           [qp, LSTMParams(w=qw_l1, b=qb_l1)],
                           extra=" L2 all-layer state"))
+    # slot-sharded fleet (ISSUE 5): the same stacked engine behind a
+    # shard_map over a 1-D device mesh (bit-identical by contract; on the
+    # 1-device CI host this times the shard_map dispatch overhead, on a real
+    # mesh the slot blocks run in parallel)
+    from math import gcd
+
+    from repro.parallel.sharding import fleet_mesh
+    ndev = gcd(len(jax.devices()), slots)
+    rows.append(fleet_row("serving/lstm_fleet_sharded",
+                          [qp, LSTMParams(w=qw_l1, b=qb_l1)],
+                          extra=f" L2 sharded x{ndev}",
+                          mesh=fleet_mesh(jax.devices()[:ndev])))
 
     spec = LutSpec("sigmoid", 256)
     table = build_table(spec)

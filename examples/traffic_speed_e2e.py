@@ -12,9 +12,14 @@ sensor becomes an independent *ragged* stream (sensors report different
 history lengths), streams join and leave slots mid-flight, and every
 prediction is still bit-identical to running that sensor alone — the
 multi-sensor serving story of the parameterised-architecture follow-up.
+``--engine --shard`` additionally shards the slot axis across every local
+device (a 1-D mesh data axis): the fleet scales past one chip and the
+integers still don't move (``tests/spmd_scripts/check_sharded_fleet.py``).
 
     PYTHONPATH=src python examples/traffic_speed_e2e.py [--sensors 512] [--ticks 16]
     PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --sensors 64
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python examples/traffic_speed_e2e.py --engine --shard --sensors 64
 """
 
 import argparse
@@ -47,6 +52,13 @@ def main(argv=None):
                          "lockstep batch")
     ap.add_argument("--slots", type=int, default=16,
                     help="engine batch slots (--engine only)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the engine's slot axis across all local "
+                         "devices (1-D jax.sharding.Mesh data axis; slots "
+                         "round up to a multiple of the device count) — "
+                         "bit-identical to unsharded serving (--engine only; "
+                         "try XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=8 on CPU)")
     ap.add_argument("--layers", type=int, default=1,
                     help="stacked LSTM depth: L > 1 serves all layers' "
                          "(h, c) per slot; on pallas_fxp the stack runs as "
@@ -62,6 +74,8 @@ def main(argv=None):
                          "(total width sized by range calibration)")
     ap.add_argument("--qat-epochs", type=int, default=2)
     args = ap.parse_args(argv)
+    if args.shard and not args.engine:
+        ap.error("--shard only shards the SensorFleetEngine; pass --engine too")
 
     # --- train on one sensor (paper) ---------------------------------------
     data = make_traffic_dataset(seed=0)
@@ -137,6 +151,7 @@ def serve_fleet_engine(qmodel, args):
     """
     from repro.core import fxp as fxp_mod
     from repro.core.lut import make_lut_pair
+    from repro.parallel.sharding import fleet_mesh
     from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
 
     fmt = qmodel.fmt
@@ -144,8 +159,15 @@ def serve_fleet_engine(qmodel, args):
     rng = np.random.default_rng(0)
     n_layers = (len(qmodel.lstm) if isinstance(qmodel.lstm, (list, tuple))
                 else 1)
+    mesh, slots = None, args.slots
+    if args.shard:
+        mesh = fleet_mesh()
+        ndev = mesh.devices.size
+        slots = -(-args.slots // ndev) * ndev   # engine needs slots % ndev == 0
+        print(f"sharding the slot axis over {ndev} device(s); "
+              f"slots {args.slots} -> {slots}")
     print(f"fleet engine: {args.sensors} ragged sensor streams via "
-          f"{args.slots} slots, backend={args.backend!r}, "
+          f"{slots} slots, backend={args.backend!r}, "
           f"{n_layers}-layer stack (all layers' state carried per slot)")
 
     streams = []
@@ -157,8 +179,9 @@ def serve_fleet_engine(qmodel, args):
         qxs = np.asarray(fxp_mod.quantize(jnp.asarray(window), fmt))
         streams.append(SensorStream(rid=s, qxs=qxs))
 
-    eng = SensorFleetEngine(qmodel.lstm, fmt, luts, batch_slots=args.slots,
-                            chunk=8, time_tile=8, backend=args.backend)
+    eng = SensorFleetEngine(qmodel.lstm, fmt, luts, batch_slots=slots,
+                            chunk=8, time_tile=8, backend=args.backend,
+                            mesh=mesh)
     t0 = time.time()
     eng.run(streams)
     dt = time.time() - t0

@@ -12,11 +12,14 @@ case "${1:-all}" in
   # the roofline parser can never silently regress to its seed-broken state
   # (flops=0.0, ~6x traffic overcount) even if those tests grow markers;
   # then the QAT exactness gate (train-under-the-quantiser == deployed
-  # integers), then everything not marked slow.  The slow tier picks up the
-  # QAT fine-tuning sweep via its 'slow' marker.
+  # integers), then the SPMD 2-device smokes (the slot-sharded fleet engine's
+  # bit-identity gate), then everything not marked slow.  The slow tier picks
+  # up the QAT fine-tuning sweep and the 8-device SPMD equivalence runs via
+  # their 'slow' markers.
   fast) python -m pytest -x -q tests/test_hlo_analysis.py && \
         python -m pytest -x -q -m "qat and not slow" && \
-        exec python -m pytest -x -q -m "not slow and not qat" ;;
+        python -m pytest -x -q -m "spmd and not slow" && \
+        exec python -m pytest -x -q -m "not slow and not qat and not spmd" ;;
   slow) exec python -m pytest -q -m slow ;;
   all)  exec python -m pytest -x -q ;;
   *) echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;

@@ -89,6 +89,22 @@ batches many independent sensor streams — single-layer or stacked (state
 ``lstm_forward(..., backend="pallas_fxp")`` with per-slot ``h0``/``c0``
 carry, bit-identical to running each stream alone
 (``tests/test_serving.py``).
+
+Sharded batches: every backend of ``lstm_forward`` is *batch-pure* — no op
+mixes rows of the leading batch axis (the recurrence runs along time, the
+matmuls contract the feature axis) — so the whole dispatcher is a valid
+per-device body for a ``shard_map`` whose specs shard only the batch dim:
+each device traces the same kernel on its local ``(B/D, n_seq, n_in)``
+block, no collectives appear, and no host round-trip interposes between the
+sharded input and the kernel.  The fleet engine leans on this to shard its
+slot axis over a mesh ``data`` axis (``SensorFleetEngine(mesh=...)``, specs
+from ``repro.parallel.sharding.fleet_slot_specs``) while staying
+integer-equal to single-device serving; the slot→device placement invariant
+(slot ``s`` of ``S`` lives on device ``s * D // S`` for the engine's
+lifetime, so a stream's ``h``/``c`` carry never crosses devices over
+join/leave churn) is proven on forced host devices by
+``tests/spmd_scripts/check_sharded_fleet.py`` against the golden schedule in
+``tests/golden/lstm_fleet_sharded_golden.json``.
 """
 
 from __future__ import annotations

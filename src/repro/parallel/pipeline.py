@@ -25,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
+
 __all__ = ["pipeline_apply", "split_stages"]
 
 
@@ -97,11 +99,11 @@ def pipeline_apply(
             [((n_stages - 1 + i) % n_stages, i) for i in range(n_stages)])
         return outs[None]
 
-    stacked = jax.shard_map(
+    stacked = shard_map(
         stage_body,
         mesh=mesh,
         in_specs=(P(axis_name), P()),
         out_specs=P(axis_name),
-        check_vma=False,
+        check=False,
     )(staged_params, x)
     return stacked[0]

@@ -26,7 +26,45 @@ from typing import Any
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["RunContext", "constrain", "param_pspec", "param_shardings", "logical_rules"]
+__all__ = ["RunContext", "constrain", "param_pspec", "param_shardings",
+           "logical_rules", "fleet_slot_specs", "fleet_mesh", "shard_map",
+           "axis_size"]
+
+
+def axis_size(axis_name: str) -> int:
+    """Static size of a manual mesh axis, inside ``shard_map``/``pmap``.
+
+    Newer jax spells this ``jax.lax.axis_size``; 0.4.x lacks it, but
+    ``lax.psum`` of the literal ``1`` constant-folds to the axis size as a
+    plain Python int on every version — so callers can keep using the result
+    in static shape arithmetic.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False,
+              auto: frozenset | None = None):
+    """``jax.shard_map`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map(..., check_vma=)``; 0.4.x only has
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``.  ``check``
+    maps onto whichever replication/varying-manual-axes checker the installed
+    jax has; it defaults off because every caller here writes explicit
+    out_specs and several (EP MoE, pipeline) trip the 0.4.x rep-tracker on
+    collectives it doesn't model.
+    """
+    kw = {}
+    if auto is not None:
+        kw["auto"] = auto
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -111,6 +149,50 @@ _RULES: list[tuple[str, tuple]] = [
 
 def logical_rules() -> list[tuple[str, tuple]]:
     return list(_RULES)
+
+
+# ---------------------------------------------------------------------------
+# Fleet-serving rules: slot-axis data parallelism for SensorFleetEngine
+# ---------------------------------------------------------------------------
+
+
+def fleet_slot_specs(data_axis: str = "data") -> dict[str, P]:
+    """PartitionSpecs for the fleet engine's slot-sharded step.
+
+    The engine's batched step is pure data parallelism over the *slot* axis
+    (independent sensor streams never interact), so every operand either
+    shards its slot dim over ``data_axis`` or replicates:
+
+    ========== =========================== ==========================
+    key        operand                     spec
+    ========== =========================== ==========================
+    ``x``      inputs ``(slots, t, n_in)`` ``P(data, None, None)``
+    ``state``  carry ``(L, slots, H)``     ``P(None, data, None)``
+    ``mask``   lane mask ``(slots,)``      ``P(data)``
+    ``seq``    output ``(slots, t, H)``    ``P(data, None, None)``
+    ``params`` quantised weights/biases    ``P()`` (replicated)
+    ========== =========================== ==========================
+
+    Because the slot dim is block-partitioned, slot ``s`` of ``S`` lives on
+    device ``s * D // S`` of ``D`` for the engine's whole lifetime — the
+    placement invariant that keeps per-stream ``h``/``c`` carry on one device
+    across join/leave churn (``serving/lstm_engine.py``).
+    """
+    return {
+        "x": P(data_axis, None, None),
+        "state": P(None, data_axis, None),
+        "mask": P(data_axis),
+        "seq": P(data_axis, None, None),
+        "params": P(),
+    }
+
+
+def fleet_mesh(devices=None, data_axis: str = "data") -> Mesh:
+    """A 1-D mesh over ``devices`` (default: all local) for slot sharding."""
+    import numpy as np
+
+    devices = jax.devices() if devices is None else list(devices)
+    return Mesh(np.array(devices), (data_axis,))
 
 
 def _resolve(template: tuple, ctx: RunContext, shape: tuple) -> P:

@@ -36,6 +36,23 @@ so the chunked continuation of the whole stack is exact — on
 ``backend="pallas_fxp"`` the stack additionally runs as one fused kernel
 with the inter-layer hidden sequence resident in VMEM
 (``lstm_sequence_fxp_stack_pallas``).
+
+Sharding (``mesh=``): the step is pure data parallelism over slots —
+independent streams never interact — so ``mesh=`` shards the slot axis of
+the inputs, lane mask and ``(L, slots, H)`` state over the mesh's ``data``
+axis via ``shard_map`` (specs from ``repro.parallel.sharding
+.fleet_slot_specs``), with the quantised params replicated on every device.
+Each device runs the *same* fused kernel on its own contiguous slot block,
+so the integers are unchanged: sharded serving is bit-identical to the
+single-device engine (and hence to per-stream execution), proven on forced
+host devices by ``tests/spmd_scripts/check_sharded_fleet.py``.
+
+**Slot→device placement invariant:** with ``S`` slots on ``D`` devices,
+slot ``s`` lives on device ``s * D // S`` (block partition) for the
+engine's whole lifetime.  ``submit`` hands a joining stream the lowest free
+slot and never migrates an active one, so a stream's ``h``/``c`` carry
+stays on one device across join/leave churn — occupancy can change *which*
+devices do useful work, never the bits they produce.
 """
 
 from __future__ import annotations
@@ -45,9 +62,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.core.fxp import FxpFormat
 from repro.core.lstm import LSTMParams, lstm_forward
+from repro.parallel.sharding import fleet_slot_specs, shard_map
 
 __all__ = ["SensorStream", "SensorFleetEngine"]
 
@@ -78,7 +97,8 @@ class SensorStream:
 
 class SensorFleetEngine:
     """Slot-based continuous batching of (stacked) sensor LSTMs into
-    ``pallas_fxp``."""
+    ``pallas_fxp``, optionally slot-sharded across a device mesh (``mesh=``,
+    ``shard_slots=``; see the module docstring's placement invariant)."""
 
     def __init__(
         self,
@@ -92,6 +112,9 @@ class SensorFleetEngine:
         backend: str = "pallas_fxp",
         block_b: int | None = None,
         interpret: bool | None = None,
+        mesh=None,
+        shard_slots: bool | None = None,
+        data_axis: str = "data",
     ):
         layers = list(qparams) if isinstance(qparams, (list, tuple)) else [qparams]
         if not layers:
@@ -105,6 +128,25 @@ class SensorFleetEngine:
             raise ValueError("batch_slots must be >= 1")
         if chunk < 1:
             raise ValueError("chunk must be >= 1")
+        self.shard_slots = bool(mesh is not None if shard_slots is None
+                                else shard_slots)
+        if self.shard_slots:
+            if mesh is None:
+                raise ValueError("shard_slots=True needs mesh=jax.sharding.Mesh(...)")
+            if data_axis not in mesh.axis_names:
+                raise ValueError(
+                    f"mesh has no {data_axis!r} axis (axes: {mesh.axis_names}); "
+                    "pass data_axis= to name the slot-sharding axis")
+            self.n_shards = int(mesh.shape[data_axis])
+            if batch_slots % self.n_shards != 0:
+                raise ValueError(
+                    f"batch_slots={batch_slots} must be a multiple of the "
+                    f"{data_axis!r} axis size {self.n_shards} so every device "
+                    "owns the same contiguous slot block")
+        else:
+            self.n_shards = 1
+        self.mesh = mesh
+        self.data_axis = data_axis
         self.fmt = fmt
         self.slots = batch_slots
         self.chunk = chunk
@@ -132,17 +174,39 @@ class SensorFleetEngine:
         fwd_kwargs = dict(
             backend=backend, fmt=fmt, luts=luts, return_sequence=True,
             return_state="all", interpret=interpret, time_tile=time_tile,
-            block_b=batch_slots if block_b is None else block_b,
         )
 
         def step_fn(ws, bs, qx, qh, qc, lane_mask):
             params = [LSTMParams(w, b) for w, b in zip(ws, bs)]
+            # block_b defaults to the batch this trace sees: all slots
+            # unsharded, the per-device slot block under shard_map
             seq, (hs, cs) = lstm_forward(
-                params, qx, h0=list(qh), c0=list(qc), **fwd_kwargs)
+                params, qx, h0=list(qh), c0=list(qc),
+                block_b=qx.shape[0] if block_b is None else block_b,
+                **fwd_kwargs)
             keep = lane_mask[None, :, None]
             h = jnp.stack(hs)
             c = jnp.stack(cs)
             return seq, jnp.where(keep, h, qh), jnp.where(keep, c, qc)
+
+        self._state_sharding = None
+        if self.shard_slots:
+            # shard_map over the mesh data axis: each device runs the SAME
+            # kernel on its own slot block — no collectives, identical bits
+            specs = fleet_slot_specs(data_axis)
+            step_fn = shard_map(
+                step_fn, mesh=mesh,
+                in_specs=(specs["params"], specs["params"], specs["x"],
+                          specs["state"], specs["state"], specs["mask"]),
+                out_specs=(specs["seq"], specs["state"], specs["state"]),
+                check=False)
+            self._state_sharding = NamedSharding(mesh, specs["state"])
+            self._qh = jax.device_put(self._qh, self._state_sharding)
+            self._qc = jax.device_put(self._qc, self._state_sharding)
+            self._ws = [jax.device_put(w, NamedSharding(mesh, specs["params"]))
+                        for w in self._ws]
+            self._bs = [jax.device_put(b, NamedSharding(mesh, specs["params"]))
+                        for b in self._bs]
 
         # jit re-specialises per input shape, i.e. once per t_step bucket
         self._step = jax.jit(step_fn)
@@ -151,6 +215,14 @@ class SensorFleetEngine:
 
     def free_slots(self) -> list[int]:
         return [s for s in range(self.slots) if s not in self.active]
+
+    def slot_to_shard(self, slot: int) -> int:
+        """The mesh data-axis index that owns ``slot``'s state block — a pure
+        function of the slot number (the placement invariant: a stream's
+        ``h``/``c`` carry never changes device while it is active)."""
+        if not 0 <= slot < self.slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.slots})")
+        return slot * self.n_shards // self.slots
 
     def _state_init(self, rid: int, s0, name: str) -> np.ndarray:
         """Normalise a stream's initial state to ``(L, H)`` (zeros default;
@@ -194,6 +266,11 @@ class SensorFleetEngine:
         stream.h_seq = np.zeros((len(qxs), self.n_h), np.int32)
         self._qh = self._qh.at[:, slot].set(jnp.asarray(h0))
         self._qc = self._qc.at[:, slot].set(jnp.asarray(c0))
+        if self._state_sharding is not None:
+            # keep the carry pinned to the block partition so the joining
+            # stream's state lands on (and stays on) slot_to_shard(slot)
+            self._qh = jax.device_put(self._qh, self._state_sharding)
+            self._qc = jax.device_put(self._qc, self._state_sharding)
         self.active[slot] = stream
         return True
 

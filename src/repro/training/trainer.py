@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding import RunContext
+from repro.parallel.sharding import RunContext, shard_map
 from repro.training.compression import compressed_pmean
 from repro.training.optimizer import Optimizer, OptState, clip_by_global_norm
 
@@ -118,12 +118,12 @@ def make_train_step(
     auto = frozenset(a for a in mesh.axis_names if a != "pod")
 
     def sharded_step(state, batch):
-        return jax.shard_map(
+        return shard_map(
             step_body,
             mesh=mesh,
             in_specs=(P(), P("pod")),    # state replicated over pods, batch split
             out_specs=(P(), P()),
-            check_vma=False,
+            check=False,
             auto=auto,
         )(state, batch)
 

@@ -4,13 +4,16 @@
 
 Rewrites ``lstm_fxp_golden.json`` (single layer),
 ``lstm_fxp_stack2_golden.json`` (2-layer stack: per-layer final states + the
-top layer's hidden sequence — the multi-layer state-plumbing contract) and
-``lstm_qat_frozen_golden.json`` (a QAT-fine-tuned model frozen to integers —
-the trained-then-frozen QAT<->PTQ parity contract) next to this file.  See
-README.md for when (and when not) to regenerate.  Inputs and parameters of
-the first two are drawn as raw integers from a fixed seed — no float
-quantisation on the input side — so those fixtures are reproducible
-everywhere; the LUT tables are float32 sampled once and stored verbatim
+top layer's hidden sequence — the multi-layer state-plumbing contract),
+``lstm_fleet_sharded_golden.json`` (a 2-layer ``SensorFleetEngine`` slot-churn
+schedule whose per-stream integers the slot-sharded engine must reproduce on
+any device count) and ``lstm_qat_frozen_golden.json`` (a QAT-fine-tuned model
+frozen to integers — the trained-then-frozen QAT<->PTQ parity contract) next
+to this file.  See README.md for when (and when not) to regenerate.  Inputs
+and parameters of all but the QAT fixture are drawn as raw integers from a
+fixed seed — no float quantisation on the input side — so those fixtures are
+reproducible everywhere; the LUT tables are float32 sampled once and stored
+verbatim
 (float32 -> double -> JSON round-trips exactly).  The QAT fixture runs a
 short deterministic train + fine-tune, so regenerating it on different
 BLAS/hardware may drift the *committed weights* — the committed integers
@@ -37,6 +40,10 @@ LUT_DEPTH = 64
 OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_golden.json"
 STACK_OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_stack2_golden.json"
 QAT_OUT_PATH = pathlib.Path(__file__).parent / "lstm_qat_frozen_golden.json"
+FLEET_OUT_PATH = pathlib.Path(__file__).parent / "lstm_fleet_sharded_golden.json"
+
+# sharded-fleet fixture knobs: more streams than slots => slot churn
+FLEET_SLOTS, FLEET_CHUNK, FLEET_STREAMS = 8, 8, 10
 
 # QAT fixture knobs: small model + short fine-tune keeps the JSON compact
 QAT_FRAC, QAT_TOTAL, QAT_LUT_DEPTH = 6, 12, 64
@@ -89,6 +96,72 @@ def regen_stack2() -> None:
     }
     STACK_OUT_PATH.write_text(json.dumps(golden, indent=1) + "\n")
     print(f"wrote {STACK_OUT_PATH} ({STACK_OUT_PATH.stat().st_size} bytes)")
+
+
+def regen_fleet_sharded() -> None:
+    """Sharded stacked-fleet fixture: a 2-layer ``SensorFleetEngine`` driven
+    through a fixed slot-churn schedule (10 ragged streams over 8 slots, two
+    with nonzero initial state).  The per-stream integers are the authority
+    for EVERY serving configuration: the single-device engine replays them in
+    ``tests/test_golden.py`` and the slot-sharded engine on 2 and 8 forced
+    host devices replays them in ``tests/spmd_scripts/check_sharded_fleet.py``
+    — one committed file pins `unsharded == sharded == these integers`."""
+    from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
+
+    fmt = FxpFormat(FRAC, TOTAL)
+    rng = np.random.default_rng(SEED + 2)
+    qw1 = rng.integers(-1 << FRAC, 1 << FRAC, (N_IN + N_H, 4 * N_H), dtype=np.int32)
+    qb1 = rng.integers(-1 << (FRAC - 1), 1 << (FRAC - 1), (4 * N_H,), dtype=np.int32)
+    qw2 = rng.integers(-1 << FRAC, 1 << FRAC, (2 * N_H, 4 * N_H), dtype=np.int32)
+    qb2 = rng.integers(-1 << (FRAC - 1), 1 << (FRAC - 1), (4 * N_H,), dtype=np.int32)
+    luts = make_lut_pair(LUT_DEPTH)
+
+    streams = []
+    for rid in range(FLEET_STREAMS):
+        n = int(rng.integers(3, 19))
+        qxs = rng.integers(-2 << FRAC, 2 << FRAC, (n, N_IN), dtype=np.int32)
+        qh0 = qc0 = None
+        if rid in (1, 4):   # nonzero state rides through slot init per layer
+            qh0 = rng.integers(-200, 200, (2, N_H), dtype=np.int32)
+            qc0 = rng.integers(-200, 200, (2, N_H), dtype=np.int32)
+        streams.append(SensorStream(rid=rid, qxs=qxs, qh0=qh0, qc0=qc0))
+
+    qps = [LSTMParams(w=jnp.asarray(qw1), b=jnp.asarray(qb1)),
+           LSTMParams(w=jnp.asarray(qw2), b=jnp.asarray(qb2))]
+    eng = SensorFleetEngine(qps, fmt, luts, batch_slots=FLEET_SLOTS,
+                            chunk=FLEET_CHUNK, backend="fxp")
+    eng.run(streams)
+    assert all(s.done for s in streams)
+
+    golden = {
+        "description": "integer-exact golden for the slot-sharded stacked "
+                       "fleet engine (2-layer, slot churn, nonzero initial "
+                       "state); replayed unsharded in test_golden.py and "
+                       "sharded in tests/spmd_scripts/check_sharded_fleet.py; "
+                       "regenerate with tests/golden/regen.py (see README.md)",
+        "seed": SEED + 2,
+        "fmt": {"frac_bits": FRAC, "total_bits": TOTAL},
+        "lut": {"depth": LUT_DEPTH,
+                "sigmoid": _lut_entry(luts, "sigmoid"),
+                "tanh": _lut_entry(luts, "tanh")},
+        "engine": {"batch_slots": FLEET_SLOTS, "chunk": FLEET_CHUNK,
+                   "n_layers": 2},
+        "qw": [qw1.tolist(), qw2.tolist()],
+        "qb": [qb1.tolist(), qb2.tolist()],
+        "streams": [{
+            "rid": s.rid,
+            "qxs": np.asarray(s.qxs).tolist(),
+            "qh0": None if s.qh0 is None else np.asarray(s.qh0).tolist(),
+            "qc0": None if s.qc0 is None else np.asarray(s.qc0).tolist(),
+        } for s in streams],
+        "outputs": [{
+            "h_seq": np.asarray(s.h_seq).tolist(),
+            "qh": np.asarray(s.qh).tolist(),
+            "qc": np.asarray(s.qc).tolist(),
+        } for s in streams],
+    }
+    FLEET_OUT_PATH.write_text(json.dumps(golden, indent=1) + "\n")
+    print(f"wrote {FLEET_OUT_PATH} ({FLEET_OUT_PATH.stat().st_size} bytes)")
 
 
 def regen_qat() -> None:
@@ -184,4 +257,5 @@ def main() -> None:
 if __name__ == "__main__":
     main()
     regen_stack2()
+    regen_fleet_sharded()
     regen_qat()

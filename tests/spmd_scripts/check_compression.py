@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.parallel.sharding import shard_map
 from repro.training.compression import compressed_pmean, compressed_pmean_with_feedback
 
 mesh = jax.sharding.Mesh(np.array(jax.devices()).reshape(2, 4), ("pod", "data"))
@@ -19,8 +20,8 @@ g_global = rng.normal(size=(2, 4096)).astype(np.float32)  # per-pod gradients
 
 
 def run(fn):
-    return jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=P("pod", None),
-                                 out_specs=P("pod", None)))(jnp.asarray(g_global))
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=P("pod", None),
+                             out_specs=P("pod", None)))(jnp.asarray(g_global))
 
 
 exact = g_global.mean(axis=0)
@@ -40,7 +41,7 @@ for step in range(8):
         m, nr = compressed_pmean_with_feedback(g[0], r[0], "pod")
         return m[None], nr[None]
 
-    out, res = jax.jit(jax.shard_map(
+    out, res = jax.jit(shard_map(
         fb, mesh=mesh, in_specs=(P("pod", None), P("pod", None)),
         out_specs=(P("pod", None), P("pod", None))))(jnp.asarray(gs), res[None].repeat(2, 0))
     res = res[0]

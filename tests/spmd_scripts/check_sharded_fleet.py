@@ -1,0 +1,295 @@
+"""Subprocess check: the slot-sharded ``SensorFleetEngine`` is INTEGER-EQUAL
+to the single-device engine and to per-stream ``lstm_forward`` — across
+join/leave churn, stacked (L=2) models, nonzero initial state and the
+committed golden schedule.  Run with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (tests/test_spmd.py
+sets it; ``--devices N`` must match).
+
+Flags mirror the parent pytest invocation (propagated by
+``tests/test_spmd.py::_run``): ``-x`` stops at the first failing check,
+``-v`` prints per-check progress.  ``--schedule FILE`` replaces the
+deterministic battery with one schedule drawn by the hypothesis sweep in
+``tests/test_serving.py`` (random ragged lengths / slot churn / bucket
+boundaries), so a shrunk counterexample reproduces by re-running this script
+with the JSON the sweep wrote.
+"""
+
+import argparse
+import json
+import os
+import pathlib
+import sys
+import traceback
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--devices", type=int, default=8,
+                help="forced host device count (must match XLA_FLAGS)")
+ap.add_argument("--schedule", default=None, metavar="FILE",
+                help="JSON schedule from the hypothesis sweep instead of "
+                     "the deterministic battery")
+ap.add_argument("-v", "--verbose", action="count", default=0)
+ap.add_argument("-x", "--exitfirst", action="store_true")
+ap.add_argument("-q", "--quiet", action="count", default=0)  # parent -q: ignored
+args = ap.parse_args()
+
+_FLAG = "--xla_force_host_platform_device_count"
+assert _FLAG in os.environ.get("XLA_FLAGS", ""), (
+    f"run me via tests/test_spmd.py, or set XLA_FLAGS={_FLAG}={args.devices}")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.fxp import FxpFormat, quantize  # noqa: E402
+from repro.core.lstm import LSTMParams, init_lstm_params, lstm_forward  # noqa: E402
+from repro.core.lut import LutSpec, make_lut_pair  # noqa: E402
+from repro.parallel.sharding import fleet_mesh  # noqa: E402
+from repro.serving.lstm_engine import SensorFleetEngine, SensorStream  # noqa: E402
+
+assert len(jax.devices()) == args.devices, (
+    f"wanted {args.devices} forced host devices, jax sees {len(jax.devices())}")
+
+MESH = fleet_mesh()
+NDEV = args.devices
+FMT = FxpFormat(8, 16)
+N_IN, N_H = 2, 10
+GOLDEN = pathlib.Path(__file__).resolve().parents[1] / "golden" / "lstm_fleet_sharded_golden.json"
+
+_failures: list[str] = []
+
+
+def _check(fn):
+    """Run one named check, pytest-style: full assertion context on stderr,
+    stop at the first failure under -x, progress lines under -v."""
+    name = fn.__name__
+    if args.verbose:
+        print(f"[{name}] ...", flush=True)
+    try:
+        fn()
+    except Exception:
+        _failures.append(name)
+        print(f"\nFAILED {name}", file=sys.stderr)
+        traceback.print_exc()
+        if args.exitfirst:
+            sys.exit(1)
+    else:
+        if args.verbose:
+            print(f"[{name}] OK", flush=True)
+
+
+def _stack_setup(n_layers, key=0, depth=64):
+    qps = []
+    for li in range(n_layers):
+        p = init_lstm_params(jax.random.PRNGKey(key + li),
+                             N_IN if li == 0 else N_H, N_H)
+        qps.append(LSTMParams(w=quantize(p.w, FMT), b=quantize(p.b, FMT)))
+    return qps, make_lut_pair(depth)
+
+
+def _make_streams(lens, seed=0, n_layers=1, with_state=()):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, T in enumerate(lens):
+        qxs = np.asarray(quantize(
+            jnp.asarray(rng.normal(size=(T, N_IN)).astype(np.float32)), FMT))
+        s = SensorStream(rid=i, qxs=qxs)
+        if i in with_state:
+            s.qh0 = rng.integers(-100, 100, (n_layers, N_H)).astype(np.int32)
+            s.qc0 = rng.integers(-100, 100, (n_layers, N_H)).astype(np.int32)
+        out.append(s)
+    return out
+
+
+def _solo_oracle(qps, luts, stream, fmt=FMT, backend="fxp"):
+    """One stream alone through lstm_forward with all-layer state."""
+    h0 = c0 = None
+    if stream.qh0 is not None:
+        h0 = jnp.asarray(stream.qh0)[:, None]   # (L, 1, H)
+        c0 = jnp.asarray(stream.qc0)[:, None]
+    L = len(qps)
+    seq, (hs, cs) = lstm_forward(
+        qps if L > 1 else qps[0], jnp.asarray(stream.qxs)[None],
+        backend=backend, fmt=fmt, luts=luts,
+        h0=h0 if L > 1 else (None if h0 is None else h0[0]),
+        c0=c0 if L > 1 else (None if c0 is None else c0[0]),
+        return_sequence=True, return_state="all", block_b=1, interpret=True)
+    return (np.asarray(seq[0]),
+            np.stack([np.asarray(h[0]) for h in hs]),
+            np.stack([np.asarray(c[0]) for c in cs]))
+
+
+def _assert_streams_equal(got, want, what):
+    for s_got, s_want in zip(got, want):
+        np.testing.assert_array_equal(
+            s_got.h_seq, s_want.h_seq,
+            err_msg=f"{what}: stream {s_got.rid} h_seq")
+        np.testing.assert_array_equal(
+            s_got.qh, s_want.qh, err_msg=f"{what}: stream {s_got.rid} qh")
+        np.testing.assert_array_equal(
+            s_got.qc, s_want.qc, err_msg=f"{what}: stream {s_got.rid} qc")
+
+
+def _run_both(qps, luts, lens, fmt=FMT, *, n_layers=1, with_state=(), seed=0,
+              slots=None, chunk=8, time_tile=None, backend="pallas_fxp"):
+    """Drive identical schedules through the sharded and unsharded engines;
+    return both stream lists (churn included when len(lens) > slots)."""
+    slots = NDEV if slots is None else slots
+    kw = dict(batch_slots=slots, chunk=chunk, time_tile=time_tile,
+              backend=backend, interpret=True)
+    sh = _make_streams(lens, seed, n_layers, with_state)
+    un = _make_streams(lens, seed, n_layers, with_state)
+    SensorFleetEngine(qps, fmt, luts, mesh=MESH, **kw).run(sh)
+    SensorFleetEngine(qps, fmt, luts, **kw).run(un)
+    assert all(s.done for s in sh) and all(s.done for s in un)
+    return sh, un
+
+
+def check_single_layer_churn_vs_unsharded_and_pallas_fxp():
+    """Ragged lengths, more streams than slots (slots recycle mid-flight):
+    sharded == unsharded == per-stream pallas_fxp, as integers."""
+    qps, luts = _stack_setup(1)
+    lens = [5, 9, 16, 7, 23, 3, 12, 8, 6, 14][: NDEV + 4]
+    sh, un = _run_both(qps[0], luts, lens, time_tile=4, with_state=(2,))
+    _assert_streams_equal(sh, un, "sharded vs unsharded")
+    for s in sh:
+        seq, qh, qc = _solo_oracle(qps, luts, s, backend="pallas_fxp")
+        np.testing.assert_array_equal(s.h_seq, seq,
+                                      err_msg=f"stream {s.rid} vs solo pallas_fxp")
+        np.testing.assert_array_equal(s.qh, qh[0])
+        np.testing.assert_array_equal(s.qc, qc[0])
+
+
+def check_stacked_l2_churn():
+    """2-layer stack: every layer's (h, c) carried sharded — integer-equal to
+    the unsharded engine and the per-stream oracle."""
+    qps, luts = _stack_setup(2)
+    lens = [5, 9, 16, 7, 12, 4, 10, 6, 3, 11][: NDEV + 4]
+    sh, un = _run_both(qps, luts, lens, n_layers=2, with_state=(1,),
+                      time_tile=4)
+    _assert_streams_equal(sh, un, "stacked sharded vs unsharded")
+    for s in sh:
+        seq, qh, qc = _solo_oracle(qps, luts, s)
+        assert s.qh.shape == (2, N_H), s.qh.shape
+        np.testing.assert_array_equal(s.h_seq, seq,
+                                      err_msg=f"stream {s.rid} vs solo stack")
+        np.testing.assert_array_equal(s.qh, qh)
+        np.testing.assert_array_equal(s.qc, qc)
+
+
+def check_mid_flight_join_leave_placement():
+    """Explicit join/leave: short streams drain and free their slots while
+    long ones are mid-flight; late joiners (one with nonzero state) take the
+    freed slots.  Placement must be stable — an active stream never changes
+    slot — and every stream still matches its solo run."""
+    qps, luts = _stack_setup(1, key=3)
+    eng = SensorFleetEngine(qps[0], FMT, luts, batch_slots=NDEV, chunk=4,
+                            backend="fxp", mesh=MESH, interpret=True)
+    rid_slot: dict[int, int] = {}
+
+    def assert_placement_stable():
+        for slot, s in eng.active.items():
+            if s.rid in rid_slot:
+                assert rid_slot[s.rid] == slot, (
+                    f"stream {s.rid} migrated slot "
+                    f"{rid_slot[s.rid]} -> {slot}")
+            else:
+                rid_slot[s.rid] = slot
+
+    first = _make_streams([4, 4] + [15] * (NDEV - 2), seed=7)
+    for s in first:
+        assert eng.submit(s)
+    assert_placement_stable()
+    eng.step()                      # t_step == 4: the two short streams finish
+    assert first[0].done and first[1].done
+    late = _make_streams([6, 9], seed=8, with_state=(1,))
+    for i, s in enumerate(late):
+        s.rid = 100 + i
+        assert eng.submit(s)        # joins a freed slot mid-flight
+    while eng.active:
+        assert_placement_stable()
+        eng.step()
+    for s in first + late:
+        assert s.done
+        seq, qh, qc = _solo_oracle(qps, luts, s)
+        np.testing.assert_array_equal(s.h_seq, seq,
+                                      err_msg=f"stream {s.rid} after join/leave")
+        np.testing.assert_array_equal(s.qh, qh[0])
+        np.testing.assert_array_equal(s.qc, qc[0])
+    # the slot -> shard map is a pure function of the slot index
+    shards = [eng.slot_to_shard(sl) for sl in range(eng.slots)]
+    assert shards == sorted(shards) and len(set(shards)) == NDEV, shards
+
+
+def check_golden_replay_sharded():
+    """The committed fixture's integers, reproduced by the SHARDED engine:
+    the cross-device half of the golden contract (test_golden.py replays the
+    same file unsharded on one device)."""
+    g = json.loads(GOLDEN.read_text())
+    fmt = FxpFormat(**g["fmt"])
+    luts = {}
+    for name in ("sigmoid", "tanh"):
+        e = g["lut"][name]
+        spec = LutSpec(name, g["lut"]["depth"], e["lo"], e["hi"])
+        luts[name] = (jnp.asarray(np.asarray(e["table"], np.float32)), spec)
+    qps = [LSTMParams(w=jnp.asarray(w, jnp.int32), b=jnp.asarray(b, jnp.int32))
+           for w, b in zip(g["qw"], g["qb"])]
+    assert g["engine"]["batch_slots"] % NDEV == 0, (
+        "golden slot count must shard evenly", g["engine"], NDEV)
+    streams = [SensorStream(
+        rid=s["rid"], qxs=np.asarray(s["qxs"], np.int32),
+        qh0=None if s["qh0"] is None else np.asarray(s["qh0"], np.int32),
+        qc0=None if s["qc0"] is None else np.asarray(s["qc0"], np.int32),
+    ) for s in g["streams"]]
+    eng = SensorFleetEngine(qps, fmt, luts,
+                            batch_slots=g["engine"]["batch_slots"],
+                            chunk=g["engine"]["chunk"], backend="fxp",
+                            mesh=MESH, interpret=True)
+    eng.run(streams)
+    for s, out in zip(streams, g["outputs"]):
+        np.testing.assert_array_equal(
+            s.h_seq, np.asarray(out["h_seq"], np.int32),
+            err_msg=f"golden stream {s.rid} h_seq (sharded x{NDEV})")
+        np.testing.assert_array_equal(s.qh, np.asarray(out["qh"], np.int32),
+                                      err_msg=f"golden stream {s.rid} qh")
+        np.testing.assert_array_equal(s.qc, np.asarray(out["qc"], np.int32),
+                                      err_msg=f"golden stream {s.rid} qc")
+
+
+def check_schedule(path):
+    """One hypothesis-drawn schedule: sharded vs unsharded vs solo oracle."""
+    sched = json.loads(pathlib.Path(path).read_text())
+    n_layers = sched["n_layers"]
+    qps, luts = _stack_setup(n_layers, key=sched["seed"] % 97)
+    with_state = tuple(sched.get("with_state", ()))
+    sh, un = _run_both(
+        qps if n_layers > 1 else qps[0], luts, sched["lens"],
+        n_layers=n_layers, with_state=with_state, seed=sched["seed"],
+        slots=sched["slots"], chunk=sched["chunk"],
+        time_tile=sched.get("time_tile"), backend=sched["backend"])
+    _assert_streams_equal(sh, un, f"schedule {sched}")
+    for s in sh:
+        seq, qh, qc = _solo_oracle(qps, luts, s)
+        np.testing.assert_array_equal(
+            s.h_seq, seq, err_msg=f"schedule {sched}: stream {s.rid} h_seq")
+        np.testing.assert_array_equal(s.qh, qh if n_layers > 1 else qh[0],
+                                      err_msg=f"stream {s.rid} qh")
+        np.testing.assert_array_equal(s.qc, qc if n_layers > 1 else qc[0],
+                                      err_msg=f"stream {s.rid} qc")
+
+
+if args.schedule is not None:
+    def check_schedule_file():
+        check_schedule(args.schedule)
+
+    _check(check_schedule_file)
+else:
+    _check(check_single_layer_churn_vs_unsharded_and_pallas_fxp)
+    _check(check_stacked_l2_churn)
+    _check(check_mid_flight_join_leave_placement)
+    _check(check_golden_replay_sharded)
+
+if _failures:
+    print(f"\n{len(_failures)} check(s) failed: {', '.join(_failures)}",
+          file=sys.stderr)
+    sys.exit(1)
+print("SHARDED_FLEET_OK")

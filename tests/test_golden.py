@@ -23,6 +23,8 @@ STACK_PATH = (pathlib.Path(__file__).parent / "golden"
               / "lstm_fxp_stack2_golden.json")
 QAT_PATH = (pathlib.Path(__file__).parent / "golden"
             / "lstm_qat_frozen_golden.json")
+FLEET_PATH = (pathlib.Path(__file__).parent / "golden"
+              / "lstm_fleet_sharded_golden.json")
 
 
 def _load(path):
@@ -47,6 +49,11 @@ def golden_stack():
 @pytest.fixture(scope="module")
 def golden_qat():
     return _load(QAT_PATH)
+
+
+@pytest.fixture(scope="module")
+def golden_fleet():
+    return _load(FLEET_PATH)
 
 
 def _stored_luts(g):
@@ -173,6 +180,40 @@ def test_qat_frozen_golden_integers(golden_qat):
     pred = qat_traffic_forward(params, dequantize(qxs, fmt), fmt, luts)
     np.testing.assert_array_equal(np.asarray(quantize(pred, fmt)),
                                   np.asarray(out["qy"]))
+
+
+def test_fleet_engine_matches_golden_integers(golden_fleet):
+    """The single-device half of the sharded-fleet golden contract: the
+    committed slot-churn schedule (10 ragged 2-layer streams over 8 slots,
+    two with nonzero initial state) replayed through ``SensorFleetEngine``
+    reproduces every stream's committed integers.  The OTHER half — the
+    slot-sharded engine on 2 and 8 forced host devices replaying the same
+    file — rides ``tests/test_spmd.py`` via
+    ``spmd_scripts/check_sharded_fleet.py``."""
+    from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
+
+    g = golden_fleet
+    fmt = g["_fmt"]
+    luts = _stored_luts(g)
+    qps = [LSTMParams(w=jnp.asarray(w, jnp.int32), b=jnp.asarray(b, jnp.int32))
+           for w, b in zip(g["qw"], g["qb"])]
+    streams = [SensorStream(
+        rid=s["rid"], qxs=np.asarray(s["qxs"], np.int32),
+        qh0=None if s["qh0"] is None else np.asarray(s["qh0"], np.int32),
+        qc0=None if s["qc0"] is None else np.asarray(s["qc0"], np.int32),
+    ) for s in g["streams"]]
+    eng = SensorFleetEngine(qps, fmt, luts,
+                            batch_slots=g["engine"]["batch_slots"],
+                            chunk=g["engine"]["chunk"], backend="fxp")
+    eng.run(streams)
+    assert all(s.done for s in streams)
+    for s, out in zip(streams, g["outputs"]):
+        np.testing.assert_array_equal(s.h_seq, np.asarray(out["h_seq"]),
+                                      err_msg=f"golden fleet stream {s.rid} h_seq")
+        np.testing.assert_array_equal(s.qh, np.asarray(out["qh"]),
+                                      err_msg=f"golden fleet stream {s.rid} qh")
+        np.testing.assert_array_equal(s.qc, np.asarray(out["qc"]),
+                                      err_msg=f"golden fleet stream {s.rid} qc")
 
 
 @pytest.mark.parametrize("time_tile", [None, 5])

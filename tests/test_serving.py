@@ -3,13 +3,22 @@
 Two engines under test: the LM ``ServingEngine`` (token-level continuous
 batching) and the sensor-fleet ``SensorFleetEngine`` (ISSUE 2: many
 independent LSTM streams batched through the fused fxp kernel, bit-identical
-to per-stream execution)."""
+to per-stream execution; ISSUE 5: slot-sharded across a device mesh, still
+bit-identical — the random sharded-vs-unsharded sweep at the bottom drives
+``tests/spmd_scripts/check_sharded_fleet.py`` subprocesses because the main
+test process must keep seeing one device)."""
+
+import json
+import os
+import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from test_spmd import _run as _spmd_run
 from repro.configs import get_smoke_config
 from repro.core.fxp import FxpFormat, quantize
 from repro.core.lstm import LSTMParams, init_lstm_params, lstm_forward
@@ -242,6 +251,95 @@ def test_fleet_multi_layer_nonzero_initial_state():
     _, h_ref, c_ref = _per_stream_stack_oracle(qps, luts, stream)
     np.testing.assert_array_equal(stream.qh, h_ref)
     np.testing.assert_array_equal(stream.qc, c_ref)
+
+
+# --- sharded fleet property sweep (ISSUE 5) ---------------------------------
+#
+# Random ragged stream lengths, slot-churn schedules (more streams than
+# slots, random submit order via run()'s queue) and chunk sizes that cross
+# the power-of-two bucket boundaries — each drawn schedule is serialised to
+# JSON and replayed sharded AND unsharded inside a forced-multi-device
+# subprocess (check_sharded_fleet.py --schedule), which asserts per-stream
+# integer equality against each other and against the solo oracle.  A shrunk
+# counterexample reproduces by rerunning the script on the printed JSON.
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import HealthCheck
+
+    _FLEET_SWEEP = dict(
+        n_layers=st.integers(1, 2),
+        lens=st.lists(st.integers(1, 20), min_size=1, max_size=6),
+        slots_per_dev=st.integers(1, 2),
+        chunk=st.integers(1, 12),           # buckets {8,4,2,1}: ragged tails
+        seed=st.integers(0, 2**16 - 1),
+        with_state=st.booleans(),
+        backend=st.sampled_from(["fxp", "pallas_fxp"]),
+    )
+    # derandomize: each subprocess costs seconds, so the sweep must not
+    # depend on a wall-clock entropy source in CI
+    _FLEET_SETTINGS = settings(max_examples=4, deadline=None, derandomize=True,
+                               suppress_health_check=[HealthCheck.too_slow])
+    _FLEET_SETTINGS_SLOW = settings(max_examples=12, deadline=None,
+                                    derandomize=True,
+                                    suppress_health_check=[HealthCheck.too_slow])
+else:  # the stub's @given skips the test before a strategy is drawn
+    _FLEET_SWEEP = dict(n_layers=None, lens=None, slots_per_dev=None,
+                        chunk=None, seed=None, with_state=None, backend=None)
+    _FLEET_SETTINGS = _FLEET_SETTINGS_SLOW = settings()
+
+
+def _run_sharded_schedule(pytestconfig, devices, n_layers, lens, slots_per_dev,
+                          chunk, seed, with_state, backend):
+    schedule = {
+        "n_layers": n_layers,
+        "lens": lens,
+        "slots": slots_per_dev * devices,
+        "chunk": chunk,
+        "seed": seed,
+        "with_state": [0] if with_state else [],
+        "time_tile": 4 if backend == "pallas_fxp" else None,
+        "backend": backend,
+    }
+    with tempfile.NamedTemporaryFile("w", suffix=".json", delete=False) as f:
+        json.dump(schedule, f)
+        path = f.name
+    try:
+        out = _spmd_run("check_sharded_fleet.py", pytestconfig,
+                        args=["--devices", devices, "--schedule", path],
+                        devices=devices)
+        assert "SHARDED_FLEET_OK" in out, schedule
+    except BaseException:
+        # keep the schedule on disk so the shrunk counterexample reproduces:
+        #   XLA_FLAGS=--xla_force_host_platform_device_count=N \
+        #   python tests/spmd_scripts/check_sharded_fleet.py --devices N \
+        #       --schedule <path>
+        print(f"[sharded-fleet sweep] failing schedule kept at {path}: "
+              f"{schedule}")
+        raise
+    os.unlink(path)
+
+
+@pytest.mark.spmd
+@_FLEET_SETTINGS
+@given(**_FLEET_SWEEP)
+def test_property_sharded_fleet_bit_identical_2dev(
+        pytestconfig, n_layers, lens, slots_per_dev, chunk, seed, with_state,
+        backend):
+    """Fast tier: random schedules on a 2-device subprocess mesh."""
+    _run_sharded_schedule(pytestconfig, 2, n_layers, lens, slots_per_dev,
+                          chunk, seed, with_state, backend)
+
+
+@pytest.mark.spmd
+@pytest.mark.slow
+@_FLEET_SETTINGS_SLOW
+@given(**_FLEET_SWEEP)
+def test_property_sharded_fleet_bit_identical_8dev(
+        pytestconfig, n_layers, lens, slots_per_dev, chunk, seed, with_state,
+        backend):
+    """Slow tier: the full 8-device sweep (more examples, same contract)."""
+    _run_sharded_schedule(pytestconfig, 8, n_layers, lens, slots_per_dev,
+                          chunk, seed, with_state, backend)
 
 
 def test_fleet_engine_validation():

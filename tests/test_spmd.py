@@ -1,6 +1,12 @@
-"""SPMD integration tests.  Each runs in a subprocess with 8 fake host
+"""SPMD integration tests.  Each runs in a subprocess with forced fake host
 devices (the flag must be set before jax initialises, and the main test
-process must keep seeing 1 device)."""
+process must keep seeing 1 device).
+
+``_run`` mirrors the parent pytest invocation into the child — ``-x`` and
+``-v`` propagate as script flags — and surfaces the child's FULL output
+(assertion context included) through ``pytest.fail`` instead of truncating
+to the tail of stderr.
+"""
 
 import os
 import subprocess
@@ -13,29 +19,72 @@ _SCRIPTS = Path(__file__).parent / "spmd_scripts"
 _SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
-def _run(script: str, timeout: int = 900) -> str:
+def _run(script: str, config=None, args=(), timeout: int = 900,
+         devices: int = 8) -> str:
+    """Run one spmd_scripts check under ``devices`` forced host devices.
+
+    ``config`` (the parent's ``pytestconfig``) propagates ``-x`` / verbosity
+    into the child's argv; all scripts either argparse them or ignore argv
+    entirely.  A failing child reports through ``pytest.fail`` with its whole
+    stdout+stderr, so the child's assertion context (``np.testing`` diffs,
+    tracebacks) reads like a local failure instead of a 3000-char stderr tail.
+    """
     env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
     env["PYTHONPATH"] = _SRC + os.pathsep + str(Path(__file__).resolve().parents[1])
-    r = subprocess.run([sys.executable, str(_SCRIPTS / script)],
-                       capture_output=True, text=True, timeout=timeout, env=env)
-    assert r.returncode == 0, f"{script} failed:\n{r.stdout[-2000:]}\n{r.stderr[-3000:]}"
+    cmd = [sys.executable, str(_SCRIPTS / script), *map(str, args)]
+    if config is not None:
+        if config.getoption("verbose", 0) > 0:
+            cmd.append("-" + "v" * config.getoption("verbose"))
+        if config.getoption("exitfirst", False):
+            cmd.append("-x")
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    if r.returncode != 0:
+        pytest.fail(
+            f"{script} exited {r.returncode}\n"
+            f"  cmd: {' '.join(cmd)}\n"
+            f"--- stdout ---\n{r.stdout}\n--- stderr ---\n{r.stderr}",
+            pytrace=False)
     return r.stdout
 
 
+@pytest.mark.spmd
 @pytest.mark.slow
-def test_sharded_train_step_matches_single_device():
-    out = _run("check_sharded_equivalence.py")
+def test_sharded_train_step_matches_single_device(pytestconfig):
+    out = _run("check_sharded_equivalence.py", pytestconfig)
     assert "SPMD_EQUIVALENCE_OK" in out
 
 
+@pytest.mark.spmd
 @pytest.mark.slow
-def test_pipeline_parallel_matches_sequential():
-    out = _run("check_pipeline.py")
+def test_pipeline_parallel_matches_sequential(pytestconfig):
+    out = _run("check_pipeline.py", pytestconfig)
     assert "PIPELINE_OK" in out
 
 
+@pytest.mark.spmd
 @pytest.mark.slow
-def test_int8_gradient_compression():
-    out = _run("check_compression.py")
+def test_int8_gradient_compression(pytestconfig):
+    out = _run("check_compression.py", pytestconfig)
     assert "COMPRESSION_OK" in out
+
+
+@pytest.mark.spmd
+def test_sharded_fleet_smoke_2dev(pytestconfig):
+    """Fast-tier gate (scripts/ci.sh fast): the slot-sharded fleet engine on
+    2 forced host devices is integer-equal to the single-device engine, to
+    per-stream ``pallas_fxp``, and to the committed golden schedule —
+    join/leave churn and the stacked (L=2) model included."""
+    out = _run("check_sharded_fleet.py", pytestconfig,
+               args=["--devices", 2], devices=2)
+    assert "SHARDED_FLEET_OK" in out
+
+
+@pytest.mark.spmd
+@pytest.mark.slow
+def test_sharded_fleet_8dev(pytestconfig):
+    """The full ISSUE 5 acceptance criterion: same battery on 8 devices."""
+    out = _run("check_sharded_fleet.py", pytestconfig,
+               args=["--devices", 8], devices=8)
+    assert "SHARDED_FLEET_OK" in out
