@@ -150,6 +150,39 @@ def run():
                           extra=f" L2 sharded x{ndev}",
                           mesh=fleet_mesh(jax.devices()[:ndev])))
 
+    # fault-tolerant fleet (ISSUE 6): checkpoint save + restore of a fleet
+    # killed mid-flight — save us/call is the serving pause a sync snapshot
+    # cadence costs; restore is the cold-start path back to bit-identical
+    # streams (manifest validation + state re-partition included).
+    import tempfile
+
+    from repro.checkpoint.checkpoint import CheckpointManager
+    qp2 = [qp, LSTMParams(w=qw_l1, b=qb_l1)]
+    eng = SensorFleetEngine(qp2, fmt, luts, batch_slots=slots, chunk=8,
+                            backend="fxp")
+    eng.admit(make_streams(n_streams, 3))
+    for _ in range(3):
+        eng.step()
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, keep=2)
+        n_saves = 5
+        t0 = time.perf_counter()
+        for k in range(n_saves):
+            eng.save(mgr, step=k)
+        save_us = (time.perf_counter() - t0) * 1e6 / n_saves
+        state_kb = sum(f.stat().st_size
+                       for f in (mgr.root / f"step_{n_saves - 1}").iterdir()) / 1024
+        t0 = time.perf_counter()
+        eng2 = SensorFleetEngine.restore(mgr, qp2, fmt, luts)
+        restore_us = (time.perf_counter() - t0) * 1e6
+        n_inflight = len(eng2.active)
+    rows.append({"name": "serving/lstm_fleet_restore",
+                 "us_per_call": round(save_us, 1),
+                 "derived": f"sync save of {n_inflight} in-flight streams "
+                            f"H{h} L2 ({state_kb:.0f} KiB on disk); "
+                            f"restore={restore_us:.0f}us incl. manifest "
+                            f"validation + slot re-partition"})
+
     spec = LutSpec("sigmoid", 256)
     table = build_table(spec)
     x = jnp.asarray(RNG.normal(size=(1 << 16,)).astype(np.float32))

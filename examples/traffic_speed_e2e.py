@@ -15,11 +15,17 @@ multi-sensor serving story of the parameterised-architecture follow-up.
 ``--engine --shard`` additionally shards the slot axis across every local
 device (a 1-D mesh data axis): the fleet scales past one chip and the
 integers still don't move (``tests/spmd_scripts/check_sharded_fleet.py``).
+``--engine --checkpoint-dir DIR`` snapshots the full serving state while it
+runs; add ``--kill-after N`` to crash the fleet mid-flight, restore from the
+last checkpoint, and watch every surviving stream finish bit-identical to
+an uninterrupted run (``tests/spmd_scripts/check_fleet_restore.py``).
 
     PYTHONPATH=src python examples/traffic_speed_e2e.py [--sensors 512] [--ticks 16]
     PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --sensors 64
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python examples/traffic_speed_e2e.py --engine --shard --sensors 64
+    PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --sensors 32 \
+        --checkpoint-dir /tmp/fleet_ck --kill-after 4
 """
 
 import argparse
@@ -73,9 +79,24 @@ def main(argv=None):
                     help="fractional bits of the QAT operating point "
                          "(total width sized by range calibration)")
     ap.add_argument("--qat-epochs", type=int, default=2)
+    ap.add_argument("--checkpoint-dir", metavar="DIR",
+                    help="snapshot the engine's full serving state (slot "
+                         "table, all layers' (h, c) carry, per-stream "
+                         "cursors) into DIR every 2 steps while serving "
+                         "(--engine only)")
+    ap.add_argument("--kill-after", type=int, metavar="N",
+                    help="inject a crash after N engine steps, restore from "
+                         "the last checkpoint in --checkpoint-dir, and "
+                         "resume — surviving streams finish bit-identical "
+                         "to an uninterrupted run (--engine only)")
     args = ap.parse_args(argv)
     if args.shard and not args.engine:
         ap.error("--shard only shards the SensorFleetEngine; pass --engine too")
+    if (args.checkpoint_dir or args.kill_after is not None) and not args.engine:
+        ap.error("--checkpoint-dir/--kill-after checkpoint the "
+                 "SensorFleetEngine; pass --engine too")
+    if args.kill_after is not None and not args.checkpoint_dir:
+        ap.error("--kill-after needs --checkpoint-dir to restore from")
 
     # --- train on one sensor (paper) ---------------------------------------
     data = make_traffic_dataset(seed=0)
@@ -170,20 +191,70 @@ def serve_fleet_engine(qmodel, args):
           f"{slots} slots, backend={args.backend!r}, "
           f"{n_layers}-layer stack (all layers' state carried per slot)")
 
-    streams = []
-    for s in range(args.sensors):
-        series, _, _ = normalize(make_pems_like_series(seed=s))
-        lo = int(rng.integers(100, 200))
-        n = int(rng.integers(6, 19))                  # ragged history length
-        window = series[lo : lo + n][:, None].astype(np.float32)
-        qxs = np.asarray(fxp_mod.quantize(jnp.asarray(window), fmt))
-        streams.append(SensorStream(rid=s, qxs=qxs))
+    def _streams():
+        rng = np.random.default_rng(0)
+        out = []
+        for s in range(args.sensors):
+            series, _, _ = normalize(make_pems_like_series(seed=s))
+            lo = int(rng.integers(100, 200))
+            n = int(rng.integers(6, 19))              # ragged history length
+            window = series[lo : lo + n][:, None].astype(np.float32)
+            qxs = np.asarray(fxp_mod.quantize(jnp.asarray(window), fmt))
+            out.append(SensorStream(rid=s, qxs=qxs))
+        return out
 
-    eng = SensorFleetEngine(qmodel.lstm, fmt, luts, batch_slots=slots,
-                            chunk=8, time_tile=8, backend=args.backend,
-                            mesh=mesh)
+    def _engine():
+        return SensorFleetEngine(qmodel.lstm, fmt, luts, batch_slots=slots,
+                                 chunk=8, time_tile=8, backend=args.backend,
+                                 mesh=mesh)
+
+    streams = _streams()
+    eng = _engine()
     t0 = time.time()
-    eng.run(streams)
+    if args.checkpoint_dir:
+        from repro.checkpoint.checkpoint import CheckpointManager
+        from repro.serving.faults import (FaultPlan, InjectedKill,
+                                          serve_with_checkpoints)
+        mgr = CheckpointManager(args.checkpoint_dir, keep=3)
+        pending = list(streams)
+        try:
+            serve_with_checkpoints(eng, pending, mgr, every=2,
+                                   plan=FaultPlan(kill_after_steps=args.kill_after))
+        except InjectedKill:
+            print(f"KILLED after {args.kill_after} steps; last published "
+                  f"checkpoint: step {mgr.latest_step()} — restoring...")
+            eng = SensorFleetEngine.restore(mgr, qmodel.lstm, fmt, luts,
+                                            mesh=mesh, backend=args.backend,
+                                            chunk=8, time_tile=8)
+            # streams admitted after the last checkpoint died with the
+            # process; their clients resubmit from scratch (fresh copies —
+            # the dead objects' buffers are half-written)
+            fresh = _streams()
+            alive = ({s.rid for s in eng.active.values()}
+                     | {p.rid for p in pending})
+            lost = [fresh[s.rid] for s in streams
+                    if not s.done and s.rid not in alive]
+            if lost:
+                print(f"{len(lost)} streams admitted after the checkpoint "
+                      "were lost with the process; resubmitting")
+            pending.extend(lost)
+            survivors = list(eng.active.values()) + pending
+            while pending or eng.active:
+                eng.admit(pending)
+                eng.step()
+            golden = _streams()                  # uninterrupted oracle run
+            _engine().run(golden)
+            golden_by_rid = {g.rid: g for g in golden}
+            for s in survivors:
+                np.testing.assert_array_equal(s.h_seq,
+                                              golden_by_rid[s.rid].h_seq)
+            print(f"{len(survivors)} surviving streams resumed and finished "
+                  "BIT-IDENTICAL to the uninterrupted run")
+            by_rid = {s.rid: s for s in streams}
+            by_rid.update((s.rid, s) for s in survivors)
+            streams = [by_rid[r] for r in sorted(by_rid)]
+    else:
+        eng.run(streams)
     dt = time.time() - t0
 
     # dense head on each stream's TOP-layer final hidden state, then

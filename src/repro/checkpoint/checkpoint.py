@@ -17,6 +17,29 @@ Design (mirrors production Orbax/tensorstore semantics at npz scale):
   re-shards onto whatever mesh the new process runs (device count may
   differ — node failures shrink the pool).  See ``elastic.py`` for the
   policy layer.
+* **Torn-write recovery** — a crash mid-``save`` leaves an orphaned
+  ``step_<N>.tmp/`` (never a corrupt published step: the rename is the
+  commit point).  ``sweep_orphans`` deletes those at restore time, and
+  ``steps()`` only counts *valid* checkpoints (readable manifest + payload
+  present), so ``restore()`` transparently falls back to the latest intact
+  step even if the newest directory was damaged on disk after publish.
+
+Serving-state layout (``SensorFleetEngine.save``/``.restore``): the fleet
+engine checkpoints through this module as one pytree —
+
+* ``qh`` / ``qc`` — the full ``(L, slots, H)`` int32 recurrent carry
+  (gathered to host, so a restore can re-shard it onto any D′-device mesh
+  via the slot→device block-partition invariant);
+* ``streams/<slot>/qxs`` — each in-flight stream's quantised input,
+  ``streams/<slot>/h_seq`` — its emitted top-layer outputs so far, plus
+  optional ``qh0``/``qc0``;
+
+with the JSON side-car (``manifest.json``'s ``extra``) recording the slot
+table (``slot -> rid, cursor``), engine geometry (``L``, ``n_in``, ``H``,
+``batch_slots``, ``chunk``, fxp format, backend), serving counters, and a
+sha256 over the quantised parameters so a restore refuses to resume a
+stream fleet onto different weights (that would silently break the
+integer-identical-continuation contract).
 
 Multi-host note: in a real multi-controller job each host writes only its
 addressable shards (``jax.experimental.multihost_utils``); on this
@@ -104,6 +127,7 @@ def restore_pytree(template: Any, directory: Path, shardings: Any = None) -> Any
                     if shardings is not None else [None] * len(leaves))
     if len(shard_leaves) != len(leaves):
         shard_leaves = [None] * len(leaves)
+    checksum = hashlib.sha256()
     for name, leaf, sh in zip(names, leaves, shard_leaves):
         key = name.replace("/", "%")
         if key not in data:
@@ -112,10 +136,18 @@ def restore_pytree(template: Any, directory: Path, shardings: Any = None) -> Any
         want = manifest["leaves"][name]
         if list(arr.shape) != want["shape"]:
             raise ValueError(f"manifest/payload mismatch at {name}")
+        checksum.update(name.encode())
+        checksum.update(arr.tobytes()[:4096])
         if sh is not None:
             out.append(jax.device_put(arr, sh))
         else:
             out.append(jax.device_put(arr))
+    # full-tree restores re-verify the payload prefix checksum (bit rot /
+    # truncation after publish); partial-template restores can't — their
+    # leaf order wouldn't reproduce the manifest's digest
+    if len(names) == len(manifest["leaves"]) \
+            and checksum.hexdigest() != manifest["checksum"]:
+        raise ValueError(f"payload checksum mismatch under {directory}")
     return jax.tree.unflatten(treedef, out)
 
 
@@ -131,10 +163,20 @@ class CheckpointManager:
 
     # -- discovery -----------------------------------------------------------
 
+    def _is_valid(self, d: Path) -> bool:
+        """A published step dir with a readable manifest and its payload —
+        anything else (torn tmp, post-publish disk damage) must not be
+        offered as the latest checkpoint."""
+        try:
+            json.loads((d / "manifest.json").read_text())
+        except (OSError, ValueError):
+            return False
+        return (d / "arrays.npz").exists()
+
     def steps(self) -> list[int]:
         out = []
         for d in self.root.glob("step_*"):
-            if d.is_dir() and not d.name.endswith(".tmp"):
+            if d.is_dir() and not d.name.endswith(".tmp") and self._is_valid(d):
                 try:
                     out.append(int(d.name.split("_")[1]))
                 except ValueError:
@@ -144,6 +186,22 @@ class CheckpointManager:
     def latest_step(self) -> int | None:
         s = self.steps()
         return s[-1] if s else None
+
+    def sweep_orphans(self) -> list[str]:
+        """Delete ``step_<N>.tmp/`` dirs left by a crash mid-``save`` (the
+        torn-write state: payload partially written, never renamed).  Called
+        automatically before ``restore``; safe because ``wait()`` ensures no
+        in-process async write is mid-flight."""
+        swept = []
+        for d in self.root.glob("step_*.tmp"):
+            if d.is_dir():
+                shutil.rmtree(d, ignore_errors=True)
+                swept.append(d.name)
+        return swept
+
+    def manifest(self, step: int) -> dict:
+        """The parsed ``manifest.json`` of one published step."""
+        return json.loads((self.root / f"step_{step}" / "manifest.json").read_text())
 
     # -- save/restore ---------------------------------------------------------
 
@@ -169,6 +227,8 @@ class CheckpointManager:
             self._thread = None
 
     def restore(self, template: Any, step: int | None = None, shardings: Any = None):
+        self.wait()
+        self.sweep_orphans()
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.root}")

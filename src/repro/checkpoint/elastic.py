@@ -9,6 +9,14 @@ and re-deriving shardings — this module is that policy.
 degree as divisibility allows and gives the rest to data parallelism: TP
 degree is dictated by per-op shardability (heads/ffn divisibility), DP by
 whatever is left — the standard operating rule at scale.
+
+Fleet serving has its own, simpler policy (``elastic_fleet_restore``): the
+``SensorFleetEngine`` shards only the slot axis, so the rule is "the
+largest prefix of the alive devices that divides the checkpointed slot
+count".  Restoring onto D′ ≠ D devices re-partitions the same gathered
+``(L, slots, H)`` carry by the slot→device placement function — every
+in-flight stream continues bit-identically
+(``tests/spmd_scripts/check_fleet_restore.py``).
 """
 
 from __future__ import annotations
@@ -18,7 +26,8 @@ import numpy as np
 
 from repro.parallel.sharding import RunContext, param_shardings
 
-__all__ = ["choose_mesh_shape", "make_elastic_mesh", "elastic_restore"]
+__all__ = ["choose_mesh_shape", "make_elastic_mesh", "elastic_restore",
+           "fleet_devices", "elastic_fleet_restore"]
 
 
 def choose_mesh_shape(n_devices: int, prefer_model: int = 16) -> tuple[int, int]:
@@ -46,3 +55,42 @@ def elastic_restore(manager, template, *, prefer_model: int = 16,
     shardings = param_shardings(template, ctx)
     state, extra, step = manager.restore(template, step=step, shardings=shardings)
     return state, extra, step, mesh, ctx
+
+
+def fleet_devices(batch_slots: int, devices=None) -> list:
+    """The largest prefix of ``devices`` (default: all alive now) whose
+    count divides ``batch_slots`` — the fleet engine needs every device to
+    own the same contiguous slot block."""
+    devices = jax.devices() if devices is None else list(devices)
+    d = len(devices)
+    while batch_slots % d:
+        d -= 1
+    return devices[:d]
+
+
+def elastic_fleet_restore(manager, qparams, fmt, luts=None, *,
+                          step: int | None = None, data_axis: str = "data",
+                          **restore_kw):
+    """Restore a ``SensorFleetEngine`` onto whatever devices are alive NOW.
+
+    The saving fleet's device count D is irrelevant: the checkpoint stores
+    the carry gathered, and slot→device placement is a pure function of the
+    slot index, so D′ ∈ {1, ..., n_alive} (divisibility permitting) all
+    continue every stream bit-identically.  Returns ``(engine, mesh)``
+    (``mesh`` is ``None`` when one device is enough).
+    """
+    from repro.parallel.sharding import fleet_mesh
+    from repro.serving.lstm_engine import SensorFleetEngine
+
+    manager.wait()
+    manager.sweep_orphans()
+    use_step = manager.latest_step() if step is None else step
+    if use_step is None:
+        raise FileNotFoundError(f"no valid checkpoints under {manager.root}")
+    cfg = manager.manifest(use_step)["extra"]["engine"]
+    devs = fleet_devices(cfg["batch_slots"])
+    mesh = fleet_mesh(devs, data_axis) if len(devs) > 1 else None
+    eng = SensorFleetEngine.restore(manager, qparams, fmt, luts, step=use_step,
+                                    mesh=mesh, data_axis=data_axis,
+                                    **restore_kw)
+    return eng, mesh

@@ -53,11 +53,31 @@ engine's whole lifetime.  ``submit`` hands a joining stream the lowest free
 slot and never migrates an active one, so a stream's ``h``/``c`` carry
 stays on one device across join/leave churn — occupancy can change *which*
 devices do useful work, never the bits they produce.
+
+Fault tolerance (ISSUE 6): ``save(manager)`` / ``restore(manager, ...)``
+snapshot and rebuild the WHOLE serving state — ``(L, slots, H)`` carry,
+slot table, per-stream cursors and emitted outputs, serving counters and a
+sha256 of the quantised params — through ``repro.checkpoint``'s atomic
+manifested writes (``mode="async"`` snapshots device→host between
+``step()`` calls so serving never stalls on disk; checkpoint I/O rides a
+bounded retry-with-backoff).  Because checkpoints store the carry
+*gathered* and placement is a pure function of the slot index, restoring
+onto a different device count D′ ≠ D just re-partitions the same slot
+blocks — every surviving stream continues bit-identically (battery:
+``tests/spmd_scripts/check_fleet_restore.py``).  Input faults degrade
+gracefully instead of crashing the fleet: ``submit`` validates
+dtype/ndim/feature-width/finiteness/fixed-point range at the boundary
+(reject, don't crash), ``admit`` turns those rejections into per-stream
+quarantine for bulk serving, and ``step`` quarantines a stream whose
+buffers were corrupted mid-flight — one poison stream fails alone, the
+rest of the batch's integers are untouched (masked lanes never interact).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import time
 
 import jax
 import jax.numpy as jnp
@@ -89,6 +109,7 @@ class SensorStream:
     qc: np.ndarray | None = None        # (H,) or (L, H) int32 final cell state
     done: bool = False
     cursor: int = 0                     # timesteps consumed so far
+    error: str | None = None            # set when rejected or quarantined
 
     @property
     def remaining(self) -> int:
@@ -148,6 +169,9 @@ class SensorFleetEngine:
         self.mesh = mesh
         self.data_axis = data_axis
         self.fmt = fmt
+        self.luts = luts
+        self.backend = backend
+        self.time_tile = time_tile
         self.slots = batch_slots
         self.chunk = chunk
         self.n_layers = len(layers)
@@ -168,6 +192,7 @@ class SensorFleetEngine:
         self._qh = jnp.zeros((self.n_layers, batch_slots, self.n_h), jnp.int32)
         self._qc = jnp.zeros((self.n_layers, batch_slots, self.n_h), jnp.int32)
         self.active: dict[int, SensorStream] = {}
+        self.quarantined: list[SensorStream] = []   # rejected/poisoned streams
         self.steps_run = 0              # batched kernel invocations so far
         self.timesteps_run = 0          # sum of t_step over those invocations
 
@@ -229,7 +254,13 @@ class SensorFleetEngine:
         ``(H,)`` accepted as layer 0 of a single-layer engine)."""
         if s0 is None:
             return np.zeros((self.n_layers, self.n_h), np.int32)
-        s0 = np.asarray(s0, np.int32)
+        s0 = np.asarray(s0)
+        if not np.issubdtype(s0.dtype, np.integer):
+            # float state would smuggle NaN/rounding into the integer carry
+            raise TypeError(
+                f"stream {rid}: {name} must be integer fixed point "
+                f"(quantise with repro.core.fxp.quantize first), got {s0.dtype}")
+        s0 = s0.astype(np.int32)
         if s0.shape == (self.n_h,) and self.n_layers == 1:
             return s0[None]
         if s0.shape != (self.n_layers, self.n_h):
@@ -242,19 +273,37 @@ class SensorFleetEngine:
         """Claim a slot for ``stream`` (mid-flight join); False if full.
 
         Malformed streams raise immediately — before the free-slot check —
-        so a bad request can't hide in the queue until a slot frees up.
+        so a bad request can't hide in the queue until a slot frees up:
+        wrong dtype (TypeError), non-finite values, wrong ndim/feature
+        width, empty streams and values outside the engine's fixed-point
+        range all reject at this boundary instead of surfacing as an opaque
+        failure deep inside the Pallas kernel.
         """
         qxs = np.asarray(stream.qxs)
         if not np.issubdtype(qxs.dtype, np.integer):
+            if np.issubdtype(qxs.dtype, np.floating) \
+                    and not np.isfinite(qxs).all():
+                raise ValueError(
+                    f"stream {stream.rid}: non-finite input (NaN/Inf) — a "
+                    "poisoned sensor reading must be dropped by the caller, "
+                    "not quantised")
             raise TypeError(
                 f"stream {stream.rid}: inputs must be integer fixed point "
                 f"(quantise with repro.core.fxp.quantize first), got {qxs.dtype}")
-        qxs = qxs.astype(np.int32)
         if qxs.ndim != 2 or qxs.shape[1] != self.n_in:
             raise ValueError(f"stream {stream.rid}: want (T, {self.n_in}) "
                              f"int32 inputs, got {qxs.shape}")
         if len(qxs) == 0:
             raise ValueError(f"stream {stream.rid}: empty stream")
+        if qxs.size and (qxs.min() < self.fmt.qmin or qxs.max() > self.fmt.qmax):
+            # int32 would happily wrap what the y-bit datapath saturates;
+            # out-of-range codes mean the producer quantised to a DIFFERENT
+            # format, so the outputs would be silently wrong — reject
+            raise ValueError(
+                f"stream {stream.rid}: inputs exceed the "
+                f"({self.fmt.frac_bits},{self.fmt.total_bits}) fixed-point "
+                f"range [{self.fmt.qmin}, {self.fmt.qmax}]")
+        qxs = qxs.astype(np.int32)
         h0 = self._state_init(stream.rid, stream.qh0, "qh0")
         c0 = self._state_init(stream.rid, stream.qc0, "qc0")
         free = self.free_slots()
@@ -281,8 +330,50 @@ class SensorFleetEngine:
                 return b
         return 1  # unreachable: buckets always contain 1
 
+    def _poison_reason(self, s: SensorStream) -> str | None:
+        """Did the caller corrupt an admitted stream's buffers under us?
+        (Value corruption can't crash the integer datapath; shape/dtype
+        corruption would crash the whole batch — catch it per stream.)"""
+        qxs = np.asarray(s.qxs)
+        if not np.issubdtype(qxs.dtype, np.integer):
+            return f"qxs dtype corrupted to {qxs.dtype}"
+        if qxs.ndim != 2 or qxs.shape[1] != self.n_in:
+            return f"qxs shape corrupted to {qxs.shape}"
+        if not 0 <= s.cursor < len(qxs):
+            return f"cursor {s.cursor} outside stream of {len(qxs)} steps"
+        if s.h_seq is None or s.h_seq.shape != (len(qxs), self.n_h):
+            return "h_seq output buffer corrupted"
+        return None
+
+    def _quarantine(self, slot: int, reason: str) -> None:
+        """Fail ONE stream without touching the rest of the batch: its lane
+        just goes back to masked (masked lanes never influence occupied
+        lanes' bits, so the survivors' integers are untouched)."""
+        s = self.active.pop(slot)
+        s.error = reason
+        self.quarantined.append(s)
+
+    def admit(self, pending: list) -> None:
+        """Drain ``pending`` (in place) into free slots, quarantining
+        malformed streams instead of raising — the graceful bulk-admission
+        face of ``submit`` (one poison request must not kill the fleet)."""
+        while pending:
+            try:
+                if not self.submit(pending[0]):
+                    return                      # engine full: keep the rest
+            except (TypeError, ValueError) as e:
+                bad = pending.pop(0)
+                bad.error = f"{type(e).__name__}: {e}"
+                self.quarantined.append(bad)
+                continue
+            pending.pop(0)
+
     def step(self) -> None:
         """One batched kernel call: advance every active slot ``t_step``."""
+        for slot in list(self.active):
+            reason = self._poison_reason(self.active[slot])
+            if reason is not None:
+                self._quarantine(slot, reason)
         if not self.active:
             return
         t_step = self._pick_t_step()
@@ -327,7 +418,169 @@ class SensorFleetEngine:
         """
         pending = list(streams)
         while pending or self.active:
-            while pending and self.submit(pending[0]):
-                pending.pop(0)
+            self.admit(pending)
             self.step()
         return streams
+
+    # --- checkpoint/restore of serving state --------------------------------
+
+    def params_checksum(self) -> str:
+        """sha256 over the quantised weights/biases: a restored fleet must
+        resume onto the SAME integers or the continuation contract is void."""
+        h = hashlib.sha256()
+        for arr in (*self._ws, *self._bs):
+            a = np.asarray(jax.device_get(arr))
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()
+
+    def checkpoint_payload(self) -> tuple[dict, dict]:
+        """``(tree, extra)`` for ``repro.checkpoint``: the array pytree
+        (state carry + per-stream buffers, see checkpoint.py's serving-state
+        layout) and the JSON side-car (slot table, geometry, counters)."""
+        streams: dict[str, dict] = {}
+        table: dict[str, dict] = {}
+        for slot, s in self.active.items():
+            leaf = {"qxs": np.asarray(s.qxs, np.int32),
+                    "h_seq": np.asarray(s.h_seq, np.int32)}
+            if s.qh0 is not None:
+                leaf["qh0"] = np.asarray(s.qh0, np.int32)
+            if s.qc0 is not None:
+                leaf["qc0"] = np.asarray(s.qc0, np.int32)
+            streams[str(slot)] = leaf
+            table[str(slot)] = {"rid": s.rid, "cursor": s.cursor}
+        tree = {"qh": self._qh, "qc": self._qc, "streams": streams}
+        extra = {
+            "kind": "sensor_fleet",
+            "engine": {
+                "n_layers": self.n_layers, "n_in": self.n_in,
+                "n_h": self.n_h, "batch_slots": self.slots,
+                "chunk": self.chunk, "time_tile": self.time_tile,
+                "backend": self.backend,
+                "fmt": dataclasses.asdict(self.fmt),
+                "params_sha256": self.params_checksum(),
+            },
+            "slot_table": table,
+            "counters": {"steps_run": self.steps_run,
+                         "timesteps_run": self.timesteps_run},
+        }
+        return tree, extra
+
+    def save(self, manager, step: int | None = None, *, mode: str = "sync",
+             attempts: int = 3, base_delay: float = 0.05,
+             sleep=time.sleep) -> int:
+        """Checkpoint the in-flight serving state through ``manager``
+        (``repro.checkpoint.CheckpointManager``: atomic tmp-rename writes,
+        manifest validation).
+
+        ``mode="async"`` snapshots device→host now and writes in a
+        background thread, so the next ``step()`` never waits on disk; the
+        synchronous path rides a bounded retry-with-backoff
+        (``serving.faults.retry_io``) so one flaky I/O burst doesn't drop
+        the fleet.  Returns the step number written.
+        """
+        from repro.serving.faults import retry_io
+
+        step = self.steps_run if step is None else step
+        tree, extra = self.checkpoint_payload()
+        if mode == "async":
+            manager.save_async(step, tree, extra=extra)
+        elif mode == "sync":
+            retry_io(lambda: manager.save(step, tree, extra=extra),
+                     attempts=attempts, base_delay=base_delay, sleep=sleep)
+        else:
+            raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
+        return step
+
+    @classmethod
+    def restore(cls, manager, qparams, fmt: FxpFormat, luts: dict | None = None,
+                *, step: int | None = None, mesh=None,
+                shard_slots: bool | None = None, data_axis: str = "data",
+                backend: str | None = None, chunk: int | None = None,
+                time_tile: int | None = None, block_b: int | None = None,
+                interpret: bool | None = None,
+                strict_params: bool = True) -> "SensorFleetEngine":
+        """Rebuild a fleet from its latest (or ``step``-th) checkpoint and
+        continue every in-flight stream bit-identically.
+
+        Elastic by construction: pass whatever ``mesh`` the devices alive
+        NOW support (D′ may differ from the saving fleet's D, including
+        D′ = 1) — the carry is stored gathered and slot→device placement is
+        a pure function of the slot index, so the same slot blocks simply
+        re-partition onto the new mesh.  ``backend``/``chunk``/``time_tile``
+        default to the checkpointed engine's values.  ``strict_params``
+        verifies the quantised params' sha256 against the checkpoint —
+        different weights cannot produce an integer-identical continuation,
+        so a mismatch raises instead of silently serving garbage.
+        """
+        manager.wait()
+        manager.sweep_orphans()         # torn tmp dirs from a crash mid-save
+        step = manager.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no valid checkpoints under {manager.root}")
+        manifest = manager.manifest(step)
+        extra = manifest["extra"]
+        if extra.get("kind") != "sensor_fleet":
+            raise ValueError(
+                f"step_{step} is not a SensorFleetEngine checkpoint "
+                f"(kind={extra.get('kind')!r})")
+        cfg = extra["engine"]
+        if dataclasses.asdict(fmt) != cfg["fmt"]:
+            raise ValueError(
+                f"restore fmt {dataclasses.asdict(fmt)} != checkpointed "
+                f"{cfg['fmt']} — the integer codes would mean different values")
+        eng = cls(qparams, fmt, luts,
+                  batch_slots=cfg["batch_slots"],
+                  chunk=cfg["chunk"] if chunk is None else chunk,
+                  time_tile=cfg.get("time_tile") if time_tile is None else time_tile,
+                  backend=cfg.get("backend", "pallas_fxp") if backend is None
+                  else backend,
+                  block_b=block_b, interpret=interpret, mesh=mesh,
+                  shard_slots=shard_slots, data_axis=data_axis)
+        if (eng.n_layers, eng.n_in, eng.n_h) != (cfg["n_layers"], cfg["n_in"],
+                                                 cfg["n_h"]):
+            raise ValueError(
+                f"qparams geometry (L={eng.n_layers}, n_in={eng.n_in}, "
+                f"H={eng.n_h}) != checkpointed (L={cfg['n_layers']}, "
+                f"n_in={cfg['n_in']}, H={cfg['n_h']})")
+        if strict_params and eng.params_checksum() != cfg["params_sha256"]:
+            raise ValueError(
+                "quantised params differ from the checkpointed fleet's — "
+                "in-flight streams cannot continue bit-identically "
+                "(pass strict_params=False to override)")
+
+        # template from the manifest's own leaf inventory, then the
+        # validated payload (restore_pytree re-checks shapes + checksum)
+        template: dict = {}
+        for name, info in manifest["leaves"].items():
+            parts = name.split("/")
+            d = template
+            for p in parts[:-1]:
+                d = d.setdefault(p, {})
+            d[parts[-1]] = np.zeros(info["shape"], info["dtype"])
+        tree, _, _ = manager.restore(template, step=step)
+
+        eng._qh = jnp.asarray(np.asarray(tree["qh"]), jnp.int32)
+        eng._qc = jnp.asarray(np.asarray(tree["qc"]), jnp.int32)
+        if eng._state_sharding is not None:
+            # elastic resharding: the SAME gathered carry, block-partitioned
+            # onto the new mesh by the slot->device placement function
+            eng._qh = jax.device_put(eng._qh, eng._state_sharding)
+            eng._qc = jax.device_put(eng._qc, eng._state_sharding)
+        for slot_str, meta in extra["slot_table"].items():
+            leaf = tree.get("streams", {})[slot_str]
+            # np.array (not asarray): npz-restored buffers arrive read-only
+            # and h_seq keeps being written as chunks land
+            s = SensorStream(rid=int(meta["rid"]),
+                             qxs=np.array(leaf["qxs"], np.int32))
+            s.cursor = int(meta["cursor"])
+            s.h_seq = np.array(leaf["h_seq"], np.int32)
+            if "qh0" in leaf:
+                s.qh0 = np.array(leaf["qh0"], np.int32)
+            if "qc0" in leaf:
+                s.qc0 = np.array(leaf["qc0"], np.int32)
+            eng.active[int(slot_str)] = s
+        counters = extra.get("counters", {})
+        eng.steps_run = int(counters.get("steps_run", 0))
+        eng.timesteps_run = int(counters.get("timesteps_run", 0))
+        return eng

@@ -1,0 +1,240 @@
+"""Subprocess battery: kill → checkpoint restore → elastic reshard is
+INTEGER-IDENTICAL.  A fleet serving on D devices is killed between steps;
+the checkpoint is restored onto D′ ∈ {1, 2, 8} devices (whatever the forced
+host device count allows) and driven to completion — every surviving
+stream's ``h_seq``/``qh``/``qc`` must equal the uninterrupted golden run's
+integers exactly.  Torn checkpoint writes (a save killed mid-write) must
+fall back to the last published step and still resume bit-identically, and
+the async checkpoint cadence (device→host snapshot between steps) must
+restore the same integers as sync saves.
+
+Run with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+(``tests/test_spmd.py`` sets it; ``--devices N`` must match).  Flags mirror
+the parent pytest invocation: ``-x`` stops at the first failing check,
+``-v`` prints per-check progress.
+"""
+
+import argparse
+import os
+import sys
+import tempfile
+import traceback
+from pathlib import Path
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--devices", type=int, default=8,
+                help="forced host device count (must match XLA_FLAGS)")
+ap.add_argument("-v", "--verbose", action="count", default=0)
+ap.add_argument("-x", "--exitfirst", action="store_true")
+ap.add_argument("-q", "--quiet", action="count", default=0)  # parent -q: ignored
+args = ap.parse_args()
+
+_FLAG = "--xla_force_host_platform_device_count"
+assert _FLAG in os.environ.get("XLA_FLAGS", ""), (
+    f"run me via tests/test_spmd.py, or set XLA_FLAGS={_FLAG}={args.devices}")
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.checkpoint.checkpoint import CheckpointManager  # noqa: E402
+from repro.checkpoint.elastic import elastic_fleet_restore  # noqa: E402
+from repro.core.fxp import FxpFormat, quantize  # noqa: E402
+from repro.core.lstm import LSTMParams, init_lstm_params  # noqa: E402
+from repro.core.lut import make_lut_pair  # noqa: E402
+from repro.parallel.sharding import fleet_mesh  # noqa: E402
+from repro.serving.faults import (FaultPlan, InjectedKill,  # noqa: E402
+                                  serve_with_checkpoints)
+from repro.serving.lstm_engine import SensorFleetEngine, SensorStream  # noqa: E402
+
+assert len(jax.devices()) == args.devices, (
+    f"wanted {args.devices} forced host devices, jax sees {len(jax.devices())}")
+
+NDEV = args.devices
+FMT = FxpFormat(8, 16)
+N_IN, N_H = 2, 10
+SLOTS = 8                         # divisible by every D' in {1, 2, 8}
+RESHARD_TO = [d for d in (1, 2, 8) if d <= NDEV]
+
+_failures: list[str] = []
+
+
+def _check(fn):
+    name = fn.__name__
+    if args.verbose:
+        print(f"[{name}] ...", flush=True)
+    try:
+        fn()
+    except Exception:
+        _failures.append(name)
+        print(f"\nFAILED {name}", file=sys.stderr)
+        traceback.print_exc()
+        if args.exitfirst:
+            sys.exit(1)
+    else:
+        if args.verbose:
+            print(f"[{name}] OK", flush=True)
+
+
+def _stack_setup(n_layers, key=0, depth=64):
+    qps = []
+    for li in range(n_layers):
+        p = init_lstm_params(jax.random.PRNGKey(key + li),
+                             N_IN if li == 0 else N_H, N_H)
+        qps.append(LSTMParams(w=quantize(p.w, FMT), b=quantize(p.b, FMT)))
+    return qps, make_lut_pair(depth)
+
+
+def _make_streams(lens, seed=0, n_layers=1, with_state=()):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, T in enumerate(lens):
+        qxs = np.asarray(quantize(
+            jnp.asarray(rng.normal(size=(T, N_IN)).astype(np.float32)), FMT))
+        s = SensorStream(rid=i, qxs=qxs)
+        if i in with_state:
+            s.qh0 = rng.integers(-100, 100, (n_layers, N_H)).astype(np.int32)
+            s.qc0 = rng.integers(-100, 100, (n_layers, N_H)).astype(np.int32)
+        out.append(s)
+    return out
+
+
+# long tail so the kill always lands with streams in flight AND work left
+LENS = [24, 9, 31, 7, 23, 3, 27, 8, 26, 14]
+
+
+def _mesh_for(ndev):
+    """None for 1 device (the unsharded engine), a 1-D mesh otherwise."""
+    return fleet_mesh(jax.devices()[:ndev]) if ndev > 1 else None
+
+
+def _golden_run(qps, luts, *, n_layers, with_state):
+    streams = _make_streams(LENS, n_layers=n_layers, with_state=with_state)
+    SensorFleetEngine(qps, FMT, luts, batch_slots=SLOTS, chunk=4,
+                      backend="fxp", interpret=True).run(streams)
+    return streams
+
+
+def _assert_resumed_matches(golden, restored_engine, pending, what):
+    """Drive the restored engine + leftover queue to completion and compare
+    every stream it still owns against the golden integers."""
+    inflight = list(restored_engine.active.values())
+    assert inflight, f"{what}: restore must find streams in flight"
+    while pending or restored_engine.active:
+        restored_engine.admit(pending)
+        restored_engine.step()
+    golden_by_rid = {g.rid: g for g in golden}
+    for s in inflight + pending:
+        assert s.done, f"{what}: stream {s.rid} did not finish"
+        g = golden_by_rid[s.rid]
+        np.testing.assert_array_equal(
+            s.h_seq, g.h_seq, err_msg=f"{what}: stream {s.rid} h_seq")
+        np.testing.assert_array_equal(
+            s.qh, g.qh, err_msg=f"{what}: stream {s.rid} qh")
+        np.testing.assert_array_equal(
+            s.qc, g.qc, err_msg=f"{what}: stream {s.rid} qc")
+    return len(inflight)
+
+
+def _kill_and_checkpoint(qps, luts, root, *, n_layers, with_state, mode="sync",
+                         source_ndev=None, kill_after=5, every=2,
+                         torn_at=None):
+    """Serve on ``source_ndev`` devices until the injected kill; return the
+    manager holding whatever it managed to publish plus the never-admitted
+    queue (all a real crashed process leaves behind)."""
+    source_ndev = NDEV if source_ndev is None else source_ndev
+    mgr = CheckpointManager(root, keep=3)
+    streams = _make_streams(LENS, n_layers=n_layers, with_state=with_state)
+    eng = SensorFleetEngine(qps, FMT, luts, batch_slots=SLOTS, chunk=4,
+                            backend="fxp", interpret=True,
+                            mesh=_mesh_for(source_ndev))
+    pending = list(streams)
+    plan = FaultPlan(kill_after_steps=kill_after, torn_write_at=torn_at)
+    try:
+        serve_with_checkpoints(eng, pending, mgr, every=every, mode=mode,
+                               plan=plan)
+    except InjectedKill:
+        pass
+    else:
+        raise AssertionError("the injected kill never fired")
+    mgr.wait()
+    return mgr, pending
+
+
+def check_kill_restore_reshard_battery():
+    """The acceptance criterion: kill between steps on a D-device fleet,
+    restore on D' in {1, 2, 8}, outputs integer-equal to the uninterrupted
+    golden schedule (stacked L=2 model, churn, nonzero initial state)."""
+    qps, luts = _stack_setup(2)
+    golden = _golden_run(qps, luts, n_layers=2, with_state=(1,))
+    for ndev in RESHARD_TO:
+        with tempfile.TemporaryDirectory() as td:
+            mgr, pending = _kill_and_checkpoint(qps, luts, td, n_layers=2,
+                                                with_state=(1,))
+            eng = SensorFleetEngine.restore(
+                mgr, qps, FMT, luts, mesh=_mesh_for(ndev), interpret=True)
+            n = _assert_resumed_matches(golden, eng, pending,
+                                        f"reshard {NDEV}->{ndev}")
+            if args.verbose:
+                print(f"  D={NDEV} -> D'={ndev}: {n} in-flight streams "
+                      "resumed integer-identical", flush=True)
+
+
+def check_elastic_policy_restore():
+    """checkpoint.elastic.elastic_fleet_restore picks the mesh itself from
+    the devices alive now (all NDEV forced devices) and resumes exactly."""
+    qps, luts = _stack_setup(1, key=3)
+    golden = _golden_run(qps, luts, n_layers=1, with_state=(2,))
+    with tempfile.TemporaryDirectory() as td:
+        mgr, pending = _kill_and_checkpoint(qps, luts, td, n_layers=1,
+                                            with_state=(2,), source_ndev=1)
+        eng, mesh = elastic_fleet_restore(mgr, qps, FMT, luts, interpret=True)
+        want = min(NDEV, SLOTS)
+        got = 1 if mesh is None else mesh.devices.size
+        assert got == want, f"elastic policy picked {got} devices, want {want}"
+        _assert_resumed_matches(golden, eng, pending, f"elastic 1->{got}")
+
+
+def check_torn_write_fallback_reshard():
+    """A save killed mid-write leaves step_<N>.tmp; restore (on a different
+    device count) sweeps it, falls back to the last published step, and the
+    recomputed continuation is still integer-identical."""
+    qps, luts = _stack_setup(1, key=7)
+    golden = _golden_run(qps, luts, n_layers=1, with_state=())
+    ndev = RESHARD_TO[-1]
+    with tempfile.TemporaryDirectory() as td:
+        mgr, pending = _kill_and_checkpoint(qps, luts, td, n_layers=1,
+                                            with_state=(), torn_at=6,
+                                            kill_after=None, every=2)
+        assert list(Path(td).glob("step_*.tmp")), "torn tmp dir must exist"
+        eng = SensorFleetEngine.restore(mgr, qps, FMT, luts,
+                                        mesh=_mesh_for(ndev), interpret=True)
+        assert not list(Path(td).glob("step_*.tmp")), "sweep must run"
+        _assert_resumed_matches(golden, eng, pending, f"torn-write->{ndev}dev")
+
+
+def check_async_checkpoint_restore():
+    """Async saves (device->host snapshot between steps, background write)
+    publish the same restorable state as sync saves."""
+    qps, luts = _stack_setup(2, key=11)
+    golden = _golden_run(qps, luts, n_layers=2, with_state=(0,))
+    ndev = 2 if NDEV >= 2 else 1
+    with tempfile.TemporaryDirectory() as td:
+        mgr, pending = _kill_and_checkpoint(qps, luts, td, n_layers=2,
+                                            with_state=(0,), mode="async",
+                                            every=1, kill_after=7)
+        eng = SensorFleetEngine.restore(mgr, qps, FMT, luts,
+                                        mesh=_mesh_for(ndev), interpret=True)
+        _assert_resumed_matches(golden, eng, pending, f"async->{ndev}dev")
+
+
+_check(check_kill_restore_reshard_battery)
+_check(check_elastic_policy_restore)
+_check(check_torn_write_fallback_reshard)
+_check(check_async_checkpoint_restore)
+
+if _failures:
+    print(f"\n{len(_failures)} check(s) failed: {', '.join(_failures)}",
+          file=sys.stderr)
+    sys.exit(1)
+print("FLEET_RESTORE_OK")

@@ -64,6 +64,58 @@ def test_async_save_equivalent(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_torn_write_recovery(tmp_path):
+    """A crash mid-save leaves ``step_<N>.tmp/`` with payload but no
+    manifest.  ``steps()`` must not list it, ``restore()`` must fall back to
+    the last published step, and the restore-time sweep must remove the
+    debris so retries of step N start clean."""
+    from repro.serving.faults import torn_save
+
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(1, _tree(1))
+    m.save(2, _tree(2))
+    orphan = torn_save(m, 3, _tree(3))
+    assert orphan.exists() and not (orphan / "manifest.json").exists()
+
+    assert m.steps() == [1, 2]
+    assert m.latest_step() == 2
+    restored, _, step = m.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    assert step == 2
+    assert not orphan.exists(), "restore must sweep the torn tmp dir"
+    for a, b in zip(jax.tree.leaves(_tree(2)), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corrupt_published_step_skipped(tmp_path):
+    """Post-publish disk rot (unparseable manifest) must drop the step from
+    validity filtering instead of crashing restore."""
+    from repro.serving.faults import corrupt_published
+
+    m = CheckpointManager(tmp_path, keep=3)
+    m.save(1, _tree(1))
+    m.save(2, _tree(2))
+    corrupt_published(m, 2)
+
+    assert m.steps() == [1]
+    restored, _, step = m.restore(jax.tree.map(jnp.zeros_like, _tree()))
+    assert step == 1
+    for a, b in zip(jax.tree.leaves(_tree(1)), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_payload_checksum_mismatch_detected(tmp_path):
+    """Flipping payload bytes after publish must fail the manifest's
+    prefix-checksum validation loudly, not return wrong integers."""
+    save_pytree(_tree(), tmp_path / "ck", extra={})
+    npz = tmp_path / "ck" / "arrays.npz"
+    raw = bytearray(npz.read_bytes())
+    raw[len(raw) // 2] ^= 0xFF
+    npz.write_bytes(bytes(raw))
+    # either the npz layer (CRC) or the manifest checksum must object
+    with pytest.raises(Exception):
+        restore_pytree(jax.tree.map(jnp.zeros_like, _tree()), tmp_path / "ck")
+
+
 def test_dataloader_exact_resume():
     """Index-based loader: a restarted run consumes identical batches."""
     ds = TokenDataset(vocab_size=100, seq_len=16, global_batch=4, seed=3)

@@ -88,3 +88,26 @@ def test_sharded_fleet_8dev(pytestconfig):
     out = _run("check_sharded_fleet.py", pytestconfig,
                args=["--devices", 8], devices=8)
     assert "SHARDED_FLEET_OK" in out
+
+
+@pytest.mark.spmd
+@pytest.mark.faults
+def test_fleet_kill_restore_2dev(pytestconfig):
+    """Fast-tier gate: kill a 2-device fleet between steps, restore the
+    checkpoint on D' in {1, 2}, and finish integer-equal to the
+    uninterrupted golden schedule — torn-write fallback and async saves
+    included."""
+    out = _run("check_fleet_restore.py", pytestconfig,
+               args=["--devices", 2], devices=2)
+    assert "FLEET_RESTORE_OK" in out
+
+
+@pytest.mark.spmd
+@pytest.mark.faults
+@pytest.mark.slow
+def test_fleet_kill_restore_8dev(pytestconfig):
+    """The full ISSUE 6 acceptance criterion: kill an 8-device fleet,
+    restore on D' in {1, 2, 8}, every surviving stream bit-identical."""
+    out = _run("check_fleet_restore.py", pytestconfig,
+               args=["--devices", 8], devices=8)
+    assert "FLEET_RESTORE_OK" in out
