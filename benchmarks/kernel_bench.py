@@ -103,6 +103,50 @@ def run():
                             f"stack kernel keeps the inter-layer h-seq in VMEM; "
                             f"model_cycles={cyc2}"})
 
+    # mixed-precision stack (ISSUE 7): per-gate/per-layer formats through the
+    # heterogeneous-H stacked datapath (the fused stack kernel's general
+    # case).  Ref-simulator wall time of the same integer op sequence + the
+    # per-layer width-scaled energy model vs the uniform-16-bit baseline.
+    from repro.core.fxp import GateFormats, LayerFormats, StackFormats
+    from repro.core.lstm import lstm_forward
+
+    h0m, h1m = 20, 12
+    sf = StackFormats((
+        LayerFormats(FxpFormat(8, 16),
+                     GateFormats(FxpFormat(7, 14), FxpFormat(8, 16),
+                                 FxpFormat(6, 12), FxpFormat(8, 15))),
+        LayerFormats(FxpFormat(6, 12),
+                     GateFormats(FxpFormat(6, 12), FxpFormat(5, 11),
+                                 FxpFormat(6, 13), FxpFormat(6, 12))),
+    ))
+    qps_mixed = [
+        LSTMParams(
+            w=jnp.asarray(RNG.integers(-1024, 1024,
+                                       (n_in + h0m, 4 * h0m)), jnp.int32),
+            b=jnp.asarray(RNG.integers(-512, 512, (4 * h0m,)), jnp.int32)),
+        LSTMParams(
+            w=jnp.asarray(RNG.integers(-1024, 1024,
+                                       (h0m + h1m, 4 * h1m)), jnp.int32),
+            b=jnp.asarray(RNG.integers(-512, 512, (4 * h1m,)), jnp.int32)),
+    ]
+    qxs_m = jnp.asarray(RNG.integers(-4096, 4096, (b, t, n_in)), jnp.int32)
+    fn = jax.jit(lambda x: lstm_forward(qps_mixed, x, backend="fxp", fmt=sf,
+                                        luts=luts, return_sequence=True,
+                                        return_state="all"))
+    us = timeit(fn, qxs_m, n=5)
+    shapes_m = [tm.LstmModelShape(n_seq=t, n_i=n_in, n_h=h0m, n_f=h0m, n_o=1),
+                tm.LstmModelShape(n_seq=t, n_i=h0m, n_h=h1m, n_f=h1m, n_o=1)]
+    layer_bits = [(lf.data.total_bits, *(g.total_bits for g in lf.gates))
+                  for lf in sf.layers]
+    spec = tm.SPARTAN7["XC7S15"]
+    e_mixed = tm.mixed_energy_per_inference_uj(shapes_m, spec, layer_bits)
+    e_glob = tm.parameterised_energy_per_inference_uj(shapes_m, spec, 16)
+    rows.append({"name": "kernel/lstm_seq_fxp_mixed", "us_per_call": round(us, 1),
+                 "derived": f"per-gate widths {layer_bits} B{b} T{t} "
+                            f"H{h0m}/{h1m} L2; us=ref simulator; "
+                            f"energy_uj={e_mixed:.3f} vs uniform16 "
+                            f"{e_glob:.3f} ({e_mixed / e_glob:.3f}x)"})
+
     # fleet-serving throughput (ISSUE 2): SensorFleetEngine continuously
     # batching ragged sensor streams; fxp backend so host wall time is the
     # compiled jnp scan, not the Python-interpret Pallas body.

@@ -24,6 +24,9 @@ import jax.numpy as jnp
 
 __all__ = [
     "FxpFormat",
+    "GateFormats",
+    "LayerFormats",
+    "StackFormats",
     "int_bits_for",
     "quantize",
     "dequantize",
@@ -32,6 +35,11 @@ __all__ = [
     "fxp_mul",
     "fxp_matmul",
     "fxp_matvec",
+    "fxp_convert",
+    "check_accumulator_envelope",
+    "fmt_to_dict",
+    "fmt_from_dict",
+    "as_stack_formats",
     "quantize_tree",
     "dequantize_tree",
 ]
@@ -98,6 +106,140 @@ class FxpFormat:
         return cls(frac_bits=frac, total_bits=total_bits)
 
 
+GATE_ORDER = ("i", "f", "g", "o")
+
+
+@dataclasses.dataclass(frozen=True)
+class GateFormats:
+    """Per-gate pre-activation formats for one LSTM layer, in gate order
+    ``(i, f, g, o)``.  Each gate's matmul accumulator is rescaled into its
+    own ``(x, y)`` before the activation LUT; the LUT output is then
+    quantised back to the layer's data format."""
+
+    i: FxpFormat
+    f: FxpFormat
+    g: FxpFormat
+    o: FxpFormat
+
+    @classmethod
+    def uniform(cls, fmt: FxpFormat) -> "GateFormats":
+        return cls(fmt, fmt, fmt, fmt)
+
+    def __iter__(self):
+        return iter((self.i, self.f, self.g, self.o))
+
+    def __getitem__(self, idx: "int | str") -> FxpFormat:
+        if isinstance(idx, str):
+            return getattr(self, idx)
+        return (self.i, self.f, self.g, self.o)[idx]
+
+    @property
+    def total_bits(self) -> tuple[int, int, int, int]:
+        return tuple(f.total_bits for f in self)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerFormats:
+    """Formats for one LSTM layer: ``data`` covers x/h/c, weights, bias and
+    every element-wise intermediate; ``gates`` are the four pre-activation
+    formats (default: uniform at ``data``)."""
+
+    data: FxpFormat
+    gates: GateFormats | None = None
+
+    def __post_init__(self):
+        if self.gates is None:
+            object.__setattr__(self, "gates", GateFormats.uniform(self.data))
+
+    @property
+    def is_uniform(self) -> bool:
+        return all(g == self.data for g in self.gates)
+
+    @classmethod
+    def uniform(cls, fmt: FxpFormat) -> "LayerFormats":
+        return cls(data=fmt)
+
+
+@dataclasses.dataclass(frozen=True)
+class StackFormats:
+    """Per-layer formats for a multi-layer LSTM stack (the tentpole
+    container of ROADMAP item 5).  ``layers[l]`` governs layer ``l``;
+    values are converted between consecutive layers' data formats with
+    ``fxp_convert`` (a rounding shift + saturate)."""
+
+    layers: tuple[LayerFormats, ...]
+
+    def __post_init__(self):
+        if not self.layers:
+            raise ValueError("StackFormats needs at least one layer")
+        object.__setattr__(self, "layers", tuple(self.layers))
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+    def __getitem__(self, idx: int) -> LayerFormats:
+        return self.layers[idx]
+
+    @classmethod
+    def uniform(cls, fmt: FxpFormat, n_layers: int) -> "StackFormats":
+        return cls(tuple(LayerFormats.uniform(fmt) for _ in range(n_layers)))
+
+    @property
+    def is_uniform(self) -> bool:
+        first = self.layers[0].data
+        return all(l.data == first and l.is_uniform for l in self.layers)
+
+    @property
+    def in_fmt(self) -> FxpFormat:
+        """Format of the stack's (integer) input: layer 0's data format."""
+        return self.layers[0].data
+
+    @property
+    def out_fmt(self) -> FxpFormat:
+        """Format of the stack's hidden-state output: last layer's data format."""
+        return self.layers[-1].data
+
+
+def as_stack_formats(fmt: "FxpFormat | LayerFormats | StackFormats",
+                     n_layers: int) -> StackFormats:
+    """Normalise any accepted format argument to a ``StackFormats`` of
+    exactly ``n_layers`` layers."""
+    if isinstance(fmt, FxpFormat):
+        return StackFormats.uniform(fmt, n_layers)
+    if isinstance(fmt, LayerFormats):
+        return StackFormats(tuple(fmt for _ in range(n_layers)))
+    if not isinstance(fmt, StackFormats):
+        raise TypeError(f"expected FxpFormat/LayerFormats/StackFormats, got {type(fmt)!r}")
+    if len(fmt) != n_layers:
+        raise ValueError(f"StackFormats has {len(fmt)} layers, model has {n_layers}")
+    return fmt
+
+
+def fmt_to_dict(fmt: "FxpFormat | LayerFormats | StackFormats") -> dict:
+    """Canonical JSON-safe dict (plain lists/dicts only, so a round trip
+    through ``json.dumps``/``loads`` compares equal).  ``FxpFormat`` keeps
+    the flat ``{"frac_bits", "total_bits"}`` layout for checkpoint
+    back-compat."""
+    if isinstance(fmt, FxpFormat):
+        return {"frac_bits": fmt.frac_bits, "total_bits": fmt.total_bits}
+    if isinstance(fmt, LayerFormats):
+        return {"data": fmt_to_dict(fmt.data),
+                "gates": [fmt_to_dict(g) for g in fmt.gates]}
+    if isinstance(fmt, StackFormats):
+        return {"layers": [fmt_to_dict(l) for l in fmt.layers]}
+    raise TypeError(f"expected FxpFormat/LayerFormats/StackFormats, got {type(fmt)!r}")
+
+
+def fmt_from_dict(d: dict) -> "FxpFormat | LayerFormats | StackFormats":
+    """Inverse of ``fmt_to_dict``."""
+    if "layers" in d:
+        return StackFormats(tuple(fmt_from_dict(l) for l in d["layers"]))
+    if "data" in d:
+        gates = GateFormats(*(fmt_from_dict(g) for g in d["gates"]))
+        return LayerFormats(data=fmt_from_dict(d["data"]), gates=gates)
+    return FxpFormat(frac_bits=int(d["frac_bits"]), total_bits=int(d["total_bits"]))
+
+
 def int_bits_for(max_abs: float) -> int:
     """Integer bits (sign included) so ``max_abs`` fits: the smallest ``n``
     with ``max_abs <= 2**(n-1)`` (0.9 -> 1, 3.5 -> 3; the exact boundary
@@ -116,13 +258,44 @@ def saturate(q: jax.Array, fmt: FxpFormat) -> jax.Array:
 
 
 def quantize(x: jax.Array, fmt: FxpFormat) -> jax.Array:
-    """float -> fixed point integers (round to nearest even, saturating)."""
-    q = jnp.round(jnp.asarray(x, jnp.float32) * (1 << fmt.frac_bits))
+    """float -> fixed point integers (round half up, saturating).
+
+    Rounding mode is **round-half-up** (ties toward +inf: ``floor(v + 0.5)``)
+    — the same mode the ALU model's rounding shift implements (add half LSB,
+    arithmetic shift right), so the float->int entry point and every integer
+    rescale inside the datapath agree bit-for-bit at ties.
+    """
+    q = jnp.floor(jnp.asarray(x, jnp.float32) * (1 << fmt.frac_bits) + 0.5)
     return saturate(q.astype(jnp.int32), fmt)
 
 
 def dequantize(q: jax.Array, fmt: FxpFormat) -> jax.Array:
     return q.astype(jnp.float32) * fmt.scale
+
+
+_INT32_MAX = (1 << 31) - 1
+
+
+def _shift_round_sat(acc: jax.Array, shift: int, fmt: FxpFormat) -> jax.Array:
+    """Shift an int32 accumulator right by ``shift`` fractional bits with
+    round-half-up, saturating into ``fmt``.  ``shift < 0`` is a saturating
+    left shift (the destination carries *more* fractional bits).
+
+    Wrap-proof: the ``+half`` rounding bias is applied only after clamping
+    the accumulator at ``int32.max - half``, so an accumulator at the
+    documented ``2**31`` envelope edge (core/fxp.py accumulation note)
+    saturates to ``qmax`` instead of wrapping to a large negative value.
+    """
+    if shift <= 0:
+        k = -shift
+        if k:
+            lim = 1 << (31 - k)
+            acc = jnp.clip(acc, -lim, lim - 1)  # keep acc << k inside int32
+            acc = acc << k
+        return saturate(acc, fmt)
+    half = 1 << (shift - 1)
+    acc = jnp.minimum(acc, _INT32_MAX - half)
+    return saturate((acc + half) >> shift, fmt)
 
 
 def _rescale(acc: jax.Array, fmt: FxpFormat) -> jax.Array:
@@ -131,8 +304,17 @@ def _rescale(acc: jax.Array, fmt: FxpFormat) -> jax.Array:
     Products of two ``(x, y)`` numbers carry ``2x`` fractional bits; the FPGA
     ALU shifts right by ``x`` with round-half-up (add half LSB then shift).
     """
-    half = 1 << (fmt.frac_bits - 1) if fmt.frac_bits > 0 else 0
-    return saturate((acc + half) >> fmt.frac_bits, fmt)
+    return _shift_round_sat(acc, fmt.frac_bits, fmt)
+
+
+def fxp_convert(q: jax.Array, src_fmt: FxpFormat, dst_fmt: FxpFormat) -> jax.Array:
+    """Requantise integers from ``src_fmt`` to ``dst_fmt``: a round-half-up
+    shift by the fractional-bit difference, saturating into ``dst_fmt``.
+    This is the inter-layer conversion of a mixed-precision stack (and a
+    no-op when the formats match)."""
+    if src_fmt == dst_fmt:
+        return q
+    return _shift_round_sat(q, src_fmt.frac_bits - dst_fmt.frac_bits, dst_fmt)
 
 
 def fxp_add(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
@@ -149,28 +331,68 @@ def fxp_mul(a: jax.Array, b: jax.Array, fmt: FxpFormat) -> jax.Array:
 # |sum of products| < 2**31 — for a (x, y<=16) format that holds whenever
 # sum_k |a_k b_k| * 2**(2x) < 2**31, amply true for the paper-scale models
 # (normalised [0,1] data, |w| < 4, reductions of a few hundred terms).
+# The rounding shift itself is wrap-proof (see _shift_round_sat): at the
+# envelope edge the ``+half`` bias saturates instead of wrapping, and
+# check_accumulator_envelope offers an eager debug assertion on the
+# accumulation itself.
 
 
-def fxp_matmul(a: jax.Array, b: jax.Array, fmt: FxpFormat, bias: jax.Array | None = None) -> jax.Array:
+def check_accumulator_envelope(a: jax.Array, b: jax.Array, fmt: FxpFormat,
+                               bias: jax.Array | None = None) -> float:
+    """Eager debug check that ``fxp_matmul(a, b, fmt, bias)`` stays inside
+    the int32 accumulation envelope (including the ``+half`` rounding bias).
+
+    Computes the worst-case ``sum_k |a_k b_k|`` bound in float64 (jax x64 is
+    disabled by default, so an int64-widened compare is unavailable) and
+    raises ``OverflowError`` if it can reach the wrap point.  Returns the
+    bound so callers can log headroom.  Not jit-traceable — use it on the
+    host at quantisation/calibration time, not inside the datapath.
+    """
+    import numpy as np
+
+    aa = np.abs(np.asarray(a, np.float64))
+    bb = np.abs(np.asarray(b, np.float64))
+    bound = float(np.max(aa @ bb))
+    if bias is not None:
+        bound += float(np.max(np.abs(np.asarray(bias, np.float64)))) * (1 << fmt.frac_bits)
+    half = 1 << (fmt.frac_bits - 1) if fmt.frac_bits > 0 else 0
+    if bound > _INT32_MAX - half:
+        raise OverflowError(
+            f"fxp accumulation bound {bound:.0f} exceeds the int32 envelope "
+            f"{_INT32_MAX - half} (2**31 - 1 - half); narrow the operands or "
+            f"use fewer fractional bits")
+    return bound
+
+
+def fxp_matmul(a: jax.Array, b: jax.Array, fmt: FxpFormat,
+               bias: jax.Array | None = None,
+               out_fmt: FxpFormat | None = None) -> jax.Array:
     """Fixed-point ``a @ b (+ bias)`` with int32 accumulation.
 
     Mirrors both the FPGA ALU (full-width accumulate) and the TPU int8 MXU
     (int32 accumulate): products carry ``2x`` fractional bits, one rounding
     shift at the end.  ``bias`` is fixed point at ``frac_bits``; it is
-    pre-shifted so it adds into the 2x-fractional accumulator.
+    pre-shifted so it adds into the 2x-fractional accumulator.  With
+    ``out_fmt`` the single rounding shift lands directly in the destination
+    format (shift ``2*x - x_out``) — the per-gate pre-activation path of the
+    mixed-precision datapath.
     """
+    out = fmt if out_fmt is None else out_fmt
     acc = jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
     if bias is not None:
         acc = acc + (bias.astype(jnp.int32) << fmt.frac_bits)
-    return _rescale(acc, fmt).astype(jnp.int32)
+    return _shift_round_sat(acc, 2 * fmt.frac_bits - out.frac_bits, out).astype(jnp.int32)
 
 
-def fxp_matvec(w: jax.Array, x: jax.Array, fmt: FxpFormat, bias: jax.Array | None = None) -> jax.Array:
+def fxp_matvec(w: jax.Array, x: jax.Array, fmt: FxpFormat,
+               bias: jax.Array | None = None,
+               out_fmt: FxpFormat | None = None) -> jax.Array:
     """``w @ x`` for 2-D ``w`` and 1-D ``x`` (the FPGA mat-vec primitive)."""
+    out = fmt if out_fmt is None else out_fmt
     acc = jnp.matmul(w.astype(jnp.int32), x.astype(jnp.int32))
     if bias is not None:
         acc = acc + (bias.astype(jnp.int32) << fmt.frac_bits)
-    return _rescale(acc, fmt).astype(jnp.int32)
+    return _shift_round_sat(acc, 2 * fmt.frac_bits - out.frac_bits, out).astype(jnp.int32)
 
 
 def quantize_tree(tree: Any, fmt: FxpFormat) -> Any:

@@ -78,10 +78,20 @@ return_state="all")`` returns EVERY layer's final ``(h, c)`` as per-layer
 lists (default ``"top"`` keeps the historical top-layer pair), and
 ``h0``/``c0`` accept per-layer lists or a stacked ``(L, ...)`` array — so a
 chunked continuation of a *stacked* LSTM is exact on every backend.  On
-``"pallas_fxp"``, a uniform-``H`` stack additionally fuses into ONE kernel
-(``lstm_sequence_fxp_stack_pallas``): the per-step loop chains the layers,
-keeping the inter-layer hidden sequence in VMEM instead of bouncing it
-through HBM between layers.
+``"pallas_fxp"``, EVERY multi-layer stack fuses into ONE kernel
+(``lstm_sequence_fxp_stack_pallas``) — heterogeneous hidden sizes are padded
+to ``max_l H_l`` with in-kernel lane masking, so there is no layer-by-layer
+fallback: the per-step loop chains the layers, keeping the inter-layer
+hidden sequence in VMEM instead of bouncing it through HBM between layers.
+
+Mixed precision: the fxp backends take ``fmt`` as a plain ``FxpFormat`` (one
+global format, the paper's configuration), a ``LayerFormats`` (per-gate
+pre-activation formats inside one layer) or a ``StackFormats`` (per-layer
+data formats + per-gate formats).  ``"fxp"`` is the readable per-gate-format
+oracle (``lstm_cell_fxp`` with per-gate rescale shifts, ``fxp_convert``
+between layers); ``"pallas_fxp"`` executes the identical arithmetic with the
+shifts baked in as static kernel constants — integer-equal, locked by
+``tests/golden/lstm_mixed_golden.json``.
 
 Fleet serving: ``repro.serving.lstm_engine.SensorFleetEngine`` continuously
 batches many independent sensor streams — single-layer or stacked (state
@@ -256,32 +266,54 @@ def lstm_cell_fxp(
     qx_t: jax.Array,
     qh: jax.Array,
     qc: jax.Array,
-    fmt: FxpFormat,
+    fmt: "FxpFormat | fxp_mod.LayerFormats",
     luts: dict[str, tuple[jax.Array, lut_mod.LutSpec]] | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Quantised cell: fixed-point matmul (int accumulate + rounding shift),
     shared sigmoid/tanh LUTs.  ``luts=None`` keeps activations full precision
-    (the paper's Fig. 6 sweep quantises data but not activations)."""
-    h4 = qparams.w.shape[1]
-    hdim = h4 // 4
+    (the paper's Fig. 6 sweep quantises data but not activations).
+
+    ``fmt`` may be a plain ``FxpFormat`` (one format everywhere — the paper's
+    configuration) or a ``LayerFormats``: data/weights/state/activations live
+    in ``fmt.data`` while each gate's pre-activation is rescaled straight out
+    of the 2x-fractional accumulator into its own ``fmt.gates[g]`` (the FPGA
+    view — four ALUs, four shift/saturate constants).  This is THE per-gate
+    oracle the mixed-precision Pallas kernel is integer-equal to.
+    """
+    lf = fmt if isinstance(fmt, fxp_mod.LayerFormats) else fxp_mod.LayerFormats.uniform(fmt)
+    data = lf.data
+    hdim = qparams.hidden_size
     qxh = jnp.concatenate([qx_t, qh], axis=-1)
-    z = fxp_mod.fxp_matmul(qxh, qparams.w, fmt, bias=qparams.b)
-    zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
+    if lf.is_uniform:
+        z = fxp_mod.fxp_matmul(qxh, qparams.w, data, bias=qparams.b)
+        zs = list(jnp.split(z, 4, axis=-1))
+    else:
+        # Per-gate column blocks of the stacked matmul have independent int32
+        # accumulators, so splitting the matmul is bit-exact — each block's
+        # single rounding shift lands in that gate's own format.
+        zs = [fxp_mod.fxp_matmul(
+                  qxh, qparams.w[:, k * hdim:(k + 1) * hdim], data,
+                  bias=qparams.b[k * hdim:(k + 1) * hdim],
+                  out_fmt=lf.gates[k])
+              for k in range(4)]
     if luts is None:
-        act_sig = lambda q: fxp_mod.quantize(jax.nn.sigmoid(fxp_mod.dequantize(q, fmt)), fmt)
-        act_tanh = lambda q: fxp_mod.quantize(jnp.tanh(fxp_mod.dequantize(q, fmt)), fmt)
+        act_sig = lambda q, in_fmt: fxp_mod.quantize(
+            jax.nn.sigmoid(fxp_mod.dequantize(q, in_fmt)), data)
+        act_tanh = lambda q, in_fmt: fxp_mod.quantize(
+            jnp.tanh(fxp_mod.dequantize(q, in_fmt)), data)
     else:
         sig_table, sig_spec = luts["sigmoid"]
         tanh_table, tanh_spec = luts["tanh"]
-        act_sig = lambda q: _lut_fxp(sig_table, sig_spec, q, fmt)
-        act_tanh = lambda q: _lut_fxp(tanh_table, tanh_spec, q, fmt)
-    i_t = act_sig(zi)
-    f_t = act_sig(zf)
-    g_t = act_tanh(zg)
-    o_t = act_sig(zo)
-    c_t = fxp_mod.fxp_add(fxp_mod.fxp_mul(f_t, qc, fmt), fxp_mod.fxp_mul(i_t, g_t, fmt), fmt)
-    h_t = fxp_mod.fxp_mul(o_t, act_tanh(c_t), fmt)
-    del hdim
+        act_sig = lambda q, in_fmt: lut_mod.lut_apply_fxp(
+            q, sig_table, sig_spec, in_fmt, out_fmt=data)
+        act_tanh = lambda q, in_fmt: lut_mod.lut_apply_fxp(
+            q, tanh_table, tanh_spec, in_fmt, out_fmt=data)
+    i_t = act_sig(zs[0], lf.gates.i)
+    f_t = act_sig(zs[1], lf.gates.f)
+    g_t = act_tanh(zs[2], lf.gates.g)
+    o_t = act_sig(zs[3], lf.gates.o)
+    c_t = fxp_mod.fxp_add(fxp_mod.fxp_mul(f_t, qc, data), fxp_mod.fxp_mul(i_t, g_t, data), data)
+    h_t = fxp_mod.fxp_mul(o_t, act_tanh(c_t, data), data)
     return h_t, c_t
 
 
@@ -326,7 +358,7 @@ def lstm_layer(
 def lstm_layer_fxp(
     qparams: LSTMParams,
     qxs: jax.Array,
-    fmt: FxpFormat,
+    fmt: "FxpFormat | fxp_mod.LayerFormats",
     luts: dict | None = None,
     qh0: jax.Array | None = None,
     qc0: jax.Array | None = None,
@@ -432,7 +464,7 @@ def _forward_one_layer(p, xs, h0, c0, need_seq, backend, fmt, luts,
 
     out = lstm_sequence_fxp_pallas(
         xs, p.w, p.b, h, c,
-        frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
+        formats=fmt,
         return_sequence=need_seq, block_b=block_b, time_tile=time_tile,
         interpret=interpret,
         **_lut_kernel_args(luts),
@@ -462,20 +494,23 @@ def lstm_forward(
     Parameters
     ----------
     params : ``LSTMParams`` or a list of them (one per stacked layer; layer
-        ``l``'s ``input_size`` must equal layer ``l-1``'s ``hidden_size``).
-        Uniform-``H`` stacks on ``"pallas_fxp"`` run as ONE kernel with the
-        inter-layer hidden sequence resident in VMEM
-        (``lstm_sequence_fxp_stack_pallas``); every other case runs layer by
+        ``l``'s ``input_size`` must equal layer ``l-1``'s ``hidden_size`` —
+        hidden sizes may differ between layers).  EVERY multi-layer stack on
+        ``"pallas_fxp"`` runs as ONE kernel with the inter-layer hidden
+        sequence resident in VMEM (``lstm_sequence_fxp_stack_pallas``, which
+        pads heterogeneous ``H`` in-kernel); the other backends run layer by
         layer, where inter-layer traffic is the full hidden-state sequence.
     xs : ``(B, n_seq, n_in)`` or ``(n_seq, n_in)``.  Float for the float
-        backends; int32 fixed point (already quantised to ``fmt``) for
-        ``"fxp"``/``"pallas_fxp"``.
+        backends; int32 fixed point (already quantised to layer 0's data
+        format) for ``"fxp"``/``"pallas_fxp"``.
     backend : one of ``LSTM_BACKENDS`` — see the module docstring matrix.
-    fmt, luts : fixed-point format + optional ``make_lut_pair`` tables
-        (fxp backends only).
+    fmt, luts : fixed-point format — ``FxpFormat`` (global), ``LayerFormats``
+        (per-gate) or ``StackFormats`` (per-layer + per-gate) — plus optional
+        ``make_lut_pair`` tables (fxp backends only).
     h0, c0 : initial state — a single ``(B, n_h)`` array (applied to layer 0
-        of a single-layer stack), a per-layer list, or a stacked ``(L, ...)``
-        array (multi-layer, uniform ``H``); default zeros.
+        of a single-layer stack), a per-layer list (required for
+        heterogeneous-``H`` stacks), or a stacked ``(L, ...)`` array
+        (multi-layer, uniform ``H``); default zeros.
     return_sequence : also return the top layer's per-step hidden states.
     return_state : ``"top"`` (default) returns the top layer's ``(h_T, c_T)``
         — backward compatible; ``"all"`` returns per-layer lists
@@ -505,6 +540,7 @@ def lstm_forward(
         raise ValueError(f"num_layers={num_layers} but {len(layers)} param sets given")
 
     is_fxp = backend in _FXP_BACKENDS
+    stack_fmt = None
     if is_fxp:
         if fmt is None:
             raise ValueError(f"backend {backend!r} needs fmt=FxpFormat(...)")
@@ -512,6 +548,9 @@ def lstm_forward(
             raise TypeError(
                 f"backend {backend!r} takes int32 fixed-point inputs; "
                 "quantise with repro.core.fxp.quantize(xs, fmt) first")
+        # Normalise FxpFormat / LayerFormats / StackFormats to one per-layer
+        # view; the uniform case is bit-identical to the historical path.
+        stack_fmt = fxp_mod.as_stack_formats(fmt, len(layers))
 
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -556,22 +595,22 @@ def lstm_forward(
             return s.reshape(-1, s.shape[-1])
         return s
 
-    # Uniform-H stacks on pallas_fxp fuse into ONE kernel: the per-step loop
-    # chains the layers, so the inter-layer hidden-state sequence never
+    # EVERY multi-layer stack on pallas_fxp fuses into ONE kernel — uniform
+    # or heterogeneous H, uniform or per-gate/per-layer formats: the per-step
+    # loop chains the layers, so the inter-layer hidden-state sequence never
     # bounces through HBM between layers (see kernels/lstm_fxp_seq.py).
-    hidden_sizes = {p.hidden_size for p in layers}
-    if backend == "pallas_fxp" and len(layers) > 1 and len(hidden_sizes) == 1:
+    if backend == "pallas_fxp" and len(layers) > 1:
         from repro.kernels.lstm_fxp_seq import lstm_sequence_fxp_stack_pallas
 
         def stacked_state(s):
             if s is None:
                 return None
-            return jnp.stack([state_for(li, s) for li in range(len(layers))])
+            return [state_for(li, s) for li in range(len(layers))]
 
         out = lstm_sequence_fxp_stack_pallas(
             xs, [p.w for p in layers], [p.b for p in layers],
             stacked_state(h0), stacked_state(c0),
-            frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
+            formats=stack_fmt,
             return_sequence=return_sequence, block_b=block_b,
             time_tile=time_tile, interpret=interpret,
             **_lut_kernel_args(luts),
@@ -588,11 +627,18 @@ def lstm_forward(
             need_seq = return_sequence or li < len(layers) - 1
             seq, h, c = _forward_one_layer(
                 p, xs, state_for(li, h0), state_for(li, c0), need_seq, backend,
-                fmt, luts, interpret, block_b, block_h, time_tile)
+                None if stack_fmt is None else stack_fmt[li],
+                luts, interpret, block_b, block_h, time_tile)
             hs.append(h)
             cs.append(c)
             if need_seq:
                 xs = seq
+                if stack_fmt is not None and li + 1 < len(layers):
+                    # Inter-layer requantisation of the oracle path — the
+                    # in-kernel static shift of the fused stack (fxp_convert
+                    # is a no-op for a uniform stack).
+                    xs = fxp_mod.fxp_convert(
+                        xs, stack_fmt[li].data, stack_fmt[li + 1].data)
 
     if squeeze_batch:
         hs = [h[0] for h in hs]

@@ -96,7 +96,8 @@ def lut_apply(x: jax.Array, table: jax.Array, spec: LutSpec) -> jax.Array:
     return jnp.take(table, lut_indices(x, spec), axis=0)
 
 
-def lut_apply_fxp(q: jax.Array, table: jax.Array, spec: LutSpec, fmt) -> jax.Array:
+def lut_apply_fxp(q: jax.Array, table: jax.Array, spec: LutSpec, fmt,
+                  out_fmt=None) -> jax.Array:
     """Apply a LUT to fixed-point inputs, returning fixed point.
 
     The FPGA addresses the LUT with the top bits of the fixed-point value; we
@@ -105,13 +106,17 @@ def lut_apply_fxp(q: jax.Array, table: jax.Array, spec: LutSpec, fmt) -> jax.Arr
     This is THE fxp-LUT semantics: ``core.lstm.lstm_cell_fxp`` (the bitstream
     spec), the Pallas kernels' reference, and the QAT fake-quant ops
     (``repro.qat.fakequant.fake_lut_act``) all evaluate exactly this.
-    ``fmt``: a ``repro.core.fxp.FxpFormat``.
+    ``fmt``: a ``repro.core.fxp.FxpFormat`` describing the *input* integers;
+    ``out_fmt`` (default ``fmt``) is the format of the returned integers —
+    in the mixed-precision datapath the gate pre-activation arrives at its
+    own gate format while the activation output lands at the layer's data
+    format.
     """
     from repro.core import fxp as fxp_mod
 
     x = fxp_mod.dequantize(q, fmt)
     y = lut_apply(x, table, spec)
-    return fxp_mod.quantize(y, fmt)
+    return fxp_mod.quantize(y, fmt if out_fmt is None else out_fmt)
 
 
 @partial(jax.jit, static_argnames=("depth",))

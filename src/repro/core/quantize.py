@@ -58,7 +58,7 @@ class QuantizedLstmModel:
     lstm: Any                   # LSTMParams or [LSTMParams], int32 (x,y) storage
     dense_w: jax.Array
     dense_b: jax.Array
-    fmt: FxpFormat
+    fmt: Any                    # FxpFormat | LayerFormats | StackFormats
     lut_depth: int | None       # None = full-precision activations
 
     def tree_flatten(self):
@@ -74,20 +74,31 @@ jax.tree_util.register_pytree_node(
 )
 
 
-def quantize_lstm_model(params: Any, fmt: FxpFormat, lut_depth: int | None) -> QuantizedLstmModel:
+def quantize_lstm_model(params: Any, fmt, lut_depth: int | None) -> QuantizedLstmModel:
     """PTQ of the trained float model (params as produced by
     ``repro.models.lstm_model.init_traffic_model``; single-layer or
-    stacked)."""
-    def q_layer(p: LSTMParams) -> LSTMParams:
-        return LSTMParams(w=fxp_mod.quantize(p.w, fmt),
-                          b=fxp_mod.quantize(p.b, fmt))
+    stacked).
+
+    ``fmt`` may be a single ``FxpFormat`` (every tensor on one grid — the
+    paper's method), or a ``LayerFormats``/``StackFormats``: each layer's
+    weights and bias are then snapped onto that layer's *data* grid (gate
+    formats only affect pre-activation rescales at inference time, never
+    parameter storage).  The dense head is quantised at the top layer's data
+    format — the format its ``h_T`` input arrives in.
+    """
+    def q_layer(p: LSTMParams, lfmt: FxpFormat) -> LSTMParams:
+        return LSTMParams(w=fxp_mod.quantize(p.w, lfmt),
+                          b=fxp_mod.quantize(p.b, lfmt))
 
     lstm = params["lstm"]
+    n_layers = len(lstm) if isinstance(lstm, (list, tuple)) else 1
+    sf = fxp_mod.as_stack_formats(fmt, n_layers)
     return QuantizedLstmModel(
-        lstm=([q_layer(p) for p in lstm] if isinstance(lstm, (list, tuple))
-              else q_layer(lstm)),
-        dense_w=fxp_mod.quantize(params["dense"]["w"], fmt),
-        dense_b=fxp_mod.quantize(params["dense"]["b"], fmt),
+        lstm=([q_layer(p, sf[li].data) for li, p in enumerate(lstm)]
+              if isinstance(lstm, (list, tuple))
+              else q_layer(lstm, sf[0].data)),
+        dense_w=fxp_mod.quantize(params["dense"]["w"], sf.out_fmt),
+        dense_b=fxp_mod.quantize(params["dense"]["b"], sf.out_fmt),
         fmt=fmt,
         lut_depth=lut_depth,
     )
@@ -106,11 +117,14 @@ def quantized_lstm_forward(qmodel: QuantizedLstmModel, xs: jax.Array,
     if backend not in ("fxp", "pallas_fxp"):
         raise ValueError(f"quantised forward needs an fxp backend, got {backend!r}")
     fmt = qmodel.fmt
+    lstm = qmodel.lstm
+    n_layers = len(lstm) if isinstance(lstm, (list, tuple)) else 1
+    sf = fxp_mod.as_stack_formats(fmt, n_layers)
     luts = lut_mod.make_lut_pair(qmodel.lut_depth) if qmodel.lut_depth else None
-    qxs = fxp_mod.quantize(xs, fmt)
-    qh, _ = lstm_forward(qmodel.lstm, qxs, backend=backend, fmt=fmt, luts=luts)
-    qy = fxp_mod.fxp_matmul(qh, qmodel.dense_w, fmt, bias=qmodel.dense_b)
-    return fxp_mod.dequantize(qy, fmt)
+    qxs = fxp_mod.quantize(xs, sf.in_fmt)
+    qh, _ = lstm_forward(lstm, qxs, backend=backend, fmt=fmt, luts=luts)
+    qy = fxp_mod.fxp_matmul(qh, qmodel.dense_w, sf.out_fmt, bias=qmodel.dense_b)
+    return fxp_mod.dequantize(qy, sf.out_fmt)
 
 
 # ---------------------------------------------------------------------------

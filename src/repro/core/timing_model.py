@@ -44,6 +44,7 @@ __all__ = [
     "energy_efficiency_gopj",
     "parameterised_dynamic_mw",
     "parameterised_energy_per_inference_uj",
+    "mixed_energy_per_inference_uj",
     "stack_shapes",
     "stacked_total_cycles",
     "STATE_OF_THE_ART",
@@ -221,15 +222,26 @@ _REF_TOTAL_BITS = 16
 _REF_LUT_DEPTH = 256
 
 
-def parameterised_dynamic_mw(spec: FpgaSpec, total_bits: int = 16,
+def parameterised_dynamic_mw(spec: FpgaSpec, total_bits=16,
                              lut_depth: int | None = 256) -> float:
     """Dynamic power of a ``(x, y)`` datapath with LUT activations of the
     given depth, scaled from the reference (16, 256) design point.
     ``lut_depth=None`` (full-precision activations simulated off-chip) keeps
-    the reference LUT term — it models the deployed depth-256 tables."""
+    the reference LUT term — it models the deployed depth-256 tables.
+
+    ``total_bits`` is a single operand width, or a sequence of widths for a
+    mixed-precision datapath (e.g. the per-gate ALU widths of one layer plus
+    its data width): the four gate ALUs and the elementwise tail run
+    concurrently, so the width term scales with the *mean* active width —
+    each unit's switching energy is ~linear in its own operand width and the
+    units' cycles overlap one-to-one."""
     import math
 
-    width = total_bits / _REF_TOTAL_BITS
+    try:
+        widths = [float(w) for w in total_bits]
+    except TypeError:
+        widths = [float(total_bits)]
+    width = (sum(widths) / len(widths)) / _REF_TOTAL_BITS
     depth = _REF_LUT_DEPTH if lut_depth is None else lut_depth
     lut = math.log2(max(depth, 2)) / math.log2(_REF_LUT_DEPTH)
     return spec.dynamic_mw * (_DYN_WIDTH_FRACTION * width + _DYN_LUT_FRACTION * lut)
@@ -263,6 +275,37 @@ def parameterised_energy_per_inference_uj(
     total_mw = spec.static_mw + parameterised_dynamic_mw(spec, total_bits, lut_depth)
     return energy_per_inference_uj(total_mw,
                                    stacked_total_cycles(shapes) / spec.clock_hz)
+
+
+def mixed_energy_per_inference_uj(
+    s, spec: FpgaSpec, layer_bits, lut_depth: int | None = 256,
+) -> float:
+    """Modeled energy/inference (uJ) of a **mixed-precision** stack: static
+    power burns over the whole Eq.-5.1 time, while each layer's recurrence
+    cycles are charged that layer's own width-scaled dynamic power.
+
+    ``layer_bits`` has one entry per layer; each entry is an operand width
+    or a sequence of widths (see ``parameterised_dynamic_mw`` — typically
+    ``(data_y, gate_i_y, gate_f_y, gate_g_y, gate_o_y)``).  The dense head's
+    cycles ride on the top layer's entry (it shares the top data grid).
+
+    With every entry equal to a global ``y`` this reduces exactly to
+    ``parameterised_energy_per_inference_uj(s, spec, y, lut_depth)`` — and
+    since per-point calibrated widths are <= the global worst-case width,
+    the mixed energy never exceeds the global-format energy for the same
+    fractional bits."""
+    shapes = list(s) if isinstance(s, (list, tuple)) else [s]
+    layer_bits = list(layer_bits)
+    if len(layer_bits) != len(shapes):
+        raise ValueError(
+            f"layer_bits has {len(layer_bits)} entries for {len(shapes)} layers")
+    mw_s = spec.static_mw * stacked_total_cycles(shapes) / spec.clock_hz
+    for li, (shape, bits) in enumerate(zip(shapes, layer_bits)):
+        cycles = lstm_layer_cycles(shape)
+        if li == len(shapes) - 1:
+            cycles += dense_cycles(shape)
+        mw_s += parameterised_dynamic_mw(spec, bits, lut_depth) * cycles / spec.clock_hz
+    return mw_s * 1e-3 * 1e6
 
 
 # Paper Table 3 (verbatim): this work vs Eciton [4] vs the EEG LSTM [6].

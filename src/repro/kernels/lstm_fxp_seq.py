@@ -1,6 +1,7 @@
 """Fused fixed-point LSTM *sequence* — Pallas TPU kernel (paper C1–C5 in one
 kernel), with double-buffered time-tiling for arbitrarily long sequences and
-in-VMEM multi-layer stacking.
+in-VMEM multi-layer stacking — including heterogeneous hidden sizes and
+per-gate/per-layer ``(x, y)`` formats (ROADMAP item 5).
 
 This is the bitstream-exact datapath run the way the FPGA actually runs it:
 the paper's 17534 inf/s come from a design where the stacked-gate weights,
@@ -12,12 +13,13 @@ per-step HBM round-trip — exactly the throughput bottleneck the paper removes.
 
 One ``pallas_call`` performs all ``n_seq`` steps of all ``L`` layers:
 
-* int32 stacked-gate weights ``(L*4, F, H)``, biases and both LUT tables are
+* int32 stacked-gate weights ``(L*4, F, Hp)``, biases and both LUT tables are
   loaded into VMEM once (C5);
 * each step is, per layer, one int32-accumulate matmul over ``[x_t, h]``
-  (C1), a round-half-up shift + saturate back to the ``(x, y)`` format (C4),
-  the LUT gather for all four gates (C3, as a one-hot MXU contraction), and
-  the fused elementwise tail (C2) — all against VMEM-resident tiles;
+  (C1), a round-half-up shift + saturate into that gate's own ``(x, y)``
+  format (C4), the LUT gather for all four gates (C3, as a one-hot MXU
+  contraction), and the fused elementwise tail (C2) — all against
+  VMEM-resident tiles;
 * ``h``/``c`` of **every** layer are carried as int32 in VMEM, so HBM traffic
   for state is O(1) in sequence length, matching ``lstm_sequence_pallas``.
 
@@ -26,11 +28,25 @@ dataflow lets layer ``l`` consume layer ``l-1``'s hidden state *of the same
 timestep*, so the kernel chains all ``L`` layers inside the per-step loop —
 the inter-layer hidden-state sequence is never materialised in HBM (the naive
 alternative runs the single-layer kernel ``L`` times and bounces the full
-``(B, T, H)`` sequence through HBM between layers).  Layers may have
-different input widths (layer 0: ``n_in``, layers >= 1: ``H``); weight rows
-are zero-padded to a common ``F = max(n_in, H) + H`` — zero rows against
-zero-padded inputs add nothing to the int32 accumulators, preserving
-bit-exactness.
+``(B, T, H)`` sequence through HBM between layers).
+
+Heterogeneous hidden sizes: layers may have *different* ``H_l``.  All tiles
+are padded to ``Hp = max_l H_l``; weight rows/columns beyond each layer's
+real extent are zero, and the fresh ``h``/``c`` of every step are masked to
+zero on lanes ``>= H_l`` (the LUT maps a zero pre-activation to a *non-zero*
+activation — sigmoid(0) = 0.5 — so padded lanes would otherwise accumulate
+garbage).  Zero rows against zero-padded inputs add nothing to the int32
+accumulators, preserving bit-exactness.
+
+Per-gate/per-layer formats (``formats=``): each layer carries a data format
+``(x_l, y_l)`` (inputs, weights, biases, activations, ``h``/``c``, the
+elementwise tail) and four per-gate pre-activation formats ``(x_{l,g},
+y_{l,g})``.  The gate matmul accumulator holds ``2*x_l`` fractional bits and
+is rescaled by the *static* shift ``2*x_l - x_{l,g}`` (free inside the
+kernel: the layer/gate loops unroll at trace time, so every shift and
+saturation rail is a compile-time constant).  Between layers the hidden
+state is requantised ``(x_l, y_l) -> (x_{l+1}, y_{l+1})`` with the same
+round-half-up shift, exactly ``repro.core.fxp.fxp_convert``.
 
 Time-tiling (``time_tile``): with the default ``time_tile=None`` the whole
 ``(bb, T, n_in)`` input block must fit in one VMEM window, which bounds
@@ -48,10 +64,12 @@ preserving integer-exactness.
 Bit-exactness: every operation replicates ``repro.core.fxp`` /
 ``repro.core.lut`` arithmetic operation-for-operation (same rounding mode,
 same saturation points, same float32 index computation), so in interpret
-mode the kernel is *integer-equal* to ``lstm_layer_fxp`` (layer by layer for
-stacks) — asserted across the paper's Fig. 6 ``(x, y)`` sweep and Table 1
-LUT depths in ``tests/test_lstm_forward.py``, and across the backend x shape
-x time-tile x depth product in ``tests/test_backend_equiv.py``.  Oracle:
+mode the kernel is *integer-equal* to ``lstm_layer_fxp`` (layer by layer,
+with ``fxp_convert`` between layers, for stacks) — asserted across the
+paper's Fig. 6 ``(x, y)`` sweep and Table 1 LUT depths in
+``tests/test_lstm_forward.py``, across the backend x shape x time-tile x
+depth product in ``tests/test_backend_equiv.py``, and for the mixed-precision
+hetero-``H`` stack against ``tests/golden/lstm_mixed_golden.json``.  Oracle:
 ``repro.kernels.ref.lstm_sequence_fxp_ref``.
 """
 
@@ -63,6 +81,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fxp import FxpFormat, LayerFormats, StackFormats, as_stack_formats
 
 __all__ = ["lstm_sequence_fxp_pallas", "lstm_sequence_fxp_stack_pallas"]
 
@@ -80,9 +100,8 @@ def _lstm_seq_fxp_kernel(
     time_tile: int,
     n_seq: int,
     has_tail: bool,
-    frac_bits: int,
-    qmin: int,
-    qmax: int,
+    fmt_spec: tuple,     # per layer: ((x_d, y_d), 4 x (x_g, y_g)) — static
+    h_sizes: tuple,      # per layer: real H_l (<= Hp) — static
     sig_lo: float,
     sig_step: float,
     sig_depth: int,
@@ -93,7 +112,7 @@ def _lstm_seq_fxp_kernel(
     mxu_onehot: bool,
     return_sequence: bool,
 ):
-    h_scr, c_scr = refs[-2], refs[-1]       # (L, bb, H): every layer's state
+    h_scr, c_scr = refs[-2], refs[-1]       # (L, bb, Hp): every layer's state
     out_refs = refs[:-2]
     if return_sequence:
         h_seq_ref, h_out_ref, c_out_ref = out_refs
@@ -107,23 +126,28 @@ def _lstm_seq_fxp_kernel(
         h_scr[...] = h0_ref[...]
         c_scr[...] = c0_ref[...]
 
-    w = w_ref[...]                      # (L*4, F, H) int32 — loaded once (C5)
-    b = b_ref[...]                      # (L*4, H) int32
-    F, H = w.shape[1], w.shape[2]
-    in_w = F - H                        # padded input width (= n_in for L=1)
-    scale = 2.0 ** (-frac_bits)         # one LSB, same constant fxp.dequantize uses
-    half = (1 << (frac_bits - 1)) if frac_bits > 0 else 0
+    w = w_ref[...]                      # (L*4, F, Hp) int32 — loaded once (C5)
+    b = b_ref[...]                      # (L*4, Hp) int32
+    F, Hp = w.shape[1], w.shape[2]
+    in_w = F - Hp                       # padded input width (= n_in for L=1)
 
-    def sat(v):
-        return jnp.clip(v, qmin, qmax)
+    def sat(v, y):
+        return jnp.clip(v, -(1 << (y - 1)), (1 << (y - 1)) - 1)
 
-    def rescale(acc):
-        # fxp._rescale: round-half-up shift from 2x to x fractional bits.
-        return sat((acc + half) >> frac_bits)
+    def shift_rs(acc, shift, y):
+        # fxp._shift_round_sat: round-half-up shift by `shift` fractional
+        # bits (static; <= 0 is a left shift), saturate to y bits.  The
+        # kernel's accumulators stay inside the documented int32 envelope,
+        # so no wrap clamp is needed for bit-equality with the oracle.
+        if shift > 0:
+            acc = (acc + (1 << (shift - 1))) >> shift
+        elif shift < 0:
+            acc = acc << (-shift)
+        return sat(acc, y)
 
-    def quant(y):
-        # fxp.quantize: round-to-nearest-even, then saturate.
-        return sat(jnp.round(y * (1 << frac_bits)).astype(jnp.int32))
+    def quant(yf, x_bits, y_bits):
+        # fxp.quantize: round-half-up (floor(v + 0.5)), then saturate.
+        return sat(jnp.floor(yf * (1 << x_bits) + 0.5).astype(jnp.int32), y_bits)
 
     def gather(table, idx, depth):
         if mxu_onehot:
@@ -136,44 +160,58 @@ def _lstm_seq_fxp_kernel(
             )
         return jnp.take(table, idx, axis=0)
 
-    def lut_act(q, table, lo, step, depth):
-        x = q.astype(jnp.float32) * scale
+    def lut_act(q, table, lo, step, depth, in_frac, out_x, out_y):
+        x = q.astype(jnp.float32) * (2.0 ** (-in_frac))
         idx = jnp.clip(jnp.floor((x - lo) / step).astype(jnp.int32), 0, depth - 1)
-        return quant(gather(table, idx, depth))
+        return quant(gather(table, idx, depth), out_x, out_y)
 
     if use_lut:
-        act_sig = lambda q: lut_act(q, sig_ref[0], sig_lo, sig_step, sig_depth)
-        act_tanh = lambda q: lut_act(q, tanh_ref[0], tanh_lo, tanh_step, tanh_depth)
+        act_sig = lambda q, in_frac, xd, yd: lut_act(
+            q, sig_ref[0], sig_lo, sig_step, sig_depth, in_frac, xd, yd)
+        act_tanh = lambda q, in_frac, xd, yd: lut_act(
+            q, tanh_ref[0], tanh_lo, tanh_step, tanh_depth, in_frac, xd, yd)
     else:
-        act_sig = lambda q: quant(jax.nn.sigmoid(q.astype(jnp.float32) * scale))
-        act_tanh = lambda q: quant(jnp.tanh(q.astype(jnp.float32) * scale))
-
-    def fmul(a, bb):
-        return rescale(a * bb)
+        act_sig = lambda q, in_frac, xd, yd: quant(
+            jax.nn.sigmoid(q.astype(jnp.float32) * (2.0 ** (-in_frac))), xd, yd)
+        act_tanh = lambda q, in_frac, xd, yd: quant(
+            jnp.tanh(q.astype(jnp.float32) * (2.0 ** (-in_frac))), xd, yd)
 
     t0 = tb * time_tile                    # global index of this chunk's step 0
 
     def step(t, hc):
-        hs, cs = hc                                    # (L, bb, H) each
+        hs, cs = hc                                    # (L, bb, Hp) each
         inp = xs_ref[:, t, :]                          # (bb, in_w) dynamic slice
         new_h, new_c = [], []
         for l in range(n_layers):                      # unrolled at trace time
+            (xd, yd), gate_fmts = fmt_spec[l]
+            H_l = h_sizes[l]
             qh, qc = hs[l], cs[l]
             qxh = jnp.concatenate([inp, qh], axis=-1)  # (bb, F)
             # C1: stacked-gate matmul — per-gate int32 accumulators are
             # identical to the (F, 4H) stacked form, so gate-major keeps
             # bit-exactness; zero-padded rows x zero-padded inputs add 0.
-            z = [rescale(_int_dot(qxh, w[4 * l + g])
-                         + (b[4 * l + g][None, :] << frac_bits))
+            # The accumulator carries 2*xd fractional bits; each gate's
+            # rescale shift 2*xd - x_g lands directly in that gate's format.
+            z = [shift_rs(_int_dot(qxh, w[4 * l + g])
+                          + (b[4 * l + g][None, :] << xd),
+                          2 * xd - gate_fmts[g][0], gate_fmts[g][1])
                  for g in range(4)]
-            i_t = act_sig(z[0])
-            f_t = act_sig(z[1])
-            g_t = act_tanh(z[2])
-            o_t = act_sig(z[3])
+            i_t = act_sig(z[0], gate_fmts[0][0], xd, yd)
+            f_t = act_sig(z[1], gate_fmts[1][0], xd, yd)
+            g_t = act_tanh(z[2], gate_fmts[2][0], xd, yd)
+            o_t = act_sig(z[3], gate_fmts[3][0], xd, yd)
             # C2: fused elementwise tail, same saturation order as the oracle
             # (each product rescaled+saturated, then the sum saturated).
-            qc_new = sat(fmul(f_t, qc) + fmul(i_t, g_t))
-            qh_new = fmul(o_t, act_tanh(qc_new))
+            fmul = lambda a, bb_: shift_rs(a * bb_, xd, yd)
+            qc_new = sat(fmul(f_t, qc) + fmul(i_t, g_t), yd)
+            qh_new = fmul(o_t, act_tanh(qc_new, xd, xd, yd))
+            if H_l < Hp:
+                # Padded lanes must stay zero: a zero pre-activation maps to
+                # a NON-zero activation (sigmoid(0) = 0.5), so without the
+                # mask garbage would accumulate in h/c beyond H_l.
+                lane = jax.lax.broadcasted_iota(jnp.int32, qh_new.shape, 1)
+                qh_new = jnp.where(lane < H_l, qh_new, 0)
+                qc_new = jnp.where(lane < H_l, qc_new, 0)
             if has_tail:
                 # Padded steps past n_seq must not advance the recurrence.
                 valid = t0 + t < n_seq
@@ -183,9 +221,14 @@ def _lstm_seq_fxp_kernel(
             new_c.append(qc_new)
             if l + 1 < n_layers:
                 # Layer l's fresh h_t is layer l+1's input AT THIS TIMESTEP —
-                # it stays in VMEM/registers, never visiting HBM.
-                inp = (qh_new if H == in_w else
-                       jnp.pad(qh_new, ((0, 0), (0, in_w - H))))
+                # it stays in VMEM/registers, never visiting HBM.  Requantise
+                # into layer l+1's data format (fxp_convert, static shift).
+                nxt_xd, nxt_yd = fmt_spec[l + 1][0]
+                inp = qh_new
+                if (xd, yd) != (nxt_xd, nxt_yd):
+                    inp = shift_rs(inp, xd - nxt_xd, nxt_yd)
+                if in_w != Hp:
+                    inp = jnp.pad(inp, ((0, 0), (0, in_w - Hp)))
         if return_sequence:
             h_seq_ref[:, t, :] = new_h[-1]             # top layer only
         return jnp.stack(new_h), jnp.stack(new_c)
@@ -200,17 +243,17 @@ def _lstm_seq_fxp_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "frac_bits", "total_bits", "sig_lo", "sig_hi", "tanh_lo", "tanh_hi",
+        "fmt_spec", "h_sizes", "sig_lo", "sig_hi", "tanh_lo", "tanh_hi",
         "return_sequence", "block_b", "time_tile", "mxu_onehot", "interpret",
     ),
 )
 def _lstm_seq_fxp_call(
     qxs, w4, b4, sig_table, tanh_table, qh0, qc0, *,
-    frac_bits, total_bits, sig_lo, sig_hi, tanh_lo, tanh_hi,
+    fmt_spec, h_sizes, sig_lo, sig_hi, tanh_lo, tanh_hi,
     return_sequence, block_b, time_tile, mxu_onehot, interpret,
 ):
     B, T, in_w = qxs.shape
-    L4, F, H = w4.shape
+    L4, F, Hp = w4.shape
     L = L4 // 4
     use_lut = sig_table.shape[0] > 1 or tanh_table.shape[0] > 1
     sig_depth = sig_table.shape[0]
@@ -231,11 +274,10 @@ def _lstm_seq_fxp_call(
     Tp = T + pad_t
     n_tt = Tp // tt
 
-    qmin, qmax = -(1 << (total_bits - 1)), (1 << (total_bits - 1)) - 1
     kernel = functools.partial(
         _lstm_seq_fxp_kernel,
         n_layers=L, time_tile=tt, n_seq=T, has_tail=bool(pad_t),
-        frac_bits=frac_bits, qmin=qmin, qmax=qmax,
+        fmt_spec=fmt_spec, h_sizes=h_sizes,
         sig_lo=sig_lo, sig_step=(sig_hi - sig_lo) / sig_depth, sig_depth=sig_depth,
         tanh_lo=tanh_lo, tanh_step=(tanh_hi - tanh_lo) / tanh_depth,
         tanh_depth=tanh_depth,
@@ -243,16 +285,16 @@ def _lstm_seq_fxp_call(
     )
 
     out_specs = [
-        pl.BlockSpec((L, bb, H), lambda i, t: (0, i, 0)),
-        pl.BlockSpec((L, bb, H), lambda i, t: (0, i, 0)),
+        pl.BlockSpec((L, bb, Hp), lambda i, t: (0, i, 0)),
+        pl.BlockSpec((L, bb, Hp), lambda i, t: (0, i, 0)),
     ]
     out_shape = [
-        jax.ShapeDtypeStruct((L, Bp, H), jnp.int32),
-        jax.ShapeDtypeStruct((L, Bp, H), jnp.int32),
+        jax.ShapeDtypeStruct((L, Bp, Hp), jnp.int32),
+        jax.ShapeDtypeStruct((L, Bp, Hp), jnp.int32),
     ]
     if return_sequence:
-        out_specs = [pl.BlockSpec((bb, tt, H), lambda i, t: (i, t, 0))] + out_specs
-        out_shape = [jax.ShapeDtypeStruct((Bp, Tp, H), jnp.int32)] + out_shape
+        out_specs = [pl.BlockSpec((bb, tt, Hp), lambda i, t: (i, t, 0))] + out_specs
+        out_shape = [jax.ShapeDtypeStruct((Bp, Tp, Hp), jnp.int32)] + out_shape
 
     outs = pl.pallas_call(
         kernel,
@@ -262,18 +304,18 @@ def _lstm_seq_fxp_call(
         grid=(Bp // bb, n_tt),
         in_specs=[
             pl.BlockSpec((bb, tt, in_w), lambda i, t: (i, t, 0)),
-            pl.BlockSpec((L4, F, H), lambda i, t: (0, 0, 0)),
-            pl.BlockSpec((L4, H), lambda i, t: (0, 0)),
+            pl.BlockSpec((L4, F, Hp), lambda i, t: (0, 0, 0)),
+            pl.BlockSpec((L4, Hp), lambda i, t: (0, 0)),
             pl.BlockSpec((1, sig_depth), lambda i, t: (0, 0)),
             pl.BlockSpec((1, tanh_depth), lambda i, t: (0, 0)),
-            pl.BlockSpec((L, bb, H), lambda i, t: (0, i, 0)),
-            pl.BlockSpec((L, bb, H), lambda i, t: (0, i, 0)),
+            pl.BlockSpec((L, bb, Hp), lambda i, t: (0, i, 0)),
+            pl.BlockSpec((L, bb, Hp), lambda i, t: (0, i, 0)),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((L, bb, H), jnp.int32),  # h, all layers, across chunks
-            pltpu.VMEM((L, bb, H), jnp.int32),  # c, all layers, across chunks
+            pltpu.VMEM((L, bb, Hp), jnp.int32),  # h, all layers, across chunks
+            pltpu.VMEM((L, bb, Hp), jnp.int32),  # c, all layers, across chunks
         ],
         # Neither grid dimension is safely parallelisable: time chunks carry
         # the recurrence, and batch tiles re-initialise the shared scratch.
@@ -290,30 +332,45 @@ def _lstm_seq_fxp_call(
     return h[:, :B], c[:, :B]
 
 
-def _pack_gate_major(qw, qb, n_in_l, in_w, H):
-    """One layer's stacked ``(F_l, 4H)`` weights -> gate-major ``(4, F, H)``
-    with the input rows at ``[0:n_in_l]`` and the hidden rows at
-    ``[in_w:in_w+H]``; the gap rows are zero (they meet zero-padded inputs)."""
+def _pack_gate_major(qw, qb, n_in_l, in_w, H, Hp):
+    """One layer's stacked ``(F_l, 4H)`` weights -> gate-major
+    ``(4, in_w + Hp, Hp)`` with the input rows at ``[0:n_in_l]``, the hidden
+    rows at ``[in_w:in_w+H]`` and the real output columns at ``[0:H]``; every
+    other row/column is zero (zero rows meet zero-padded inputs, and zero
+    columns keep padded output lanes inert)."""
     F_l = qw.shape[0]
     wl = qw.reshape(F_l, 4, H).transpose(1, 0, 2)           # (4, F_l, H)
-    if n_in_l == in_w:
+    if n_in_l == in_w and H == Hp:
         packed = wl
     else:
-        packed = jnp.zeros((4, in_w + H, H), jnp.int32)
-        packed = packed.at[:, :n_in_l, :].set(wl[:, :n_in_l, :])
-        packed = packed.at[:, in_w:, :].set(wl[:, n_in_l:, :])
-    return packed, qb.reshape(4, H)
+        packed = jnp.zeros((4, in_w + Hp, Hp), jnp.int32)
+        packed = packed.at[:, :n_in_l, :H].set(wl[:, :n_in_l, :])
+        packed = packed.at[:, in_w:in_w + H, :H].set(wl[:, n_in_l:, :])
+    qb = qb.reshape(4, H)
+    if H != Hp:
+        qb = jnp.pad(qb, ((0, 0), (0, Hp - H)))
+    return packed, qb
+
+
+def _fmt_spec(formats: StackFormats) -> tuple:
+    """Hashable static spec the jitted call keys on: per layer,
+    ``((x_d, y_d), ((x_i, y_i), (x_f, y_f), (x_g, y_g), (x_o, y_o)))``."""
+    return tuple(
+        ((lf.data.frac_bits, lf.data.total_bits),
+         tuple((g.frac_bits, g.total_bits) for g in lf.gates))
+        for lf in formats.layers)
 
 
 def lstm_sequence_fxp_stack_pallas(
     qxs: jax.Array,                 # (B, T, n_in) int32 fixed point
-    qws,                            # length-L sequence of (F_l, 4H) int32
-    qbs,                            # length-L sequence of (4H,) int32
-    qh0: jax.Array | None = None,   # (L, B, H) int32
-    qc0: jax.Array | None = None,   # (L, B, H) int32
+    qws,                            # length-L sequence of (F_l, 4*H_l) int32
+    qbs,                            # length-L sequence of (4*H_l,) int32
+    qh0=None,                       # (L, B, H) int32, or per-layer list of (B, H_l)
+    qc0=None,                       # (L, B, H) int32, or per-layer list of (B, H_l)
     sig_table: jax.Array | None = None,   # (depth,) float32 LUT, None = exact sigmoid
     tanh_table: jax.Array | None = None,  # (depth,) float32 LUT, None = exact tanh
     *,
+    formats: StackFormats | LayerFormats | FxpFormat | None = None,
     frac_bits: int = 8,
     total_bits: int = 16,
     sig_lo: float = -8.0,
@@ -328,12 +385,19 @@ def lstm_sequence_fxp_stack_pallas(
 ):
     """Run an ``L``-layer quantised stack in ONE Pallas kernel.
 
-    All layers must share the hidden size ``H`` (layer ``l >= 1`` therefore
-    has input size ``H``); layer 0's input size is ``qxs.shape[-1]``.  The
-    per-step loop chains the layers, so the inter-layer hidden sequence stays
-    in VMEM — integer-equal to running ``lstm_layer_fxp`` layer by layer.
-    Returns ``(qh, qc)`` of shape ``(L, B, H)``, or ``(qh_seq, qh, qc)`` with
-    ``return_sequence=True`` (``qh_seq`` is the top layer's ``(B, T, H)``).
+    Layers may have different hidden sizes ``H_l`` (layer ``l >= 1`` has
+    input size ``H_{l-1}``; layer 0's input size is ``qxs.shape[-1]``) and
+    different per-gate/per-layer formats (``formats=``, a ``StackFormats`` —
+    ``frac_bits``/``total_bits`` remain as the uniform-format shorthand).
+    Everything is padded to ``Hp = max_l H_l`` with padded lanes masked to
+    zero in-kernel.  The per-step loop chains the layers, so the inter-layer
+    hidden sequence stays in VMEM — integer-equal to running
+    ``lstm_layer_fxp`` layer by layer with ``fxp_convert`` between layers.
+
+    Returns ``(qh, qc)`` stacked ``(L, B, H)`` for a uniform-``H`` stack
+    (back-compat), or per-layer lists of ``(B, H_l)`` otherwise; with
+    ``return_sequence=True``, ``(qh_seq, qh, qc)`` (``qh_seq`` is the top
+    layer's ``(B, T, H_{L-1})``).
     """
     if time_tile is not None and time_tile < 1:
         raise ValueError(f"time_tile must be >= 1, got {time_tile}")
@@ -341,31 +405,49 @@ def lstm_sequence_fxp_stack_pallas(
     if len(qws) != len(qbs) or not qws:
         raise ValueError("qws and qbs must be equal-length, non-empty lists")
     L = len(qws)
-    H = qws[0].shape[1] // 4
+    hs_l = [w.shape[1] // 4 for w in qws]
     n_in = qxs.shape[-1]
     B = qxs.shape[0]
     for l, w in enumerate(qws):
-        if w.shape[1] // 4 != H:
+        exp_in = n_in if l == 0 else hs_l[l - 1]
+        if w.shape[0] != exp_in + hs_l[l]:
             raise ValueError(
-                f"stacked kernel needs a uniform hidden size: layer {l} has "
-                f"H={w.shape[1] // 4}, layer 0 has H={H}")
-        exp_in = n_in if l == 0 else H
-        if w.shape[0] != exp_in + H:
-            raise ValueError(
-                f"layer {l}: want weights ({exp_in + H}, {4 * H}), got {w.shape}")
+                f"layer {l}: want weights ({exp_in + hs_l[l]}, {4 * hs_l[l]}), "
+                f"got {w.shape}")
 
-    in_w = max(n_in, H) if L > 1 else n_in
+    if formats is None:
+        formats = FxpFormat(frac_bits, total_bits)
+    formats = as_stack_formats(formats, L)
+
+    Hp = max(hs_l)
+    uniform_h = all(h == Hp for h in hs_l)
+    in_w = max(n_in, Hp) if L > 1 else n_in
     if n_in < in_w:
         qxs = jnp.pad(qxs, ((0, 0), (0, 0), (0, in_w - n_in)))
-    packed = [_pack_gate_major(w, b, n_in if l == 0 else H, in_w, H)
+    packed = [_pack_gate_major(w, b, n_in if l == 0 else hs_l[l - 1],
+                               in_w, hs_l[l], Hp)
               for l, (w, b) in enumerate(zip(qws, qbs))]
-    w4 = jnp.concatenate([p[0] for p in packed], axis=0)    # (L*4, F, H)
-    b4 = jnp.concatenate([p[1] for p in packed], axis=0)    # (L*4, H)
+    w4 = jnp.concatenate([p[0] for p in packed], axis=0)    # (L*4, F, Hp)
+    b4 = jnp.concatenate([p[1] for p in packed], axis=0)    # (L*4, Hp)
 
-    if qh0 is None:
-        qh0 = jnp.zeros((L, B, H), jnp.int32)
-    if qc0 is None:
-        qc0 = jnp.zeros((L, B, H), jnp.int32)
+    def to_stacked(s, name):
+        if s is None:
+            return jnp.zeros((L, B, Hp), jnp.int32)
+        if isinstance(s, (list, tuple)):
+            if len(s) != L:
+                raise ValueError(f"{name}: want {L} per-layer arrays, got {len(s)}")
+            return jnp.stack([
+                jnp.pad(jnp.asarray(si), ((0, 0), (0, Hp - hs_l[li])))
+                if hs_l[li] != Hp else jnp.asarray(si)
+                for li, si in enumerate(s)])
+        if not uniform_h:
+            raise ValueError(
+                f"{name}: a heterogeneous-H stack takes per-layer state "
+                f"lists, not a stacked array (layer widths {hs_l})")
+        return s
+
+    qh0 = to_stacked(qh0, "qh0")
+    qc0 = to_stacked(qc0, "qc0")
     if (sig_table is None) != (tanh_table is None):
         raise ValueError("pass both LUT tables or neither")
     # depth-1 dummies signal "no LUT" to the jitted call (real tables have
@@ -374,15 +456,24 @@ def lstm_sequence_fxp_stack_pallas(
         sig_table = jnp.zeros((1,), jnp.float32)
     if tanh_table is None:
         tanh_table = jnp.zeros((1,), jnp.float32)
-    return _lstm_seq_fxp_call(
+    out = _lstm_seq_fxp_call(
         qxs, w4, b4,
         jnp.asarray(sig_table, jnp.float32), jnp.asarray(tanh_table, jnp.float32),
         qh0, qc0,
-        frac_bits=frac_bits, total_bits=total_bits,
+        fmt_spec=_fmt_spec(formats), h_sizes=tuple(hs_l),
         sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
         return_sequence=return_sequence, block_b=block_b, time_tile=time_tile,
         mxu_onehot=mxu_onehot, interpret=interpret,
     )
+    if return_sequence:
+        h_seq, h, c = out
+        h_seq = h_seq[..., :hs_l[-1]]
+    else:
+        h, c = out
+    if not uniform_h:
+        h = [h[li, :, :hs_l[li]] for li in range(L)]
+        c = [c[li, :, :hs_l[li]] for li in range(L)]
+    return (h_seq, h, c) if return_sequence else (h, c)
 
 
 def lstm_sequence_fxp_pallas(
@@ -394,6 +485,7 @@ def lstm_sequence_fxp_pallas(
     sig_table: jax.Array | None = None,   # (depth,) float32 LUT, None = exact sigmoid
     tanh_table: jax.Array | None = None,  # (depth,) float32 LUT, None = exact tanh
     *,
+    formats: LayerFormats | FxpFormat | None = None,
     frac_bits: int = 8,
     total_bits: int = 16,
     sig_lo: float = -8.0,
@@ -412,7 +504,8 @@ def lstm_sequence_fxp_pallas(
     blocks i,f,g,o along the last axis); it is reshaped to gate-major
     ``(4, F, H)`` for MXU-aligned per-gate tiles — integer accumulation is
     order-independent, so this preserves bit-exactness with the stacked
-    oracle.  ``time_tile=None`` keeps the whole sequence in one VMEM block;
+    oracle.  ``formats=`` (a ``LayerFormats``) selects per-gate formats;
+    ``time_tile=None`` keeps the whole sequence in one VMEM block;
     ``time_tile=tt`` streams it through VMEM in double-buffered ``tt``-step
     chunks with ``h``/``c`` carried in scratch (see module docstring), so
     ``n_seq`` is unbounded.  Both paths are integer-equal to
@@ -427,7 +520,7 @@ def lstm_sequence_fxp_pallas(
         None if qh0 is None else qh0[None],
         None if qc0 is None else qc0[None],
         sig_table, tanh_table,
-        frac_bits=frac_bits, total_bits=total_bits,
+        formats=formats, frac_bits=frac_bits, total_bits=total_bits,
         sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
         return_sequence=return_sequence, block_b=block_b, time_tile=time_tile,
         mxu_onehot=mxu_onehot, interpret=interpret,

@@ -87,7 +87,8 @@ def lstm_sequence_fxp_ref(
         return sat((acc + half) >> frac_bits)
 
     def quant(y):
-        return sat(jnp.round(y * (1 << frac_bits)).astype(jnp.int32))
+        # fxp.quantize: round-half-up (floor(v + 0.5)), then saturate.
+        return sat(jnp.floor(y * (1 << frac_bits) + 0.5).astype(jnp.int32))
 
     def lut(q, table, bounds):
         lo, hi = bounds

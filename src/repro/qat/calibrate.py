@@ -35,6 +35,8 @@ __all__ = [
     "int_bits_needed",
     "suggest_format",
     "calibrated_format",
+    "suggest_stack_formats",
+    "calibrated_stack_formats",
 ]
 
 
@@ -146,3 +148,96 @@ def calibrated_format(params: dict[str, Any], xs: jax.Array,
             f"observed range +-{stats.overall():.3g} needs exceeds the "
             f"16-bit ALU width")
     return FxpFormat(frac_bits=frac_bits, total_bits=total)
+
+
+# ---------------------------------------------------------------------------
+# Per-gate / per-layer (mixed-precision) format selection
+# ---------------------------------------------------------------------------
+
+
+def _n_layers_from_stats(stats: CalibrationStats) -> int:
+    """Number of LSTM layers the stats were observed over (keys ``.../l<i>``)."""
+    idx = [int(k.rsplit("/l", 1)[1]) for k in stats.max_abs if "/l" in k]
+    if not idx:
+        raise KeyError("stats hold no per-layer observations ('<point>/l<i>' keys)")
+    return 1 + max(idx)
+
+
+def _data_range(stats: CalibrationStats, li: int, n_layers: int) -> float:
+    """Worst-case range over every point that lives on layer ``li``'s *data*
+    grid: its weights, bias, cell and hidden state, and its input (the model
+    input for layer 0, the previous layer's hidden state above).  The top
+    layer additionally shares its grid with the dense head (``fxp_matmul`` at
+    ``out_fmt`` quantises ``dense_w`` and lands ``dense_out`` on that grid)."""
+    keys = [f"weights/l{li}", f"bias/l{li}", f"cell/l{li}", f"hidden/l{li}"]
+    keys.append("input" if li == 0 else f"hidden/l{li - 1}")
+    if li == n_layers - 1:
+        keys += ["dense_w", "dense_out"]
+    return max(stats.max_abs[k] for k in keys)
+
+
+def suggest_stack_formats(stats: CalibrationStats, total_bits: int = 16,
+                          headroom_bits: int = 1) -> fxp_mod.StackFormats:
+    """Per-layer/per-gate generalisation of ``suggest_format``: every
+    quantisation point keeps the full ``total_bits`` width, but each point's
+    fractional split is sized from *its own* observed range instead of the
+    global worst case — gates whose pre-activations stay small keep more
+    fractional bits than the forget gate's wide-range pre-activation forces
+    globally.
+
+    Data-sharing points within a layer (input/hidden/cell/weights/bias and
+    every activation output) must agree on one grid, so they take the max
+    over that layer's data observations; each gate's pre-activation format
+    comes from ``preact_<g>/l<li>`` alone.
+    """
+    n_layers = _n_layers_from_stats(stats)
+    layers = []
+    for li in range(n_layers):
+        data = FxpFormat.for_range(_data_range(stats, li, n_layers),
+                                   total_bits, headroom_bits)
+        gates = fxp_mod.GateFormats(*(
+            FxpFormat.for_range(stats.max_abs[f"preact_{g}/l{li}"],
+                                total_bits, headroom_bits)
+            for g in GATE_ORDER))
+        layers.append(fxp_mod.LayerFormats(data=data, gates=gates))
+    return fxp_mod.StackFormats(layers=tuple(layers))
+
+
+def calibrated_stack_formats(params: dict[str, Any], xs: jax.Array,
+                             frac_bits: int, headroom_bits: int = 1,
+                             stats: CalibrationStats | None = None,
+                             ) -> fxp_mod.StackFormats:
+    """Per-layer/per-gate generalisation of ``calibrated_format`` — the
+    mixed-precision Pareto entry point.  Every point keeps the same
+    fractional width ``frac_bits`` (so quantisation *error* matches the
+    global format), but each point's **total** width is sized to its own
+    range: ``y = x + int_bits(point) + headroom``.  Points with narrow
+    ranges get narrow ALUs — per-gate widths are <= the global
+    ``calibrated_format`` width by construction, which is exactly why the
+    mixed frontier dominates (or ties) the global one at equal error.
+
+    Raises when any point's width exceeds the 16-bit ALU, like
+    ``calibrated_format``.
+    """
+    if stats is None:
+        stats = observe_traffic_model(params, xs)
+    n_layers = _n_layers_from_stats(stats)
+
+    def fit(max_abs: float, point: str) -> FxpFormat:
+        n_int = int_bits_needed(max_abs) + headroom_bits
+        total = frac_bits + n_int
+        if total > 16:
+            raise ValueError(
+                f"frac_bits={frac_bits} plus the {n_int} integer bits the "
+                f"observed range +-{max_abs:.3g} at {point!r} needs exceeds "
+                f"the 16-bit ALU width")
+        return FxpFormat(frac_bits=frac_bits, total_bits=total)
+
+    layers = []
+    for li in range(n_layers):
+        data = fit(_data_range(stats, li, n_layers), f"data/l{li}")
+        gates = fxp_mod.GateFormats(*(
+            fit(stats.max_abs[f"preact_{g}/l{li}"], f"preact_{g}/l{li}")
+            for g in GATE_ORDER))
+        layers.append(fxp_mod.LayerFormats(data=data, gates=gates))
+    return fxp_mod.StackFormats(layers=tuple(layers))

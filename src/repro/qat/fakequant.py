@@ -94,24 +94,27 @@ fake_quant.defvjp(_fake_quant_fwd, _fake_quant_bwd)
 # ---------------------------------------------------------------------------
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3,))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def fake_fxp_matmul(a: jax.Array, w: jax.Array, b: jax.Array,
-                    fmt: FxpFormat) -> jax.Array:
+                    fmt: FxpFormat, out_fmt: FxpFormat | None = None) -> jax.Array:
     """``a @ w + b`` through the integer ALU (int32 accumulate, one rounding
     right-shift, saturation) — exactly ``core.fxp.fxp_matmul`` — returned as
     on-grid floats.  ``a``: (..., F) on-grid, ``w``: (F, O), ``b``: (O,).
+    ``out_fmt`` (default ``fmt``) is the format the single rounding shift
+    lands in — the per-gate pre-activation format of the mixed-precision
+    datapath; the result is on-grid at ``out_fmt``.
     """
     q = fxp_mod.fxp_matmul(
         fxp_mod.quantize(a, fmt), fxp_mod.quantize(w, fmt), fmt,
-        bias=fxp_mod.quantize(b, fmt))
-    return fxp_mod.dequantize(q, fmt)
+        bias=fxp_mod.quantize(b, fmt), out_fmt=out_fmt)
+    return fxp_mod.dequantize(q, fmt if out_fmt is None else out_fmt)
 
 
-def _fake_matmul_fwd(a, w, b, fmt):
-    return fake_fxp_matmul(a, w, b, fmt), (a, w)
+def _fake_matmul_fwd(a, w, b, fmt, out_fmt):
+    return fake_fxp_matmul(a, w, b, fmt, out_fmt), (a, w)
 
 
-def _fake_matmul_bwd(fmt, res, g):
+def _fake_matmul_bwd(fmt, out_fmt, res, g):
     a, w = res
     da = g @ w.T
     dw = jnp.einsum("...i,...o->io", a, g)
@@ -175,22 +178,25 @@ _DFNS: dict[str, Callable[[jax.Array], jax.Array]] = {
 }
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+@partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
 def fake_lut_act(x: jax.Array, table: jax.Array, spec: LutSpec,
-                 fmt: FxpFormat) -> jax.Array:
+                 fmt: FxpFormat, out_fmt: FxpFormat | None = None) -> jax.Array:
     """The shared-LUT activation (C3) on fixed point: same index math,
     midpoint table and output re-quantisation as the deployed datapath
     (``core.lut.lut_apply_fxp``), with the smooth function's derivative as
-    the backward pass (the staircase has zero gradient a.e.)."""
-    q = lut_mod.lut_apply_fxp(fxp_mod.quantize(x, fmt), table, spec, fmt)
-    return fxp_mod.dequantize(q, fmt)
+    the backward pass (the staircase has zero gradient a.e.).  ``fmt`` is the
+    on-grid format of ``x`` (a gate's pre-activation format in the mixed
+    datapath); ``out_fmt`` (default ``fmt``) the format of the result."""
+    q = lut_mod.lut_apply_fxp(fxp_mod.quantize(x, fmt), table, spec, fmt,
+                              out_fmt=out_fmt)
+    return fxp_mod.dequantize(q, fmt if out_fmt is None else out_fmt)
 
 
-def _fake_lut_fwd(x, table, spec, fmt):
-    return fake_lut_act(x, table, spec, fmt), x
+def _fake_lut_fwd(x, table, spec, fmt, out_fmt):
+    return fake_lut_act(x, table, spec, fmt, out_fmt), x
 
 
-def _fake_lut_bwd(spec, fmt, x, g):
+def _fake_lut_bwd(spec, fmt, out_fmt, x, g):
     dx = g * _DFNS[spec.fn](x)
     return dx, None  # the table is a buffer, not a trainable parameter
 

@@ -34,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import fxp as fxp_mod
 from repro.core import lut as lut_mod
 from repro.core.fxp import FxpFormat
 from repro.core.lstm import LSTMParams
@@ -57,32 +58,46 @@ __all__ = [
 ]
 
 
-def qat_quantize_params(params: dict[str, Any], fmt: FxpFormat) -> dict[str, Any]:
+def qat_quantize_params(params: dict[str, Any], fmt) -> dict[str, Any]:
     """Fake-quantise every weight/bias (the weight quantisation point).
 
-    Returns the same pytree structure with on-grid float values; gradients
-    flow back to the float master weights through the clipped STE.
+    ``fmt``: ``FxpFormat`` or ``StackFormats`` — with per-layer formats each
+    layer's weights snap onto that layer's *data* grid and the dense head
+    onto the top layer's (mirroring ``quantize_lstm_model``).  Returns the
+    same pytree structure with on-grid float values; gradients flow back to
+    the float master weights through the clipped STE.
     """
-    def q(p: LSTMParams) -> LSTMParams:
-        return LSTMParams(w=fake_quant(p.w, fmt), b=fake_quant(p.b, fmt))
-
     lstm = params["lstm"]
+    n_layers = len(lstm) if isinstance(lstm, (list, tuple)) else 1
+    sf = fxp_mod.as_stack_formats(fmt, n_layers)
+
+    def q(p: LSTMParams, lfmt: FxpFormat) -> LSTMParams:
+        return LSTMParams(w=fake_quant(p.w, lfmt), b=fake_quant(p.b, lfmt))
+
     return {
-        "lstm": [q(p) for p in lstm] if isinstance(lstm, (list, tuple)) else q(lstm),
-        "dense": {"w": fake_quant(params["dense"]["w"], fmt),
-                  "b": fake_quant(params["dense"]["b"], fmt)},
+        "lstm": ([q(p, sf[li].data) for li, p in enumerate(lstm)]
+                 if isinstance(lstm, (list, tuple)) else q(lstm, sf[0].data)),
+        "dense": {"w": fake_quant(params["dense"]["w"], sf.out_fmt),
+                  "b": fake_quant(params["dense"]["b"], sf.out_fmt)},
     }
 
 
-def _acts(fmt: FxpFormat, luts: dict | None):
-    """(sigmoid, tanh) fake activations — LUT (C3) or full precision."""
+def _acts(fmt: FxpFormat, luts: dict | None, out_fmt: FxpFormat | None = None):
+    """(sigmoid, tanh) fake activations — LUT (C3) or full precision.
+
+    ``fmt`` is the pre-activation (input) format, ``out_fmt`` the activation
+    output format (default ``fmt``) — they differ at a mixed-precision gate.
+    """
+    out = fmt if out_fmt is None else out_fmt
     if luts is None:
-        return (lambda z: fake_act(z, "sigmoid", fmt),
-                lambda z: fake_act(z, "tanh", fmt))
+        # fake_act never quantises its input (it is already on-grid), so only
+        # the output snap format matters.
+        return (lambda z: fake_act(z, "sigmoid", out),
+                lambda z: fake_act(z, "tanh", out))
     sig_table, sig_spec = luts["sigmoid"]
     tanh_table, tanh_spec = luts["tanh"]
-    return (lambda z: fake_lut_act(z, sig_table, sig_spec, fmt),
-            lambda z: fake_lut_act(z, tanh_table, tanh_spec, fmt))
+    return (lambda z: fake_lut_act(z, sig_table, sig_spec, fmt, out),
+            lambda z: fake_lut_act(z, tanh_table, tanh_spec, fmt, out))
 
 
 def qat_lstm_cell(
@@ -90,30 +105,46 @@ def qat_lstm_cell(
     x_t: jax.Array,
     h: jax.Array,
     c: jax.Array,
-    fmt: FxpFormat,
+    fmt,
     luts: dict | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """One QAT cell step, op-for-op the schedule of ``lstm_cell_fxp``:
     stacked-gate matmul (C1), LUT activations (C3), fixed-point elementwise
     update (C2/C4).  ``qp`` must already be fake-quantised (on-grid); all
-    activations/state stay on-grid throughout."""
-    act_sig, act_tanh = _acts(fmt, luts)
+    activations/state stay on-grid throughout.
+
+    ``fmt``: ``FxpFormat`` or ``LayerFormats`` — with per-gate formats each
+    gate's column block runs through its own ``fake_fxp_matmul`` (independent
+    int32 accumulators make the split bit-exact) whose rounding shift lands
+    in that gate's format, exactly mirroring ``lstm_cell_fxp``.
+    """
+    lf = fmt if isinstance(fmt, fxp_mod.LayerFormats) else fxp_mod.LayerFormats.uniform(fmt)
+    data = lf.data
     xh = jnp.concatenate([x_t, h], axis=-1)
-    z = fake_fxp_matmul(xh, qp.w, qp.b, fmt)
-    zi, zf, zg, zo = jnp.split(z, 4, axis=-1)
-    i_t = act_sig(zi)
-    f_t = act_sig(zf)
-    g_t = act_tanh(zg)
-    o_t = act_sig(zo)
-    c_t = fake_fxp_add(fake_fxp_mul(f_t, c, fmt), fake_fxp_mul(i_t, g_t, fmt), fmt)
-    h_t = fake_fxp_mul(o_t, act_tanh(c_t), fmt)
+    if lf.is_uniform:
+        z = fake_fxp_matmul(xh, qp.w, qp.b, data)
+        zs = list(jnp.split(z, 4, axis=-1))
+        gate_acts = [_acts(data, luts)] * 4
+    else:
+        hdim = qp.hidden_size
+        zs = [fake_fxp_matmul(xh, qp.w[:, k * hdim:(k + 1) * hdim],
+                              qp.b[k * hdim:(k + 1) * hdim], data, lf.gates[k])
+              for k in range(4)]
+        gate_acts = [_acts(lf.gates[k], luts, data) for k in range(4)]
+    i_t = gate_acts[0][0](zs[0])
+    f_t = gate_acts[1][0](zs[1])
+    g_t = gate_acts[2][1](zs[2])
+    o_t = gate_acts[3][0](zs[3])
+    act_tanh_data = _acts(data, luts)[1]
+    c_t = fake_fxp_add(fake_fxp_mul(f_t, c, data), fake_fxp_mul(i_t, g_t, data), data)
+    h_t = fake_fxp_mul(o_t, act_tanh_data(c_t), data)
     return h_t, c_t
 
 
 def qat_lstm_forward(
     params,
     xs: jax.Array,
-    fmt: FxpFormat,
+    fmt,
     luts: dict | None = None,
     h0=None,
     c0=None,
@@ -126,18 +157,25 @@ def qat_lstm_forward(
     ``params``: float ``LSTMParams`` or a per-layer list (master weights —
     fake-quantised inside, so the weight-STE gradient reaches them).
     ``xs``: float ``(..., n_seq, n_in)`` — fake-quantised on entry (the input
-    quantisation point).  ``h0``/``c0``: on-grid per-layer lists or a single
-    array, as in ``lstm_forward``.  Returns the ``lstm_forward`` convention:
-    ``(h, c)`` / per-layer lists / ``(h_seq, state)``.
+    quantisation point).  ``fmt``: ``FxpFormat``, ``LayerFormats`` or
+    ``StackFormats`` — with per-layer formats, layer ``l`` runs entirely at
+    ``fmt[l]`` and the inter-layer hidden sequence passes through
+    ``fake_quant`` at layer ``l+1``'s data format, which on on-grid inputs
+    equals the integer ``fxp_convert`` requantisation exactly.  ``h0``/``c0``:
+    on-grid per-layer lists or a single array, as in ``lstm_forward``.
+    Returns the ``lstm_forward`` convention: ``(h, c)`` / per-layer lists /
+    ``(h_seq, state)``.
 
-    Quantising any output with ``fmt`` yields exactly the integers of
-    ``lstm_forward(quantised params, quantised xs, backend="fxp"|"pallas_fxp")``.
+    Quantising any output with its layer's data format yields exactly the
+    integers of ``lstm_forward(quantised params, quantised xs,
+    backend="fxp"|"pallas_fxp")``.
     """
     if return_state not in ("top", "all"):
         raise ValueError(f"return_state must be 'top' or 'all', got {return_state!r}")
     layers = list(params) if isinstance(params, (list, tuple)) else [params]
-    qls = [LSTMParams(w=fake_quant(p.w, fmt), b=fake_quant(p.b, fmt))
-           for p in layers]
+    sf = fxp_mod.as_stack_formats(fmt, len(layers))
+    qls = [LSTMParams(w=fake_quant(p.w, sf[li].data), b=fake_quant(p.b, sf[li].data))
+           for li, p in enumerate(layers)]
 
     xs_ndim = jnp.asarray(xs).ndim  # per-layer state rank: xs rank - 1 + H
 
@@ -161,10 +199,11 @@ def qat_lstm_forward(
                     f"{xs_ndim}, got shape {s.shape}")
         return s[li]
 
-    seq = fake_quant(xs, fmt)
+    seq = fake_quant(xs, sf.in_fmt)
     hs, cs = [], []
     for li, qp in enumerate(qls):
         need_seq = return_sequence or li < len(layers) - 1
+        lfmt = sf[li]
         n_h = qp.hidden_size
         batch_shape = seq.shape[:-2]
         h = state_for(li, h0)
@@ -172,9 +211,9 @@ def qat_lstm_forward(
         h = h if h is not None else jnp.zeros((*batch_shape, n_h), jnp.float32)
         c = c if c is not None else jnp.zeros((*batch_shape, n_h), jnp.float32)
 
-        def step(carry, x_t, qp=qp):
+        def step(carry, x_t, qp=qp, lfmt=lfmt):
             h, c = carry
-            h, c = qat_lstm_cell(qp, x_t, h, c, fmt, luts)
+            h, c = qat_lstm_cell(qp, x_t, h, c, lfmt, luts)
             return (h, c), (h if need_seq else None)
 
         xs_t = jnp.moveaxis(seq, -2, 0)
@@ -183,6 +222,11 @@ def qat_lstm_forward(
         cs.append(c)
         if need_seq:
             seq = jnp.moveaxis(out_seq, 0, -2)
+            if li + 1 < len(layers) and sf[li + 1].data != lfmt.data:
+                # Inter-layer requantisation: on on-grid inputs fake_quant at
+                # the next layer's data format IS fxp_convert (round-half-up
+                # shift + saturate), with the clipped STE as backward.
+                seq = fake_quant(seq, sf[li + 1].data)
 
     state = (hs, cs) if return_state == "all" else (hs[-1], cs[-1])
     if return_sequence:
@@ -190,7 +234,7 @@ def qat_lstm_forward(
     return state
 
 
-def qat_traffic_forward(params: dict[str, Any], xs: jax.Array, fmt: FxpFormat,
+def qat_traffic_forward(params: dict[str, Any], xs: jax.Array, fmt,
                         luts: dict | None = None) -> jax.Array:
     """QAT forward of the full traffic model (LSTM stack + dense head).
 
@@ -198,13 +242,16 @@ def qat_traffic_forward(params: dict[str, Any], xs: jax.Array, fmt: FxpFormat,
     ``quantized_lstm_forward(freeze(params, ...), xs)`` computes, so the two
     are *equal as floats* (both sides are on the same grid).
     """
-    h, _ = qat_lstm_forward(params["lstm"], xs, fmt, luts)
-    w = fake_quant(params["dense"]["w"], fmt)
-    b = fake_quant(params["dense"]["b"], fmt)
-    return fake_fxp_matmul(h, w, b, fmt)
+    lstm = params["lstm"]
+    n_layers = len(lstm) if isinstance(lstm, (list, tuple)) else 1
+    sf = fxp_mod.as_stack_formats(fmt, n_layers)
+    h, _ = qat_lstm_forward(lstm, xs, fmt, luts)
+    w = fake_quant(params["dense"]["w"], sf.out_fmt)
+    b = fake_quant(params["dense"]["b"], sf.out_fmt)
+    return fake_fxp_matmul(h, w, b, sf.out_fmt)
 
 
-def freeze(params: dict[str, Any], fmt: FxpFormat,
+def freeze(params: dict[str, Any], fmt,
            lut_depth: int | None) -> QuantizedLstmModel:
     """Freeze a QAT model to the deployable integer snapshot — **lossless**:
     the QAT forward already computes on the quantised grid, and
@@ -225,7 +272,7 @@ class QatTrafficModel:
     """Adapter exposing the QAT traffic model to ``make_train_step``'s
     ``model.init``/``model.loss`` protocol."""
 
-    fmt: FxpFormat
+    fmt: Any                    # FxpFormat | LayerFormats | StackFormats
     lut_depth: int | None = None
     input_size: int = 1
     hidden_size: int = 20

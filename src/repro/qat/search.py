@@ -34,13 +34,15 @@ from typing import Any, Sequence
 
 import jax.numpy as jnp
 
+from repro.core import fxp as fxp_mod
 from repro.core import timing_model as tm
 from repro.core.quantize import quantize_lstm_model
 from repro.models.lstm_model import evaluate_mse, evaluate_quantized_mse
-from repro.qat.calibrate import calibrated_format, observe_traffic_model
+from repro.qat.calibrate import (calibrated_format, calibrated_stack_formats,
+                                 observe_traffic_model)
 from repro.qat.qat_lstm import finetune_qat, freeze
 
-__all__ = ["pareto_search", "pareto_frontier", "main"]
+__all__ = ["pareto_search", "mixed_pareto_search", "pareto_frontier", "main"]
 
 
 def pareto_frontier(points: list[dict[str, Any]],
@@ -133,6 +135,112 @@ def pareto_search(
     }
 
 
+def _mixed_layer_bits(sf: fxp_mod.StackFormats) -> list[tuple[int, ...]]:
+    """Per-layer active operand widths for the energy model: the layer's data
+    width plus its four gate-ALU widths (the units that run concurrently)."""
+    return [(lf.data.total_bits, *lf.gates.total_bits) for lf in sf.layers]
+
+
+def mixed_pareto_search(
+    data,
+    params: dict[str, Any],
+    *,
+    frac_bits: Sequence[int] = (3, 4, 5, 6, 8),
+    lut_depths: Sequence[int] = (64, 256),
+    epochs: int = 2,
+    lr0: float = 1e-3,
+    batch_size: int = 64,
+    max_samples: int | None = None,
+    spec: tm.FpgaSpec = tm.SPARTAN7["XC7S15"],
+    shape=None,
+    verbose: bool = False,
+) -> dict[str, Any]:
+    """The mixed-precision extension of ``pareto_search``: every
+    ``(frac_bits, lut_depth)`` point is evaluated TWICE — once with the
+    global calibrated format (``calibrated_format``: one worst-case width
+    for every quantisation point) and once with the per-layer/per-gate
+    ``calibrated_stack_formats`` (each point's width sized to its own
+    observed range, same fractional bits).
+
+    Both variants are QAT-fine-tuned under their own exact quantiser and
+    scored through the deployment datapath; the mixed variant's energy comes
+    from ``timing_model.mixed_energy_per_inference_uj`` with the per-layer
+    ALU widths.  Since every calibrated per-point width is <= the global
+    worst-case width at the same ``frac_bits``, each mixed point's modeled
+    energy is <= its global twin's — the mixed frontier dominates (or ties)
+    the global frontier by construction; the report's combined frontier
+    makes that visible (``mode`` tags each point).
+    """
+    xs_t, ys_t = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
+    lstm = params["lstm"]
+    layers = list(lstm) if isinstance(lstm, (list, tuple)) else [lstm]
+    if shape is None:
+        shape = [tm.LstmModelShape(
+            n_seq=int(data.x_test.shape[1]), n_i=p.input_size,
+            n_h=p.hidden_size, n_f=layers[-1].hidden_size,
+            n_o=int(params["dense"]["w"].shape[1])) for p in layers]
+    shapes = list(shape) if isinstance(shape, (list, tuple)) else [shape]
+
+    float_mse = evaluate_mse(params, data.x_test, data.y_test)
+    cal_xs = data.x_train[:256]
+    stats = observe_traffic_model(params, cal_xs)
+    points = []
+    for fb in frac_bits:
+        gfmt = calibrated_format(params, cal_xs, fb, stats=stats)
+        sfmt = calibrated_stack_formats(params, cal_xs, fb, stats=stats)
+        for depth in lut_depths:
+            for mode, fmt in (("global", gfmt), ("mixed", sfmt)):
+                ptq_mse = evaluate_quantized_mse(
+                    quantize_lstm_model(params, fmt, depth), xs_t, ys_t)
+                qat_params, history = finetune_qat(
+                    params, data, fmt, depth, epochs=epochs, lr0=lr0,
+                    batch_size=batch_size, max_samples=max_samples)
+                qat_mse = evaluate_quantized_mse(freeze(qat_params, fmt, depth),
+                                                 xs_t, ys_t)
+                if mode == "global":
+                    energy = tm.parameterised_energy_per_inference_uj(
+                        shapes, spec, gfmt.total_bits, depth)
+                    widths = [gfmt.total_bits]
+                else:
+                    layer_bits = _mixed_layer_bits(sfmt)
+                    energy = tm.mixed_energy_per_inference_uj(
+                        shapes, spec, layer_bits, depth)
+                    widths = sorted({w for bits in layer_bits for w in bits})
+                point = {
+                    "mode": mode,
+                    "frac_bits": fb,
+                    "total_bits": (gfmt.total_bits if mode == "global"
+                                   else max(widths)),
+                    "widths": widths,
+                    "formats": fxp_mod.fmt_to_dict(fmt),
+                    "lut_depth": depth,
+                    "ptq_mse": ptq_mse,
+                    "qat_mse": qat_mse,
+                    "qat_improvement": ptq_mse / qat_mse if qat_mse > 0 else float("inf"),
+                    "energy_uj": energy,
+                    "qat_train_history": history,
+                }
+                points.append(point)
+                if verbose:
+                    print(f"[{mode:6s}] x={fb} LUT{depth}: "
+                          f"PTQ {ptq_mse:.5f} QAT {qat_mse:.5f} "
+                          f"energy {energy:.2f} uJ (widths {widths})")
+
+    frontier = pareto_frontier(points)
+    for i in frontier:
+        points[i]["pareto"] = True
+    s0 = shapes[0]
+    return {
+        "spec": spec.name,
+        "shape": {"n_seq": s0.n_seq, "n_i": s0.n_i, "n_h": s0.n_h,
+                  "n_f": s0.n_f, "n_o": s0.n_o, "n_layers": len(shapes)},
+        "float_mse": float_mse,
+        "epochs": epochs,
+        "points": points,
+        "pareto_indices": frontier,
+    }
+
+
 def main(argv=None) -> dict[str, Any]:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--frac-bits", type=int, nargs="+", default=[3, 4, 6, 8])
@@ -143,6 +251,9 @@ def main(argv=None) -> dict[str, Any]:
     ap.add_argument("--layers", type=int, default=1)
     ap.add_argument("--max-samples", type=int, default=None,
                     help="cap QAT fine-tuning samples/epoch (smoke tests)")
+    ap.add_argument("--mixed", action="store_true",
+                    help="sweep per-layer/per-gate mixed-precision formats "
+                         "alongside the global format at each point")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the Pareto report here")
     args = ap.parse_args(argv)
@@ -153,7 +264,8 @@ def main(argv=None) -> dict[str, Any]:
     data = make_traffic_dataset(seed=0)
     params, _ = train_traffic_model(data, epochs=args.train_epochs,
                                     num_layers=args.layers)
-    report = pareto_search(
+    search_fn = mixed_pareto_search if args.mixed else pareto_search
+    report = search_fn(
         data, params, frac_bits=args.frac_bits, lut_depths=args.lut_depths,
         epochs=args.epochs, max_samples=args.max_samples, verbose=True)
 
@@ -161,7 +273,8 @@ def main(argv=None) -> dict[str, Any]:
           f"(energy uJ -> QAT MSE):")
     for i in report["pareto_indices"]:
         p = report["points"][i]
-        print(f"  ({p['frac_bits']},{p['total_bits']}) LUT{p['lut_depth']}: "
+        tag = f"{p['mode']} " if "mode" in p else ""
+        print(f"  {tag}({p['frac_bits']},{p['total_bits']}) LUT{p['lut_depth']}: "
               f"{p['energy_uj']:.2f} uJ -> {p['qat_mse']:.5f} "
               f"(PTQ {p['ptq_mse']:.5f}, x{p['qat_improvement']:.2f})")
     if args.json:

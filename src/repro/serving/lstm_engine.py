@@ -30,7 +30,12 @@ Design (mirrors ``repro.serving.engine.ServingEngine``, the LM analogue):
   the bits of occupied lanes.
 
 Stacked models: pass a *list* of per-layer ``LSTMParams`` (uniform hidden
-size ``H``).  Per-slot state is ``(L, slots, H)`` and every engine step
+size ``H``).  ``fmt`` may be a single ``FxpFormat`` or a per-layer/per-gate
+``StackFormats`` (mixed precision): the kernel rescales between formats
+inside the fused stack, the engine validates submitted inputs against the
+*input* format (``layers[0].data``), and checkpoints store the full nested
+format (``fmt_to_dict``) so restore refuses a mismatched datapath.
+Per-slot state is ``(L, slots, H)`` and every engine step
 carries ALL layers' ``(h, c)`` via ``lstm_forward(..., return_state="all")``,
 so the chunked continuation of the whole stack is exact — on
 ``backend="pallas_fxp"`` the stack additionally runs as one fused kernel
@@ -84,11 +89,20 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
-from repro.core.fxp import FxpFormat
+from repro.core import fxp as fxp_mod
+from repro.core.fxp import FxpFormat, StackFormats
 from repro.core.lstm import LSTMParams, lstm_forward
 from repro.parallel.sharding import fleet_slot_specs, shard_map
 
-__all__ = ["SensorStream", "SensorFleetEngine"]
+__all__ = ["SensorStream", "SensorFleetEngine", "SlotShardingError"]
+
+
+class SlotShardingError(ValueError):
+    """The engine's slot geometry cannot be block-partitioned onto the mesh:
+    ``batch_slots`` is not a multiple of the data-axis size, so some device
+    would own a ragged slot block and the slot->device placement invariant
+    (``slot_to_shard``) would stop being a pure function of the slot index.
+    Raised at construction — a ragged fleet must never start serving."""
 
 
 @dataclasses.dataclass
@@ -124,7 +138,7 @@ class SensorFleetEngine:
     def __init__(
         self,
         qparams,
-        fmt: FxpFormat,
+        fmt: FxpFormat | StackFormats,
         luts: dict | None = None,
         *,
         batch_slots: int = 8,
@@ -160,7 +174,7 @@ class SensorFleetEngine:
                     "pass data_axis= to name the slot-sharding axis")
             self.n_shards = int(mesh.shape[data_axis])
             if batch_slots % self.n_shards != 0:
-                raise ValueError(
+                raise SlotShardingError(
                     f"batch_slots={batch_slots} must be a multiple of the "
                     f"{data_axis!r} axis size {self.n_shards} so every device "
                     "owns the same contiguous slot block")
@@ -169,6 +183,10 @@ class SensorFleetEngine:
         self.mesh = mesh
         self.data_axis = data_axis
         self.fmt = fmt
+        # normalised per-layer view: validates a StackFormats' length against
+        # the params and gives submit the format the INPUT arrives in
+        self._stack_fmt = fxp_mod.as_stack_formats(fmt, len(layers))
+        self.in_fmt = self._stack_fmt.in_fmt
         self.luts = luts
         self.backend = backend
         self.time_tile = time_tile
@@ -295,14 +313,15 @@ class SensorFleetEngine:
                              f"int32 inputs, got {qxs.shape}")
         if len(qxs) == 0:
             raise ValueError(f"stream {stream.rid}: empty stream")
-        if qxs.size and (qxs.min() < self.fmt.qmin or qxs.max() > self.fmt.qmax):
+        in_fmt = self.in_fmt
+        if qxs.size and (qxs.min() < in_fmt.qmin or qxs.max() > in_fmt.qmax):
             # int32 would happily wrap what the y-bit datapath saturates;
             # out-of-range codes mean the producer quantised to a DIFFERENT
             # format, so the outputs would be silently wrong — reject
             raise ValueError(
                 f"stream {stream.rid}: inputs exceed the "
-                f"({self.fmt.frac_bits},{self.fmt.total_bits}) fixed-point "
-                f"range [{self.fmt.qmin}, {self.fmt.qmax}]")
+                f"({in_fmt.frac_bits},{in_fmt.total_bits}) fixed-point "
+                f"range [{in_fmt.qmin}, {in_fmt.qmax}]")
         qxs = qxs.astype(np.int32)
         h0 = self._state_init(stream.rid, stream.qh0, "qh0")
         c0 = self._state_init(stream.rid, stream.qc0, "qc0")
@@ -457,7 +476,7 @@ class SensorFleetEngine:
                 "n_h": self.n_h, "batch_slots": self.slots,
                 "chunk": self.chunk, "time_tile": self.time_tile,
                 "backend": self.backend,
-                "fmt": dataclasses.asdict(self.fmt),
+                "fmt": fxp_mod.fmt_to_dict(self.fmt),
                 "params_sha256": self.params_checksum(),
             },
             "slot_table": table,
@@ -493,7 +512,8 @@ class SensorFleetEngine:
         return step
 
     @classmethod
-    def restore(cls, manager, qparams, fmt: FxpFormat, luts: dict | None = None,
+    def restore(cls, manager, qparams, fmt: FxpFormat | StackFormats,
+                luts: dict | None = None,
                 *, step: int | None = None, mesh=None,
                 shard_slots: bool | None = None, data_axis: str = "data",
                 backend: str | None = None, chunk: int | None = None,
@@ -525,9 +545,9 @@ class SensorFleetEngine:
                 f"step_{step} is not a SensorFleetEngine checkpoint "
                 f"(kind={extra.get('kind')!r})")
         cfg = extra["engine"]
-        if dataclasses.asdict(fmt) != cfg["fmt"]:
+        if fxp_mod.fmt_to_dict(fmt) != cfg["fmt"]:
             raise ValueError(
-                f"restore fmt {dataclasses.asdict(fmt)} != checkpointed "
+                f"restore fmt {fxp_mod.fmt_to_dict(fmt)} != checkpointed "
                 f"{cfg['fmt']} — the integer codes would mean different values")
         eng = cls(qparams, fmt, luts,
                   batch_slots=cfg["batch_slots"],

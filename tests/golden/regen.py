@@ -28,8 +28,9 @@ import pathlib
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fxp import FxpFormat
-from repro.core.lstm import LSTMParams, lstm_layer_fxp
+from repro.core.fxp import (FxpFormat, GateFormats, LayerFormats,
+                            StackFormats, fmt_to_dict)
+from repro.core.lstm import LSTMParams, lstm_forward, lstm_layer_fxp
 from repro.core.lut import make_lut_pair
 
 SEED = 20260730
@@ -41,6 +42,21 @@ OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_golden.json"
 STACK_OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_stack2_golden.json"
 QAT_OUT_PATH = pathlib.Path(__file__).parent / "lstm_qat_frozen_golden.json"
 FLEET_OUT_PATH = pathlib.Path(__file__).parent / "lstm_fleet_sharded_golden.json"
+MIXED_OUT_PATH = pathlib.Path(__file__).parent / "lstm_mixed_golden.json"
+
+# mixed-precision fixture knobs: a hetero-H stack section (kernel padding +
+# lane masking under per-layer/per-gate formats) and a uniform-H fleet
+# section (the engine carries (L, slots, H) state, so it needs uniform H)
+MIXED_H0, MIXED_H1 = 10, 6
+MIXED_STACK_FMT = StackFormats((
+    LayerFormats(FxpFormat(8, 16),
+                 GateFormats(FxpFormat(7, 14), FxpFormat(8, 16),
+                             FxpFormat(6, 12), FxpFormat(8, 15))),
+    LayerFormats(FxpFormat(6, 12),
+                 GateFormats(FxpFormat(6, 12), FxpFormat(5, 11),
+                             FxpFormat(6, 13), FxpFormat(6, 12))),
+))
+MIXED_FLEET_SLOTS, MIXED_FLEET_CHUNK = 3, 8
 
 # sharded-fleet fixture knobs: more streams than slots => slot churn
 FLEET_SLOTS, FLEET_CHUNK, FLEET_STREAMS = 8, 8, 10
@@ -164,6 +180,114 @@ def regen_fleet_sharded() -> None:
     print(f"wrote {FLEET_OUT_PATH} ({FLEET_OUT_PATH.stat().st_size} bytes)")
 
 
+def _mixed_params(rng, h_sizes):
+    """Integer LSTM params drawn inside each layer's own data-format range."""
+    qws, qbs = [], []
+    fan = N_IN
+    for li, h in enumerate(h_sizes):
+        frac = MIXED_STACK_FMT[li].data.frac_bits
+        qws.append(rng.integers(-1 << frac, 1 << frac,
+                                (fan + h, 4 * h), dtype=np.int32))
+        qbs.append(rng.integers(-1 << (frac - 1), 1 << (frac - 1),
+                                (4 * h,), dtype=np.int32))
+        fan = h
+    return qws, qbs
+
+
+def regen_mixed() -> None:
+    """Mixed-precision fixture (per-layer/per-gate formats), two sections:
+
+    * ``stack`` — a hetero-H 2-layer model (H0=10, H1=6): the fused stack
+      kernel must pad/mask and rescale between formats, integer-equal to the
+      layer-by-layer simulator that generates these numbers.
+    * ``fleet`` — a uniform-H 2-layer ``SensorFleetEngine`` slot-churn
+      schedule under the same format container: mixed-precision *serving*,
+      bit-identical to solo runs.
+
+    The simulator (``lstm_forward(backend="fxp")``) generates the integers;
+    ``test_golden.py`` replays them through the simulator, the fused stack
+    kernel AND the engine.
+    """
+    from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
+
+    sf = MIXED_STACK_FMT
+    luts = make_lut_pair(LUT_DEPTH)
+    rng = np.random.default_rng(SEED + 3)
+
+    # --- hetero-H stack section ---------------------------------------------
+    in_fmt = sf.in_fmt
+    qxs = rng.integers(-2 << in_fmt.frac_bits, 2 << in_fmt.frac_bits,
+                       (B, T, N_IN), dtype=np.int32)
+    qws, qbs = _mixed_params(rng, (MIXED_H0, MIXED_H1))
+    qps = [LSTMParams(w=jnp.asarray(w), b=jnp.asarray(b))
+           for w, b in zip(qws, qbs)]
+    h_seq, (hs, cs) = lstm_forward(qps, jnp.asarray(qxs), backend="fxp",
+                                   fmt=sf, luts=luts, return_sequence=True,
+                                   return_state="all")
+    stack = {
+        "h_sizes": [MIXED_H0, MIXED_H1],
+        "qxs": qxs.tolist(),
+        "qw": [w.tolist() for w in qws],
+        "qb": [b.tolist() for b in qbs],
+        "outputs": {
+            "h_seq_top": np.asarray(h_seq).tolist(),
+            "qh": [np.asarray(h).tolist() for h in hs],
+            "qc": [np.asarray(c).tolist() for c in cs],
+        },
+    }
+
+    # --- uniform-H fleet section --------------------------------------------
+    fqws, fqbs = _mixed_params(rng, (MIXED_H0, MIXED_H0))
+    fqps = [LSTMParams(w=jnp.asarray(w), b=jnp.asarray(b))
+            for w, b in zip(fqws, fqbs)]
+    streams = []
+    for rid in range(5):
+        n = int(rng.integers(3, 19))
+        s_qxs = rng.integers(-2 << in_fmt.frac_bits, 2 << in_fmt.frac_bits,
+                             (n, N_IN), dtype=np.int32)
+        qh0 = qc0 = None
+        if rid == 2:    # nonzero state at the NARROW layer-1 format too
+            qh0 = rng.integers(-200, 200, (2, MIXED_H0), dtype=np.int32)
+            qc0 = rng.integers(-200, 200, (2, MIXED_H0), dtype=np.int32)
+        streams.append(SensorStream(rid=rid, qxs=s_qxs, qh0=qh0, qc0=qc0))
+    eng = SensorFleetEngine(fqps, sf, luts, batch_slots=MIXED_FLEET_SLOTS,
+                            chunk=MIXED_FLEET_CHUNK, backend="fxp")
+    eng.run(streams)
+    assert all(s.done for s in streams)
+    fleet = {
+        "batch_slots": MIXED_FLEET_SLOTS, "chunk": MIXED_FLEET_CHUNK,
+        "qw": [w.tolist() for w in fqws],
+        "qb": [b.tolist() for b in fqbs],
+        "streams": [{
+            "rid": s.rid,
+            "qxs": np.asarray(s.qxs).tolist(),
+            "qh0": None if s.qh0 is None else np.asarray(s.qh0).tolist(),
+            "qc0": None if s.qc0 is None else np.asarray(s.qc0).tolist(),
+        } for s in streams],
+        "outputs": [{
+            "h_seq": np.asarray(s.h_seq).tolist(),
+            "qh": np.asarray(s.qh).tolist(),
+            "qc": np.asarray(s.qc).tolist(),
+        } for s in streams],
+    }
+
+    golden = {
+        "description": "integer-exact golden for the per-layer/per-gate "
+                       "mixed-precision fxp datapath: hetero-H fused stack "
+                       "+ mixed-precision fleet serving; regenerate with "
+                       "tests/golden/regen.py (see README.md)",
+        "seed": SEED + 3,
+        "fmt": fmt_to_dict(sf),
+        "lut": {"depth": LUT_DEPTH,
+                "sigmoid": _lut_entry(luts, "sigmoid"),
+                "tanh": _lut_entry(luts, "tanh")},
+        "stack": stack,
+        "fleet": fleet,
+    }
+    MIXED_OUT_PATH.write_text(json.dumps(golden, indent=1) + "\n")
+    print(f"wrote {MIXED_OUT_PATH} ({MIXED_OUT_PATH.stat().st_size} bytes)")
+
+
 def regen_qat() -> None:
     """QAT-frozen fixture: train the paper model briefly, fine-tune it under
     the quantiser, freeze, and pin the frozen integers AND their outputs on
@@ -258,4 +382,5 @@ if __name__ == "__main__":
     main()
     regen_stack2()
     regen_fleet_sharded()
+    regen_mixed()
     regen_qat()

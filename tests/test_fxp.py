@@ -5,8 +5,12 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.fxp import (FxpFormat, dequantize, fxp_add, fxp_matmul,
-                            fxp_mul, quantize, saturate)
+from repro.core import fxp as fxp_mod
+from repro.core.fxp import (FxpFormat, GateFormats, LayerFormats, StackFormats,
+                            as_stack_formats, check_accumulator_envelope,
+                            dequantize, fmt_from_dict, fmt_to_dict, fxp_add,
+                            fxp_convert, fxp_matmul, fxp_mul, int_bits_for,
+                            quantize, saturate)
 
 FMT = FxpFormat(8, 16)
 
@@ -81,3 +85,152 @@ def test_saturation_behaviour():
     # adding at the rail saturates, does not wrap
     r = fxp_add(jnp.asarray(FMT.qmax), jnp.asarray(FMT.qmax), FMT)
     assert int(r) == FMT.qmax
+
+
+# ---------------------------------------------------------------------------
+# Rounding-mode consistency: round-half-up EVERYWHERE (quantiser == ALU shift)
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_ties_round_half_up():
+    """Ties at exactly +-0.5 LSB go toward +inf in the quantiser — the same
+    ``floor(v + 0.5)`` the ALU's ``(acc + half) >> x`` shift implements, NOT
+    numpy's ties-to-even."""
+    lsb = FMT.scale
+    ties = np.asarray([0.5, 1.5, 2.5, -0.5, -1.5, -2.5], np.float32) * lsb
+    got = np.asarray(quantize(ties, FMT))
+    # half-up: 0.5->1, 1.5->2, 2.5->3 (ties-to-even would give 0, 2, 2)
+    np.testing.assert_array_equal(got, [1, 2, 3, 0, -1, -2])
+
+
+def test_alu_shift_matches_quantizer_at_ties():
+    """The ALU rescale of a tie-producing accumulator lands on the same
+    integer the float quantiser picks for the same real value."""
+    x = FMT.frac_bits
+    half = 1 << (x - 1)
+    for k in (-3, -2, -1, 0, 1, 2, 3):
+        acc = jnp.asarray((k << x) + half, jnp.int32)   # (k + 0.5) LSBs
+        via_alu = int(fxp_mod._rescale(acc, FMT))
+        via_quant = int(quantize(np.float32((k + 0.5) * FMT.scale), FMT))
+        assert via_alu == via_quant == k + 1, (k, via_alu, via_quant)
+
+
+# ---------------------------------------------------------------------------
+# int32 accumulator envelope: the rounding bias must not wrap
+# ---------------------------------------------------------------------------
+
+
+def test_matmul_rounding_bias_does_not_wrap_int32():
+    """acc = 2**31 - 2 is inside int32, but the naive ``acc + half`` of the
+    rounding shift would wrap to a large NEGATIVE value and the 'saturating'
+    clip would emit qmin.  The guarded shift must emit qmax instead."""
+    qa = jnp.asarray([[32767, 32767, 4]], jnp.int32)
+    qb = jnp.asarray([[32767], [32767], [32767]], jnp.int32)
+    # raw accumulator: 2*32767^2 + 4*32767 = 2147483646 = 2**31 - 2
+    got = int(fxp_matmul(qa, qb, FMT)[0, 0])
+    assert got == FMT.qmax
+    # the mirrored negative accumulator stays on the negative rail
+    got_neg = int(fxp_matmul(-qa, qb, FMT)[0, 0])
+    assert got_neg == FMT.qmin
+
+
+def test_check_accumulator_envelope():
+    qa = np.asarray([[32767, 32767, 4]], np.int32)
+    qb = np.asarray([[32767], [32767], [32767]], np.int32)
+    with pytest.raises(OverflowError):
+        check_accumulator_envelope(qa, qb, FMT)
+    ok = np.asarray([[100, -50, 7]], np.int32)
+    bound = check_accumulator_envelope(ok, qb, FMT)
+    assert bound <= 2 ** 31 - 1 - (1 << (FMT.frac_bits - 1))
+
+
+# ---------------------------------------------------------------------------
+# Format conversion (the inter-layer rescale of the mixed-precision stack)
+# ---------------------------------------------------------------------------
+
+
+def test_fxp_convert_identity_and_equivalence():
+    src, dst = FxpFormat(8, 16), FxpFormat(6, 12)
+    q = jnp.asarray([-300, -1, 0, 1, 37, 1234], jnp.int32)
+    assert fxp_convert(q, src, src) is q          # equal formats: no-op
+    got = np.asarray(fxp_convert(q, src, dst))
+    # equals re-quantising the dequantised value at dst (on-grid floats exact)
+    want = np.asarray(quantize(dequantize(q, src), dst))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_fxp_convert_widening_round_trip():
+    """src -> wider-frac dst -> src is the identity (left shift is exact and
+    the way back divides out the same power of two)."""
+    src, dst = FxpFormat(6, 12), FxpFormat(9, 16)
+    q = jnp.asarray([-2048, -7, 0, 13, 2047], jnp.int32)
+    back = fxp_convert(fxp_convert(q, src, dst), dst, src)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(q))
+
+
+# ---------------------------------------------------------------------------
+# Mixed-precision format containers + serialisation
+# ---------------------------------------------------------------------------
+
+
+def test_format_containers_uniform_and_access():
+    d = FxpFormat(8, 16)
+    lf = LayerFormats.uniform(d)
+    assert lf.is_uniform and list(lf.gates) == [d, d, d, d]
+    mixed = LayerFormats(d, GateFormats(d, FxpFormat(7, 14), d, d))
+    assert not mixed.is_uniform
+    assert mixed.gates["f"] == FxpFormat(7, 14) == mixed.gates[1]
+    sf = StackFormats.uniform(d, 3)
+    assert len(sf) == 3 and sf.is_uniform
+    assert sf.in_fmt == sf.out_fmt == d
+    with pytest.raises(ValueError):
+        StackFormats(())
+
+
+def test_as_stack_formats_normalisation():
+    d = FxpFormat(8, 16)
+    assert as_stack_formats(d, 2) == StackFormats.uniform(d, 2)
+    lf = LayerFormats.uniform(FxpFormat(6, 12))
+    assert as_stack_formats(lf, 2) == StackFormats((lf, lf))
+    sf = StackFormats.uniform(d, 2)
+    assert as_stack_formats(sf, 2) is sf
+    with pytest.raises(ValueError):
+        as_stack_formats(sf, 3)          # wrong depth
+    with pytest.raises(TypeError):
+        as_stack_formats((8, 16), 1)     # not a format
+
+
+def test_fmt_dict_json_round_trip():
+    import json
+
+    d = FxpFormat(8, 16)
+    sf = StackFormats((
+        LayerFormats(d, GateFormats(FxpFormat(7, 14), d, FxpFormat(6, 12), d)),
+        LayerFormats.uniform(FxpFormat(6, 12)),
+    ))
+    for fmt in (d, sf.layers[0], sf):
+        blob = json.loads(json.dumps(fmt_to_dict(fmt)))
+        assert fmt_from_dict(blob) == fmt
+    # FxpFormat keeps the flat legacy layout (checkpoint back-compat)
+    assert fmt_to_dict(d) == {"frac_bits": 8, "total_bits": 16}
+
+
+# ---------------------------------------------------------------------------
+# for_range at power-of-two boundaries (calibration round-trip contract)
+# ---------------------------------------------------------------------------
+
+
+def test_for_range_power_of_two_boundaries():
+    # exactly 2**(n-1) needs n integer bits and saturates by ONE LSB —
+    # the documented boundary: qmax = 2**(n-1) - lsb < max_abs
+    for n_int, max_abs in ((1, 1.0), (2, 2.0), (3, 4.0)):
+        assert int_bits_for(max_abs) == n_int
+        fmt = FxpFormat.for_range(max_abs, 16)
+        assert fmt.total_bits - fmt.frac_bits == n_int
+        assert fmt.max_value == max_abs - fmt.scale      # one-LSB saturation
+        assert int(quantize(np.float32(max_abs), fmt)) == fmt.qmax
+    # a hair above the boundary promotes one more integer bit
+    assert int_bits_for(2.0 + 1e-6) == 3
+    # headroom shifts the split, not the coverage rule
+    f = FxpFormat.for_range(1.5, 16, headroom_bits=1)
+    assert f.total_bits - f.frac_bits == int_bits_for(1.5) + 1

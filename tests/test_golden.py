@@ -25,11 +25,15 @@ QAT_PATH = (pathlib.Path(__file__).parent / "golden"
             / "lstm_qat_frozen_golden.json")
 FLEET_PATH = (pathlib.Path(__file__).parent / "golden"
               / "lstm_fleet_sharded_golden.json")
+MIXED_PATH = (pathlib.Path(__file__).parent / "golden"
+              / "lstm_mixed_golden.json")
 
 
 def _load(path):
+    from repro.core.fxp import fmt_from_dict
+
     g = json.loads(path.read_text())
-    g["_fmt"] = FxpFormat(**g["fmt"])
+    g["_fmt"] = fmt_from_dict(g["fmt"])
     for name in ("sigmoid", "tanh"):
         g["lut"][name]["table_f32"] = np.asarray(
             g["lut"][name]["table"], np.float32)
@@ -54,6 +58,11 @@ def golden_qat():
 @pytest.fixture(scope="module")
 def golden_fleet():
     return _load(FLEET_PATH)
+
+
+@pytest.fixture(scope="module")
+def golden_mixed():
+    return _load(MIXED_PATH)
 
 
 def _stored_luts(g):
@@ -238,3 +247,86 @@ def test_stack_kernel_matches_golden_integers(golden_stack, time_tile):
                                   np.asarray(out["h_seq_top"]))
     np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
     np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"]))
+
+
+def test_mixed_stack_simulator_matches_golden_integers(golden_mixed):
+    """The layer-by-layer simulator under per-layer/per-gate formats (incl.
+    the inter-layer fxp_convert) reproduces the committed hetero-H integers."""
+    from repro.core.lstm import lstm_forward
+
+    g = golden_mixed
+    sf = g["_fmt"]
+    st = g["stack"]
+    qps = [LSTMParams(w=jnp.asarray(w, jnp.int32), b=jnp.asarray(b, jnp.int32))
+           for w, b in zip(st["qw"], st["qb"])]
+    h_seq, (hs, cs) = lstm_forward(
+        qps, jnp.asarray(st["qxs"], jnp.int32), backend="fxp", fmt=sf,
+        luts=_stored_luts(g), return_sequence=True, return_state="all")
+    out = st["outputs"]
+    np.testing.assert_array_equal(np.asarray(h_seq),
+                                  np.asarray(out["h_seq_top"]))
+    for li, (h, c) in enumerate(zip(hs, cs)):
+        np.testing.assert_array_equal(np.asarray(h), np.asarray(out["qh"][li]),
+                                      err_msg=f"layer {li} qh")
+        np.testing.assert_array_equal(np.asarray(c), np.asarray(out["qc"][li]),
+                                      err_msg=f"layer {li} qc")
+
+
+@pytest.mark.parametrize("time_tile", [None, 5])
+def test_mixed_stack_kernel_matches_golden_integers(golden_mixed, time_tile):
+    """The FUSED hetero-H mixed-precision kernel (padded lanes masked, every
+    per-gate/per-layer rescale in-kernel) reproduces the committed integers —
+    there is no layer-by-layer fallback left to hide behind."""
+    g = golden_mixed
+    sf = g["_fmt"]
+    st = g["stack"]
+    luts = _stored_luts(g)
+    (sig_t, sig_s), (tanh_t, tanh_s) = luts["sigmoid"], luts["tanh"]
+    h_seq, hs, cs = lstm_sequence_fxp_stack_pallas(
+        jnp.asarray(st["qxs"], jnp.int32),
+        [jnp.asarray(w, jnp.int32) for w in st["qw"]],
+        [jnp.asarray(b, jnp.int32) for b in st["qb"]],
+        None, None, sig_t, tanh_t, formats=sf,
+        sig_lo=sig_s.bounds[0], sig_hi=sig_s.bounds[1],
+        tanh_lo=tanh_s.bounds[0], tanh_hi=tanh_s.bounds[1],
+        return_sequence=True, block_b=2, time_tile=time_tile, interpret=True)
+    out = st["outputs"]
+    np.testing.assert_array_equal(np.asarray(h_seq),
+                                  np.asarray(out["h_seq_top"]))
+    for li in range(len(st["h_sizes"])):   # hetero H: per-layer lists
+        np.testing.assert_array_equal(np.asarray(hs[li]),
+                                      np.asarray(out["qh"][li]),
+                                      err_msg=f"layer {li} qh")
+        np.testing.assert_array_equal(np.asarray(cs[li]),
+                                      np.asarray(out["qc"][li]),
+                                      err_msg=f"layer {li} qc")
+
+
+@pytest.mark.parametrize("backend", ["fxp", "pallas_fxp"])
+def test_mixed_fleet_engine_matches_golden_integers(golden_mixed, backend):
+    """Mixed-precision SERVING: the committed slot-churn schedule replayed
+    through ``SensorFleetEngine`` under the per-layer/per-gate formats
+    reproduces every stream's integers on both fxp backends."""
+    from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
+
+    g = golden_mixed
+    sf = g["_fmt"]
+    fl = g["fleet"]
+    qps = [LSTMParams(w=jnp.asarray(w, jnp.int32), b=jnp.asarray(b, jnp.int32))
+           for w, b in zip(fl["qw"], fl["qb"])]
+    streams = [SensorStream(
+        rid=s["rid"], qxs=np.asarray(s["qxs"], np.int32),
+        qh0=None if s["qh0"] is None else np.asarray(s["qh0"], np.int32),
+        qc0=None if s["qc0"] is None else np.asarray(s["qc0"], np.int32),
+    ) for s in fl["streams"]]
+    eng = SensorFleetEngine(
+        qps, sf, _stored_luts(g), batch_slots=fl["batch_slots"],
+        chunk=fl["chunk"], backend=backend,
+        interpret=True if backend == "pallas_fxp" else None)
+    eng.run(streams)
+    assert all(s.done for s in streams)
+    for s, out in zip(streams, fl["outputs"]):
+        np.testing.assert_array_equal(s.h_seq, np.asarray(out["h_seq"]),
+                                      err_msg=f"mixed fleet stream {s.rid}")
+        np.testing.assert_array_equal(s.qh, np.asarray(out["qh"]))
+        np.testing.assert_array_equal(s.qc, np.asarray(out["qc"]))

@@ -204,3 +204,141 @@ def test_per_layer_initial_state_list_unbatched_input():
     assert h.shape == (N_H,)
     np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref), atol=1e-5)
     np.testing.assert_allclose(np.asarray(c), np.asarray(c_ref), atol=1e-5)
+
+# ---------------------------------------------------------------------------
+# Mixed precision + heterogeneous hidden sizes through the FUSED stack kernel
+# (the tentpole contract: no layer-by-layer fallback, integer-equal to the
+# per-layer lstm_layer_fxp + fxp_convert oracle)
+# ---------------------------------------------------------------------------
+
+
+def _mixed_formats():
+    from repro.core.fxp import GateFormats, LayerFormats, StackFormats
+
+    return StackFormats((
+        LayerFormats(FxpFormat(8, 16),
+                     GateFormats(FxpFormat(7, 14), FxpFormat(8, 16),
+                                 FxpFormat(6, 12), FxpFormat(8, 15))),
+        LayerFormats(FxpFormat(6, 12),
+                     GateFormats(FxpFormat(6, 12), FxpFormat(5, 11),
+                                 FxpFormat(6, 13), FxpFormat(6, 12))),
+    ))
+
+
+def _mixed_stack_setup(h_sizes, sf, key=5, t=9, b=3, n_in=4):
+    rng = np.random.default_rng(key)
+    qps = []
+    fan = n_in
+    for li, h in enumerate(h_sizes):
+        frac = sf[li].data.frac_bits
+        qps.append(LSTMParams(
+            w=jnp.asarray(rng.integers(-1 << frac, 1 << frac,
+                                       (fan + h, 4 * h)), jnp.int32),
+            b=jnp.asarray(rng.integers(-1 << (frac - 1), 1 << (frac - 1),
+                                       (4 * h,)), jnp.int32)))
+        fan = h
+    in_frac = sf.in_fmt.frac_bits
+    qxs = jnp.asarray(rng.integers(-2 << in_frac, 2 << in_frac,
+                                   (b, t, n_in)), jnp.int32)
+    return qps, qxs
+
+
+def _stack_oracle(qps, qxs, sf, luts):
+    """Layer-by-layer lstm_layer_fxp at each layer's own formats, chained
+    with the inter-layer fxp_convert — the ground truth the fused kernel
+    must reproduce integer for integer."""
+    from repro.core import fxp as fxp_mod
+    from repro.core.lstm import lstm_layer_fxp
+
+    seq, hs, cs = qxs, [], []
+    for li, qp in enumerate(qps):
+        seq, (h, c) = lstm_layer_fxp(qp, seq, sf[li], luts,
+                                     return_sequence=True)
+        hs.append(h)
+        cs.append(c)
+        if li + 1 < len(qps):
+            seq = fxp_mod.fxp_convert(seq, sf[li].data, sf[li + 1].data)
+    return seq, hs, cs
+
+
+@pytest.mark.parametrize("h_sizes", [(10, 10), (10, 6), (6, 10)])
+@pytest.mark.parametrize("time_tile", [None, 3])
+def test_mixed_stack_kernel_bit_exact(h_sizes, time_tile):
+    """Fused stack kernel == per-layer oracle for uniform and heterogeneous
+    hidden sizes under per-layer/per-gate formats (padded lanes masked)."""
+    sf = _mixed_formats()
+    luts = make_lut_pair(64)
+    qps, qxs = _mixed_stack_setup(h_sizes, sf)
+    seq_ref, hs_ref, cs_ref = _stack_oracle(qps, qxs, sf, luts)
+    seq, (hs, cs) = lstm_forward(qps, qxs, backend="pallas_fxp", fmt=sf,
+                                 luts=luts, return_sequence=True,
+                                 return_state="all", block_b=3,
+                                 time_tile=time_tile, interpret=True)
+    np.testing.assert_array_equal(np.asarray(seq), np.asarray(seq_ref))
+    for li in range(len(h_sizes)):
+        np.testing.assert_array_equal(np.asarray(hs[li]),
+                                      np.asarray(hs_ref[li]),
+                                      err_msg=f"layer {li} h ({h_sizes})")
+        np.testing.assert_array_equal(np.asarray(cs[li]),
+                                      np.asarray(cs_ref[li]),
+                                      err_msg=f"layer {li} c ({h_sizes})")
+
+
+def test_mixed_stack_kernel_nonzero_state_and_no_luts():
+    """Hetero-H + mixed formats with nonzero per-layer initial state, and
+    the luts=None (full-precision activations) path."""
+    sf = _mixed_formats()
+    h_sizes = (10, 6)
+    rng = np.random.default_rng(9)
+    qps, qxs = _mixed_stack_setup(h_sizes, sf, key=9)
+    h0 = [jnp.asarray(rng.integers(-200, 200, (3, h)), jnp.int32)
+          for h in h_sizes]
+    c0 = [jnp.asarray(rng.integers(-200, 200, (3, h)), jnp.int32)
+          for h in h_sizes]
+    for luts in (make_lut_pair(64), None):
+        seq_ref, hs_ref, cs_ref = qxs, [], []
+        from repro.core import fxp as fxp_mod
+        from repro.core.lstm import lstm_layer_fxp
+        seq_ref = qxs
+        for li, qp in enumerate(qps):
+            seq_ref, (h, c) = lstm_layer_fxp(
+                qp, seq_ref, sf[li], luts, qh0=h0[li], qc0=c0[li],
+                return_sequence=True)
+            hs_ref.append(h)
+            cs_ref.append(c)
+            if li + 1 < len(qps):
+                seq_ref = fxp_mod.fxp_convert(seq_ref, sf[li].data,
+                                              sf[li + 1].data)
+        seq, (hs, cs) = lstm_forward(qps, qxs, backend="pallas_fxp", fmt=sf,
+                                     luts=luts, h0=h0, c0=c0,
+                                     return_sequence=True, return_state="all",
+                                     block_b=3, interpret=True)
+        np.testing.assert_array_equal(np.asarray(seq), np.asarray(seq_ref))
+        for li in range(len(h_sizes)):
+            np.testing.assert_array_equal(np.asarray(hs[li]),
+                                          np.asarray(hs_ref[li]))
+            np.testing.assert_array_equal(np.asarray(cs[li]),
+                                          np.asarray(cs_ref[li]))
+
+
+def test_hetero_h_stack_no_fallback_in_fxp_and_pallas():
+    """A hetero-H stack under ONE global format: both fxp backends agree
+    (the dispatcher routes multi-layer pallas_fxp through the fused stack
+    kernel even when hidden sizes differ — the old fallback is gone)."""
+    fmt = FxpFormat(8, 16)
+    from repro.core.fxp import StackFormats
+    sf = StackFormats.uniform(fmt, 2)
+    qps, qxs = _mixed_stack_setup((12, 5), sf, key=13)
+    luts = make_lut_pair(64)
+    seq_a, (hs_a, cs_a) = lstm_forward(qps, qxs, backend="fxp", fmt=fmt,
+                                       luts=luts, return_sequence=True,
+                                       return_state="all")
+    seq_b, (hs_b, cs_b) = lstm_forward(qps, qxs, backend="pallas_fxp",
+                                       fmt=fmt, luts=luts,
+                                       return_sequence=True,
+                                       return_state="all", block_b=3,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(seq_a), np.asarray(seq_b))
+    for li in range(2):
+        np.testing.assert_array_equal(np.asarray(hs_a[li]), np.asarray(hs_b[li]))
+        np.testing.assert_array_equal(np.asarray(cs_a[li]), np.asarray(cs_b[li]))

@@ -374,6 +374,34 @@ def test_qat_beats_ptq_at_low_bits_and_search_reports_pareto():
 
 
 @pytest.mark.slow
+def test_mixed_pareto_frontier_dominates_global():
+    """Each mixed point's modeled energy is <= its global twin's at the same
+    (frac_bits, lut_depth) — so the mixed frontier dominates-or-ties the
+    global-format frontier, which is the whole point of the search."""
+    from repro.data.traffic import make_traffic_dataset
+    from repro.models.lstm_model import train_traffic_model
+    from repro.qat.search import mixed_pareto_search
+
+    data = make_traffic_dataset(seed=0)
+    params, _ = train_traffic_model(data, epochs=4)
+    report = mixed_pareto_search(
+        data, params, frac_bits=(4, 8), lut_depths=(64,), epochs=1,
+        max_samples=1024)
+    assert len(report["points"]) == 4          # 2 frac_bits x 2 modes
+    by_key = {(p["frac_bits"], p["lut_depth"], p["mode"]): p
+              for p in report["points"]}
+    for fb in (4, 8):
+        g = by_key[(fb, 64, "global")]
+        m = by_key[(fb, 64, "mixed")]
+        assert m["energy_uj"] <= g["energy_uj"] + 1e-9
+        assert max(m["widths"]) <= g["total_bits"]
+    # the combined frontier is non-empty and every frontier point is real
+    assert report["pareto_indices"]
+    for i in report["pareto_indices"]:
+        assert report["points"][i]["pareto"] is True
+
+
+@pytest.mark.slow
 def test_finetune_qat_learns_under_the_quantiser():
     """Fine-tuning reduces the QAT train loss (the forward is the integer
     datapath, so this is literally learning under deployment arithmetic)."""
@@ -385,3 +413,149 @@ def test_finetune_qat_learns_under_the_quantiser():
     fmt = calibrated_format(params, data.x_train[:256], 4)
     _, hist = finetune_qat(params, data, fmt, 64, epochs=3, max_samples=2048)
     assert hist[-1] < hist[0]
+
+
+# ---------------------------------------------------------------------------
+# Mixed precision: per-layer/per-gate formats through calibration, QAT and
+# the deployment datapath
+# ---------------------------------------------------------------------------
+
+
+def _mixed_stack_formats():
+    from repro.core.fxp import GateFormats, LayerFormats, StackFormats
+
+    return StackFormats((
+        LayerFormats(FxpFormat(8, 16),
+                     GateFormats(FxpFormat(7, 14), FxpFormat(8, 16),
+                                 FxpFormat(6, 12), FxpFormat(8, 15))),
+        LayerFormats(FxpFormat(6, 12),
+                     GateFormats(FxpFormat(6, 12), FxpFormat(5, 11),
+                                 FxpFormat(6, 13), FxpFormat(6, 12))),
+    ))
+
+
+@pytest.mark.parametrize("lut_depth", [None, 64])
+def test_qat_mixed_precision_freeze_parity(lut_depth):
+    """The mixed-precision acceptance contract: a per-layer/per-gate
+    ``StackFormats`` QAT forward equals the frozen integer datapath on BOTH
+    fxp backends (every rescale at every gate's own format, bit for bit)."""
+    from repro.core import fxp as fxp_mod
+
+    sf = _mixed_stack_formats()
+    params = init_traffic_model(jax.random.PRNGKey(3), 1, 10, num_layers=2)
+    xs = jnp.asarray(RNG.normal(size=(4, 6, 1)).astype(np.float32))
+    luts = make_lut_pair(lut_depth) if lut_depth else None
+    pred_qat = qat_traffic_forward(params, xs, sf, luts)
+    qm = freeze(params, sf, lut_depth)
+    for backend in ("fxp", "pallas_fxp"):
+        pred = quantized_lstm_forward(qm, xs, backend=backend)
+        np.testing.assert_array_equal(
+            np.asarray(fxp_mod.quantize(pred_qat, sf.out_fmt)),
+            np.asarray(fxp_mod.quantize(pred, sf.out_fmt)),
+            err_msg=f"{backend} lut_depth={lut_depth}")
+
+
+def test_qat_mixed_precision_gradients_flow():
+    sf = _mixed_stack_formats()
+    params = init_traffic_model(jax.random.PRNGKey(4), 1, 10, num_layers=2)
+    xs = jnp.asarray(RNG.normal(size=(4, 6, 1)).astype(np.float32))
+    ys = jnp.asarray(RNG.normal(size=(4, 1)).astype(np.float32))
+    luts = make_lut_pair(64)
+
+    def loss(p):
+        return jnp.mean((qat_traffic_forward(p, xs, sf, luts) - ys) ** 2)
+
+    grads = jax.grad(loss)(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(g)).all() for g in flat)
+    assert sum(float(jnp.abs(g).sum()) for g in flat) > 0.0
+
+
+def test_suggest_stack_formats_per_gate():
+    """Per-gate formats come from each gate's OWN observed range, not the
+    global worst case; data-sharing points agree on one grid per layer."""
+    from repro.qat.calibrate import suggest_stack_formats
+
+    params = init_traffic_model(jax.random.PRNGKey(6), 1, 12, num_layers=2)
+    xs = jnp.asarray(RNG.normal(size=(32, 6, 1)).astype(np.float32))
+    stats = observe_traffic_model(params, xs)
+    sf = suggest_stack_formats(stats, total_bits=16, headroom_bits=1)
+    assert len(sf) == 2
+    from repro.core.lstm import GATE_ORDER
+    for li, lf in enumerate(sf.layers):
+        assert lf.data.total_bits == 16
+        for g, gf in zip(GATE_ORDER, lf.gates):
+            assert gf == FxpFormat.for_range(
+                stats.max_abs[f"preact_{g}/l{li}"], 16, 1)
+            # a gate never keeps FEWER fractional bits than the global format
+            assert gf.frac_bits >= suggest_format(stats, 16).frac_bits
+
+
+def test_calibrated_stack_formats_dominate_global_width():
+    """Same fractional bits as ``calibrated_format``, but every per-point
+    total width <= the global worst-case width — the premise of the mixed
+    Pareto dominance."""
+    from repro.qat.calibrate import calibrated_stack_formats
+
+    params = init_traffic_model(jax.random.PRNGKey(6), 1, 12, num_layers=2)
+    xs = jnp.asarray(RNG.normal(size=(32, 6, 1)).astype(np.float32))
+    stats = observe_traffic_model(params, xs)
+    g = calibrated_format(params, xs, 6, stats=stats)
+    sf = calibrated_stack_formats(params, xs, 6, stats=stats)
+    widths = [lf.data.total_bits for lf in sf.layers] + \
+             [gf.total_bits for lf in sf.layers for gf in lf.gates]
+    assert all(w <= g.total_bits for w in widths)
+    assert max(widths) == g.total_bits      # the worst point IS the global one
+    assert all(lf.data.frac_bits == 6 for lf in sf.layers)
+    with pytest.raises(ValueError, match="frac_bits"):
+        calibrated_stack_formats(params, xs, 16, stats=stats)
+
+
+def test_calibration_round_trip_at_power_of_two_boundaries():
+    """``for_range`` <-> ``suggest_stack_formats`` round trip: plant known
+    power-of-two ranges in the stats and check each point's format lands
+    exactly where ``for_range`` puts it (incl. the documented one-LSB
+    saturation at ``max_abs == 2**(n-1)``)."""
+    from repro.qat.calibrate import CalibrationStats, suggest_stack_formats
+
+    stats = CalibrationStats(max_abs={
+        "input": 1.0, "weights/l0": 0.5, "bias/l0": 0.25,
+        "preact_i/l0": 2.0, "preact_f/l0": 4.0, "preact_g/l0": 1.0,
+        "preact_o/l0": 0.999, "cell/l0": 2.0, "hidden/l0": 1.0,
+        "dense_w": 0.5, "dense_out": 1.0,
+    })
+    sf = suggest_stack_formats(stats, total_bits=16, headroom_bits=0)
+    lf = sf.layers[0]
+    # data grid: max over data-sharing points = cell/l0 = 2.0 -> 2 int bits
+    assert lf.data == FxpFormat.for_range(2.0, 16, 0)
+    assert lf.data.max_value == 2.0 - lf.data.scale     # one-LSB saturation
+    assert lf.gates.i == FxpFormat.for_range(2.0, 16, 0)    # 14 frac
+    assert lf.gates.f == FxpFormat.for_range(4.0, 16, 0)    # 13 frac
+    assert lf.gates.o.frac_bits == 15                       # <1.0: sign only
+    assert lf.gates.f.frac_bits == lf.gates.i.frac_bits - 1
+
+
+def test_mixed_energy_model_dominates_global():
+    """The energy half of the dominance argument: calibrated per-gate widths
+    price in at <= the global width's energy, and a uniform-width call
+    reduces exactly to the global model."""
+    from repro.core import timing_model as tm
+    from repro.qat.calibrate import calibrated_stack_formats
+    from repro.qat.search import _mixed_layer_bits
+
+    params = init_traffic_model(jax.random.PRNGKey(6), 1, 12, num_layers=2)
+    xs = jnp.asarray(RNG.normal(size=(32, 6, 1)).astype(np.float32))
+    g = calibrated_format(params, xs, 6)
+    sf = calibrated_stack_formats(params, xs, 6)
+    shapes = tm.stack_shapes(tm.LstmModelShape(n_i=1, n_h=12, n_f=12), 2)
+    spec = tm.SPARTAN7["XC7S15"]
+    e_mixed = tm.mixed_energy_per_inference_uj(shapes, spec,
+                                               _mixed_layer_bits(sf), 64)
+    e_global = tm.parameterised_energy_per_inference_uj(shapes, spec,
+                                                        g.total_bits, 64)
+    assert e_mixed <= e_global
+    e_uniform = tm.mixed_energy_per_inference_uj(
+        shapes, spec, [(g.total_bits,)] * 2, 64)
+    assert abs(e_uniform - e_global) < 1e-9
+    with pytest.raises(ValueError, match="entries"):
+        tm.mixed_energy_per_inference_uj(shapes, spec, [(16,)], 64)

@@ -366,3 +366,72 @@ def test_fleet_engine_validation():
         eng.submit(SensorStream(rid=1, qxs=np.zeros((4, N_IN + 1), np.int32)))
     with pytest.raises(TypeError, match="quantise"):  # floats never truncate
         eng.submit(SensorStream(rid=2, qxs=np.zeros((4, N_IN), np.float32)))
+
+
+def test_fleet_ragged_slot_sharding_rejected_with_typed_error():
+    """batch_slots not a multiple of the mesh data axis would give some
+    device a ragged slot block and break the slot->device placement
+    invariant — a *typed* construction-time error (``SlotShardingError``,
+    still a ValueError for old handlers), never a lazy shard_map failure."""
+    import types
+
+    from repro.serving.lstm_engine import SlotShardingError
+
+    qp, luts = _fleet_setup()
+    fake_mesh = types.SimpleNamespace(axis_names=("data",), shape={"data": 3})
+    with pytest.raises(SlotShardingError, match="multiple"):
+        SensorFleetEngine(qp, FMT, luts, batch_slots=8, mesh=fake_mesh)
+    assert issubclass(SlotShardingError, ValueError)
+    # divisible geometry passes the check (construction proceeds past it)
+    with pytest.raises(ValueError, match="axis"):
+        SensorFleetEngine(qp, FMT, luts, batch_slots=8,
+                          mesh=types.SimpleNamespace(axis_names=("model",),
+                                                     shape={"model": 2}))
+
+
+def test_fleet_mixed_precision_bit_identical():
+    """A per-layer/per-gate ``StackFormats`` engine serves streams
+    bit-identically to solo ``lstm_forward`` runs under the same formats,
+    and validates submitted inputs against the INPUT format's range."""
+    from repro.core.fxp import (GateFormats, LayerFormats, StackFormats,
+                                quantize as q)
+
+    sf = StackFormats((
+        LayerFormats(FxpFormat(8, 16),
+                     GateFormats(FxpFormat(7, 14), FxpFormat(8, 16),
+                                 FxpFormat(6, 12), FxpFormat(8, 15))),
+        LayerFormats(FxpFormat(6, 12),
+                     GateFormats(FxpFormat(6, 12), FxpFormat(5, 11),
+                                 FxpFormat(6, 13), FxpFormat(6, 12))),
+    ))
+    rng = np.random.default_rng(11)
+    qps = []
+    for li in range(2):
+        p = init_lstm_params(jax.random.PRNGKey(20 + li),
+                             N_IN if li == 0 else N_H, N_H)
+        qps.append(LSTMParams(w=q(p.w, sf[li].data), b=q(p.b, sf[li].data)))
+    luts = make_lut_pair(64)
+    streams = [SensorStream(rid=i, qxs=np.asarray(q(jnp.asarray(
+                   rng.normal(size=(T, N_IN)).astype(np.float32)), sf.in_fmt)))
+               for i, T in enumerate([5, 11, 3, 8])]
+    eng = SensorFleetEngine(qps, sf, luts, batch_slots=3, chunk=8,
+                            interpret=True)
+    eng.run(streams)
+    for s in streams:
+        seq, (hs, cs) = lstm_forward(
+            qps, jnp.asarray(s.qxs)[None], backend="pallas_fxp", fmt=sf,
+            luts=luts, block_b=1, return_sequence=True, return_state="all",
+            interpret=True)
+        np.testing.assert_array_equal(s.h_seq, np.asarray(seq[0]),
+                                      err_msg=f"stream {s.rid}")
+        np.testing.assert_array_equal(
+            s.qh, np.stack([np.asarray(h[0]) for h in hs]))
+        np.testing.assert_array_equal(
+            s.qc, np.stack([np.asarray(c[0]) for c in cs]))
+    # submit validates against the INPUT format (16-bit), not the narrower
+    # deeper-layer formats
+    in_fmt = sf.in_fmt
+    bad = SensorStream(rid=99, qxs=np.full((4, N_IN), in_fmt.qmax + 1,
+                                           np.int64))
+    with pytest.raises(ValueError, match="exceed"):
+        eng.submit(bad)
