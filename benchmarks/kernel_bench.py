@@ -15,7 +15,7 @@ import numpy as np
 from benchmarks.common import timeit
 from repro.core import timing_model as tm
 from repro.core.fxp import FxpFormat
-from repro.core.lstm import LSTMParams
+from repro.core.lstm import GRUParams, LSTMParams
 from repro.core.lut import LutSpec, build_table, make_lut_pair
 from repro.kernels import ref
 from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
@@ -73,6 +73,22 @@ def run():
                             f"kernel streams this as {t // tile} chunks of "
                             f"time_tile={tile}; "
                             f"model_cycles={tm.fused_fxp_sequence_cycles(shape)}"})
+
+    # fxp GRU sequence (ISSUE 8): the cell-generic datapath's 3-gate cell at
+    # paper scale — same (x,y) ALU and LUTs, 3H stacked gates instead of 4H
+    # (~3/4 the MACs per step) plus the extra r*h elementwise product.
+    b, n_in, h, t = 1, 1, 20, 24
+    gqxs = jnp.asarray(RNG.integers(-4096, 4096, (b, t, n_in)), jnp.int32)
+    gqw = jnp.asarray(RNG.integers(-1024, 1024, (n_in + h, 3 * h)), jnp.int32)
+    gqb = jnp.asarray(RNG.integers(-512, 512, (3 * h,)), jnp.int32)
+    fn = jax.jit(lambda x, w, bb: ref.gru_sequence_fxp_ref(
+        x, w, bb, None, sig_t, tanh_t,
+        sig_bounds=sig_s.bounds, tanh_bounds=tanh_s.bounds))
+    us = timeit(fn, gqxs, gqw, gqb, n=5)
+    rows.append({"name": "kernel/gru_seq_fxp", "us_per_call": round(us, 1),
+                 "derived": f"(8;16) LUT256 B{b} T{t} H{h}; us=ref simulator; "
+                            f"3 stacked gates (r,z,n), single state, "
+                            f"~0.75x LSTM MACs/step"})
 
     # 2-layer stack (ISSUE 3): the multi-layer datapath — ref-path wall time
     # of the stacked simulator (the oracle the fused stack kernel is
@@ -177,6 +193,11 @@ def run():
                            f"{sensor_steps / dt:.0f} sensor-steps/s host"}
 
     rows.append(fleet_row("serving/lstm_fleet", qp))
+    # GRU fleet (ISSUE 8): the same engine serving the 3-gate single-state
+    # cell — the (slots, H) carry has no qc half and the step closes over
+    # gru_layer_fxp via recurrent_forward
+    rows.append(fleet_row("serving/gru_fleet", GRUParams(w=gqw, b=gqb),
+                          extra=" gru single-state"))
     # stacked fleet (ISSUE 3): all layers' (L, slots, H) state carried per step
     rows.append(fleet_row("serving/lstm_fleet_2layer",
                           [qp, LSTMParams(w=qw_l1, b=qb_l1)],

@@ -20,8 +20,13 @@ runs; add ``--kill-after N`` to crash the fleet mid-flight, restore from the
 last checkpoint, and watch every surviving stream finish bit-identical to
 an uninterrupted run (``tests/spmd_scripts/check_fleet_restore.py``).
 
+``--cell gru`` runs the same pipeline end to end on the quantised GRU
+(``repro.core.cell.GRU_CELL``): training, PTQ/QAT, the fused stack kernel
+and the fleet engine are all cell-generic, and every flag above composes.
+
     PYTHONPATH=src python examples/traffic_speed_e2e.py [--sensors 512] [--ticks 16]
     PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --sensors 64
+    PYTHONPATH=src python examples/traffic_speed_e2e.py --cell gru --engine --layers 2
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python examples/traffic_speed_e2e.py --engine --shard --sensors 64
     PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --sensors 32 \
@@ -70,6 +75,12 @@ def main(argv=None):
                          "(h, c) per slot; on pallas_fxp the stack runs as "
                          "one fused kernel with the inter-layer sequence "
                          "resident in VMEM")
+    ap.add_argument("--cell", choices=["lstm", "gru"], default="lstm",
+                    help="gated recurrent cell (repro.core.cell.CellSpec): "
+                         "the whole pipeline — training, PTQ/QAT, the fused "
+                         "kernel, the fleet engine, sharding and "
+                         "checkpointing — is cell-generic; 'gru' carries a "
+                         "single hidden state per slot")
     ap.add_argument("--qat", action="store_true",
                     help="fine-tune under the quantiser (repro.qat) at a "
                          "calibrated low-bit format and serve the QAT-frozen "
@@ -98,11 +109,12 @@ def main(argv=None):
     if args.kill_after is not None and not args.checkpoint_dir:
         ap.error("--kill-after needs --checkpoint-dir to restore from")
 
-    # --- train on one sensor (paper) ---------------------------------------
+    # --- train on one sensor (paper; --cell gru swaps the recurrent cell) ---
     data = make_traffic_dataset(seed=0)
     params, _ = train_traffic_model(data, epochs=args.epochs,
-                                    num_layers=args.layers)
-    print(f"float test MSE: {evaluate_mse(params, data.x_test, data.y_test):.5f}")
+                                    num_layers=args.layers, cell=args.cell)
+    print(f"float ({args.cell}) test MSE: "
+          f"{evaluate_mse(params, data.x_test, data.y_test):.5f}")
 
     # --- PTQ sweep: pick the paper config -----------------------------------
     xs_t, ys_t = jnp.asarray(data.x_test), jnp.asarray(data.y_test)
@@ -189,7 +201,8 @@ def serve_fleet_engine(qmodel, args):
               f"slots {args.slots} -> {slots}")
     print(f"fleet engine: {args.sensors} ragged sensor streams via "
           f"{slots} slots, backend={args.backend!r}, "
-          f"{n_layers}-layer stack (all layers' state carried per slot)")
+          f"{n_layers}-layer {qmodel.cell} stack "
+          "(all layers' state carried per slot)")
 
     def _streams():
         rng = np.random.default_rng(0)

@@ -15,14 +15,17 @@ case "${1:-all}" in
   # integers), then the SPMD 2-device smokes (the slot-sharded fleet engine's
   # bit-identity gate), then the fault-injection gate (kill/restore/reshard,
   # torn checkpoint writes, poison-input quarantine — the 2-device restore
-  # battery rides the spmd smoke above), then everything not marked slow.
-  # The slow tier picks up the QAT fine-tuning sweep and the 8-device SPMD
-  # equivalence + kill-restore batteries via their 'slow' markers.
+  # battery rides the spmd smoke above), then the cell-equivalence gate
+  # (CellSpec plumbing + fxp GRU vs ref/golden integers), then everything
+  # not marked slow.  The slow tier picks up the QAT fine-tuning sweep, the
+  # 8-device SPMD equivalence + kill-restore batteries, and the GRU
+  # hypothesis sweeps via their 'slow' markers.
   fast) python -m pytest -x -q tests/test_hlo_analysis.py && \
         python -m pytest -x -q -m "qat and not slow" && \
         python -m pytest -x -q -m "spmd and not slow" && \
         python -m pytest -x -q -m "faults and not slow and not spmd" && \
-        exec python -m pytest -x -q -m "not slow and not qat and not spmd and not faults" ;;
+        python -m pytest -x -q -m "cells and not slow and not qat and not spmd and not faults" && \
+        exec python -m pytest -x -q -m "not slow and not qat and not spmd and not faults and not cells" ;;
   slow) exec python -m pytest -q -m slow ;;
   all)  exec python -m pytest -x -q ;;
   *) echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;

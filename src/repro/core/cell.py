@@ -1,0 +1,150 @@
+"""Declarative cell specifications for the quantised recurrent datapath.
+
+The paper's C1–C5 optimisations — stacked integer gate matmuls (C1), a fused
+elementwise tail (C2), shared LUT nonlinearities (C3), the ``(x, y)``
+fixed-point ALU (C4) and VMEM-resident recurrence (C5) — are properties of
+*gated recurrences*, not of the LSTM cell specifically.  ``CellSpec``
+captures the part that differs between cells declaratively:
+
+* ``gates`` — the gate names, in the order their weight columns are stacked
+  along the ``n_gates * n_h`` axis of the single matmul operand (C1);
+* ``activations`` — which shared LUT (C3) each gate's pre-activation feeds
+  (``"sigmoid"`` or ``"tanh"``);
+* ``state_arity`` — how many state tensors the recurrence carries
+  (2 for LSTM's ``(h, c)``, 1 for GRU's ``h``);
+* ``kind`` — the key the integer state-update *expression* dispatches on.
+  The elementwise tail (C2) is a handful of ``fxp_mul``/``fxp_add``/LUT ops
+  that differ per cell; each consumer (``core.lstm`` simulator cells, the
+  fused Pallas kernel template, the QAT fake-quant cells) specialises on
+  this static string rather than interpreting an expression DSL at trace
+  time — the set of cells is closed and the arithmetic must stay
+  integer-exact, so a template per ``kind`` is the honest encoding.
+
+Cell semantics pinned here (shared by every backend, the ``kernels.ref``
+oracles and QAT):
+
+LSTM (``LSTM_CELL``): gates ``i, f, g, o`` over ``[x_t, h_{t-1}]``;
+``c_t = f*c + i*g``; ``h_t = o * tanh(c_t)``.
+
+GRU (``GRU_CELL``): gates ``r, z, n``.  ``r``/``z`` come from the stacked
+matmul over ``[x_t, h_{t-1}]`` (weight columns ``[0, 2H)``); the candidate
+``n`` is a second matmul over ``[x_t, r_t * h_{t-1}]`` (columns ``[2H, 3H)``)
+— reset applied to the *state entering the matmul*, so the fixed-point
+datapath needs exactly one extra Hadamard + matmul and keeps the stacked
+layout; ``h_t = (1 - z_t) * n_t + z_t * h_{t-1}`` with the constant ``1``
+represented exactly as ``1 << frac_bits`` on the integer grid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+__all__ = [
+    "CellSpec",
+    "LSTM_CELL",
+    "GRU_CELL",
+    "CELL_SPECS",
+    "cell_spec",
+    "GRUParams",
+]
+
+_ACTIVATIONS = ("sigmoid", "tanh")
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    """Declarative description of a gated recurrent cell (see module doc)."""
+
+    kind: str
+    gates: tuple[str, ...]
+    activations: tuple[str, ...]
+    state_arity: int
+
+    def __post_init__(self):
+        object.__setattr__(self, "gates", tuple(self.gates))
+        object.__setattr__(self, "activations", tuple(self.activations))
+        if len(self.activations) != len(self.gates):
+            raise ValueError(
+                f"{len(self.gates)} gates but {len(self.activations)} activations")
+        bad = set(self.activations) - set(_ACTIVATIONS)
+        if bad:
+            raise ValueError(f"unknown activations {sorted(bad)}; "
+                             f"expected one of {_ACTIVATIONS} per gate")
+        if self.state_arity not in (1, 2):
+            raise ValueError(f"state_arity must be 1 (h) or 2 (h, c), "
+                             f"got {self.state_arity}")
+
+    @property
+    def n_gates(self) -> int:
+        return len(self.gates)
+
+    def hidden_size(self, w: jax.Array) -> int:
+        """Hidden size implied by a stacked ``(n_in + n_h, n_gates * n_h)``
+        weight matrix."""
+        return w.shape[1] // self.n_gates
+
+
+LSTM_CELL = CellSpec(
+    kind="lstm",
+    gates=("i", "f", "g", "o"),
+    activations=("sigmoid", "sigmoid", "tanh", "sigmoid"),
+    state_arity=2,
+)
+
+GRU_CELL = CellSpec(
+    kind="gru",
+    gates=("r", "z", "n"),
+    activations=("sigmoid", "sigmoid", "tanh"),
+    state_arity=1,
+)
+
+CELL_SPECS: dict[str, CellSpec] = {s.kind: s for s in (LSTM_CELL, GRU_CELL)}
+
+
+def cell_spec(kind: "str | CellSpec") -> CellSpec:
+    """Normalise a cell argument: a ``CellSpec`` passes through, a string
+    looks up the registered specs (``"lstm"`` / ``"gru"``)."""
+    if isinstance(kind, CellSpec):
+        return kind
+    try:
+        return CELL_SPECS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown cell kind {kind!r}; expected one of "
+            f"{tuple(CELL_SPECS)}") from None
+
+
+@dataclasses.dataclass
+class GRUParams:
+    """Stacked-gate GRU parameters: ``w: (n_in + n_h, 3*n_h)``,
+    ``b: (3*n_h,)``, gate order ``r, z, n`` (``GRU_CELL.gates``).
+
+    The candidate gate's hidden-weight rows act on the reset-gated state
+    ``r_t * h_{t-1}`` (see the GRU semantics in the module docstring) — the
+    stacked storage layout is identical to ``LSTMParams``, only the
+    datapath's second pass differs."""
+
+    w: jax.Array
+    b: jax.Array
+
+    @property
+    def hidden_size(self) -> int:
+        return self.w.shape[1] // 3
+
+    @property
+    def input_size(self) -> int:
+        return self.w.shape[0] - self.hidden_size
+
+    def tree_flatten(self):  # pragma: no cover - registered below
+        return (self.w, self.b), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):  # pragma: no cover
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    GRUParams, GRUParams.tree_flatten, GRUParams.tree_unflatten
+)

@@ -108,41 +108,86 @@ class FxpFormat:
 
 GATE_ORDER = ("i", "f", "g", "o")
 
+# Gate names implied by arity when a GateFormats is built positionally (the
+# JSON round trip stores no names): 4 formats = LSTM, 3 = GRU.  See
+# ``repro.core.cell`` for the cell specs these orders come from.
+_GATE_NAMES_BY_ARITY = {4: GATE_ORDER, 3: ("r", "z", "n")}
 
-@dataclasses.dataclass(frozen=True)
+
 class GateFormats:
-    """Per-gate pre-activation formats for one LSTM layer, in gate order
-    ``(i, f, g, o)``.  Each gate's matmul accumulator is rescaled into its
-    own ``(x, y)`` before the activation LUT; the LUT output is then
-    quantised back to the layer's data format."""
+    """Per-gate pre-activation formats for one recurrent layer, in the
+    cell's stacked-matmul gate order — LSTM ``(i, f, g, o)`` (the historical
+    4-positional constructor) or GRU ``(r, z, n)``.  Each gate's matmul
+    accumulator is rescaled into its own ``(x, y)`` before the activation
+    LUT; the LUT output is then quantised back to the layer's data format.
 
-    i: FxpFormat
-    f: FxpFormat
-    g: FxpFormat
-    o: FxpFormat
+    Gate formats are addressable by position (``gf[0]``), by name
+    (``gf["f"]`` or ``gf.f``) and by iteration; arity follows the cell
+    (``len(gf)`` == ``CellSpec.n_gates``)."""
+
+    __slots__ = ("fmts", "names")
+
+    def __init__(self, *fmts: FxpFormat, names: "tuple[str, ...] | None" = None):
+        if names is None:
+            try:
+                names = _GATE_NAMES_BY_ARITY[len(fmts)]
+            except KeyError:
+                raise ValueError(
+                    f"GateFormats got {len(fmts)} formats; pass names=... "
+                    "for cells other than LSTM (4 gates) / GRU (3)") from None
+        if len(names) != len(fmts):
+            raise ValueError(f"{len(fmts)} formats but {len(names)} names")
+        object.__setattr__(self, "fmts", tuple(fmts))
+        object.__setattr__(self, "names", tuple(names))
+
+    def __setattr__(self, name, value):  # immutable, like the dataclasses here
+        raise dataclasses.FrozenInstanceError(f"cannot assign to field {name!r}")
 
     @classmethod
-    def uniform(cls, fmt: FxpFormat) -> "GateFormats":
-        return cls(fmt, fmt, fmt, fmt)
+    def uniform(cls, fmt: FxpFormat, n_gates: int = 4) -> "GateFormats":
+        return cls(*(fmt,) * n_gates)
 
     def __iter__(self):
-        return iter((self.i, self.f, self.g, self.o))
+        return iter(self.fmts)
+
+    def __len__(self) -> int:
+        return len(self.fmts)
 
     def __getitem__(self, idx: "int | str") -> FxpFormat:
         if isinstance(idx, str):
-            return getattr(self, idx)
-        return (self.i, self.f, self.g, self.o)[idx]
+            return self.fmts[self.names.index(idx)]
+        return self.fmts[idx]
+
+    def __getattr__(self, name: str) -> FxpFormat:
+        # only reached when normal lookup fails: resolve gate names (.i/.f/...)
+        names = object.__getattribute__(self, "names")
+        if name in names:
+            return object.__getattribute__(self, "fmts")[names.index(name)]
+        raise AttributeError(name)
+
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, GateFormats)
+                and self.fmts == other.fmts and self.names == other.names)
+
+    def __hash__(self) -> int:
+        return hash((self.fmts, self.names))
+
+    def __repr__(self) -> str:
+        inner = ", ".join(f"{n}={f!r}" for n, f in zip(self.names, self.fmts))
+        return f"GateFormats({inner})"
 
     @property
-    def total_bits(self) -> tuple[int, int, int, int]:
+    def total_bits(self) -> tuple[int, ...]:
         return tuple(f.total_bits for f in self)
 
 
 @dataclasses.dataclass(frozen=True)
 class LayerFormats:
-    """Formats for one LSTM layer: ``data`` covers x/h/c, weights, bias and
-    every element-wise intermediate; ``gates`` are the four pre-activation
-    formats (default: uniform at ``data``)."""
+    """Formats for one recurrent layer: ``data`` covers x/h (and c), weights,
+    bias and every element-wise intermediate; ``gates`` are the per-gate
+    pre-activation formats (default: uniform at ``data``, LSTM arity — a
+    uniform ``GateFormats`` serves any cell whose gate count is <= its
+    arity, since only ``spec.n_gates`` entries are ever consumed)."""
 
     data: FxpFormat
     gates: GateFormats | None = None

@@ -23,37 +23,45 @@ Three functionally-identical cell implementations live here:
   point (C4) + shared LUT activations (C3), exactly the arithmetic the
   bitstream executes.
 
-Gate order everywhere is ``i, f, g, o`` along the stacked ``4*n_h`` axis.
-Weights act on ``[x_t, h_{t-1}]`` (input features first, then hidden).
+Gate order everywhere is ``i, f, g, o`` along the stacked ``4*n_h`` axis
+(``r, z, n`` along ``3*n_h`` for the GRU siblings — see
+``repro.core.cell``).  Weights act on ``[x_t, h_{t-1}]`` (input features
+first, then hidden).
 
 Backend matrix
 --------------
 
-``lstm_forward(params, xs, backend=...)`` is the single entry point every
-workload (models, examples, benchmarks) selects a datapath through.  The six
-backends, what executes them, and which oracle each is exact against:
+``recurrent_forward(spec, params, xs, backend=...)`` is the single
+cell-generic entry point every workload (models, examples, benchmarks)
+selects a datapath through; ``lstm_forward`` / ``gru_forward`` are its
+per-cell faces (``lstm_forward`` keeps the historical signature exactly).
+The backend registry ``RECURRENT_BACKENDS`` (== ``LSTM_BACKENDS``) is shared
+by every cell; per row below, "cells" says which cell kinds the backend
+serves:
 
-======================  ==============================  =========================
-backend                 executes                        exactness contract
-======================  ==============================  =========================
-``"sequential"``        4 separate gate mat-vecs,       numerical oracle for the
-                        ``lax.scan`` over t             float path (Fig. 3
-                                                        baseline schedule)
-``"fused"``             1 stacked matmul/step (C1+C2),  allclose to sequential
-                        ``lax.scan`` over t             (same float ops, fused)
-``"pallas"``            ``lstm_step_pallas`` per step   allclose to ``"fused"``;
-                        inside ``lax.scan`` (per-step   per-step HBM round-trip —
-                        HBM traffic: the bottleneck)    kept as the profiling foil
-``"pallas_seq"``        ``lstm_sequence_pallas`` — one  allclose to ``"fused"``
-                        kernel, weights+state in VMEM   (``ref.lstm_sequence_ref``)
+======================  ==============================  =======  =========================
+backend                 executes                        cells    exactness contract
+======================  ==============================  =======  =========================
+``"sequential"``        separate gate mat-vecs,         both     numerical oracle for the
+                        ``lax.scan`` over t                      float path (Fig. 3
+                                                                 baseline schedule)
+``"fused"``             1 stacked matmul/step (C1+C2),  both     allclose to sequential
+                        ``lax.scan`` over t                      (same float ops, fused)
+``"pallas"``            ``lstm_step_pallas`` per step   LSTM     allclose to ``"fused"``;
+                        inside ``lax.scan`` (per-step            per-step HBM round-trip —
+                        HBM traffic: the bottleneck)             kept as the profiling foil
+``"pallas_seq"``        ``lstm_sequence_pallas`` — one  LSTM     allclose to ``"fused"``
+                        kernel, weights+state in VMEM            (``ref.lstm_sequence_ref``)
                         for all n_seq steps (C5)
-``"fxp"``               ``lstm_layer_fxp`` — bit-level  THE bitstream spec:
-                        ``(x, y)`` simulator,           quantised arithmetic,
-                        ``lax.scan`` over t             LUT activations
-``"pallas_fxp"``        ``lstm_sequence_fxp_pallas`` —  *integer-equal* to
-                        C1–C5 in one kernel, int32      ``"fxp"`` (and to
-                        h/c resident in VMEM            ``ref.lstm_sequence_fxp_ref``)
-======================  ==============================  =========================
+``"fxp"``               ``lstm_layer_fxp`` /            both     THE bitstream spec:
+                        ``gru_layer_fxp`` — bit-level            quantised arithmetic,
+                        ``(x, y)`` simulator,                    LUT activations
+                        ``lax.scan`` over t
+``"pallas_fxp"``        ``lstm_sequence_fxp_pallas`` /  both     *integer-equal* to
+                        ``gru_sequence_fxp_pallas`` —            ``"fxp"`` (and to the
+                        C1–C5 in one kernel, int32               ``ref.*_sequence_fxp_ref``
+                        state resident in VMEM                   oracles)
+======================  ==============================  =======  =========================
 
 When to use which: train with ``"fused"`` (differentiable, fast on any
 backend); validate quantisation with ``"fxp"`` (the readable spec); serve the
@@ -62,7 +70,10 @@ throughput path, O(1) HBM traffic in sequence length); use ``"sequential"``
 and ``"pallas"`` only as baselines/foils when reproducing the Fig. 3/Fig. 5
 bottleneck story.  Float backends take float ``xs``; fxp backends take int32
 ``xs`` already quantised to ``fmt`` (plus optional ``luts`` from
-``repro.core.lut.make_lut_pair``).
+``repro.core.lut.make_lut_pair``).  The float Pallas kernels
+(``"pallas"``/``"pallas_seq"``) are LSTM-only: they bake in the ``(h, c)``
+tail, and their role (the per-step-HBM foil and its float C5 fix) is already
+told by the LSTM — arity-1 cells raise ``NotImplementedError`` there.
 
 ``time_tile`` (``"pallas_fxp"`` only): by default the kernel stages the whole
 ``(block_b, n_seq, n_in)`` input in one VMEM block, which bounds ``n_seq``.
@@ -127,19 +138,32 @@ import jax.numpy as jnp
 
 from repro.core import fxp as fxp_mod
 from repro.core import lut as lut_mod
+from repro.core.cell import (CELL_SPECS, GRU_CELL, LSTM_CELL, CellSpec,
+                             GRUParams, cell_spec)
 from repro.core.fxp import FxpFormat
 
 __all__ = [
     "LSTMParams",
+    "GRUParams",
     "init_lstm_params",
+    "init_gru_params",
+    "init_recurrent_params",
     "split_gate_params",
     "lstm_cell_sequential",
     "lstm_cell_fused",
     "lstm_cell_fxp",
+    "gru_cell_sequential",
+    "gru_cell_fused",
+    "gru_cell_fxp",
     "lstm_layer",
     "lstm_layer_fxp",
+    "gru_layer",
+    "gru_layer_fxp",
     "lstm_forward",
+    "gru_forward",
+    "recurrent_forward",
     "LSTM_BACKENDS",
+    "RECURRENT_BACKENDS",
 ]
 
 GATE_ORDER = ("i", "f", "g", "o")
@@ -187,6 +211,31 @@ def init_lstm_params(
     # gate order i, f, g, o -> forget block is [h : 2h)
     b = b.at[hidden_size : 2 * hidden_size].set(forget_bias)
     return LSTMParams(w=w, b=b)
+
+
+def init_gru_params(
+    key: jax.Array, input_size: int, hidden_size: int, dtype=jnp.float32,
+) -> GRUParams:
+    """Glorot-uniform stacked GRU weights (gate order ``r, z, n``), zero
+    bias — the GRU has no forget-bias analogue worth seeding."""
+    k_w, _ = jax.random.split(key)
+    fan_in = input_size + hidden_size
+    fan_out = 3 * hidden_size
+    limit = (6.0 / (fan_in + fan_out)) ** 0.5
+    w = jax.random.uniform(k_w, (fan_in, fan_out), dtype, -limit, limit)
+    return GRUParams(w=w, b=jnp.zeros((fan_out,), dtype))
+
+
+def init_recurrent_params(spec: "CellSpec | str", key: jax.Array,
+                          input_size: int, hidden_size: int, dtype=jnp.float32):
+    """Cell-generic init: the ``CellSpec`` picks the params class and gate
+    arity (``LSTMParams`` for ``"lstm"``, ``GRUParams`` for ``"gru"``)."""
+    spec = cell_spec(spec)
+    if spec.kind == "lstm":
+        return init_lstm_params(key, input_size, hidden_size, dtype)
+    if spec.kind == "gru":
+        return init_gru_params(key, input_size, hidden_size, dtype)
+    raise ValueError(f"no param init registered for cell {spec.kind!r}")
 
 
 def split_gate_params(params: LSTMParams) -> dict[str, tuple[jax.Array, jax.Array]]:
@@ -250,8 +299,41 @@ def lstm_cell_fused(
     return h_t, c_t
 
 
+def gru_cell_sequential(params: GRUParams, x_t: jax.Array, h: jax.Array) -> jax.Array:
+    """Baseline GRU cell: the three gate mat-vecs issued separately (the
+    per-gate column blocks of the stacked weight; see ``GRU_CELL``)."""
+    hdim = params.hidden_size
+    xh = jnp.concatenate([x_t, h], axis=-1)
+    r_t = jax.nn.sigmoid(xh @ params.w[:, :hdim] + params.b[:hdim])
+    z_t = jax.nn.sigmoid(
+        xh @ params.w[:, hdim:2 * hdim] + params.b[hdim:2 * hdim])
+    xrh = jnp.concatenate([x_t, r_t * h], axis=-1)
+    n_t = jnp.tanh(xrh @ params.w[:, 2 * hdim:] + params.b[2 * hdim:])
+    return (1.0 - z_t) * n_t + z_t * h
+
+
+def gru_cell_fused(
+    params: GRUParams,
+    x_t: jax.Array,
+    h: jax.Array,
+    sigmoid_fn: Callable[[jax.Array], jax.Array] = jax.nn.sigmoid,
+    tanh_fn: Callable[[jax.Array], jax.Array] = jnp.tanh,
+) -> jax.Array:
+    """C1-style GRU cell: ``r``/``z`` from one stacked matmul over
+    ``[x_t, h]``; the candidate ``n`` is the one pass the GRU structure
+    forces to wait for ``r`` (its matmul runs over ``[x_t, r_t * h]``)."""
+    hdim = params.hidden_size
+    xh = jnp.concatenate([x_t, h], axis=-1)
+    z_rz = xh @ params.w[:, :2 * hdim] + params.b[:2 * hdim]
+    r_t = sigmoid_fn(z_rz[..., :hdim])
+    z_t = sigmoid_fn(z_rz[..., hdim:])
+    xrh = jnp.concatenate([x_t, r_t * h], axis=-1)
+    n_t = tanh_fn(xrh @ params.w[:, 2 * hdim:] + params.b[2 * hdim:])
+    return (1.0 - z_t) * n_t + z_t * h
+
+
 # ---------------------------------------------------------------------------
-# Fixed-point + LUT cell (the bitstream-exact inference path)
+# Fixed-point + LUT cells (the bitstream-exact inference path)
 # ---------------------------------------------------------------------------
 
 
@@ -259,6 +341,27 @@ def _lut_fxp(table: jax.Array, spec: lut_mod.LutSpec, q: jax.Array, fmt: FxpForm
     """Apply a LUT to fixed-point inputs, returning fixed point — shared
     semantics in ``core.lut.lut_apply_fxp`` (also the QAT forward's LUT)."""
     return lut_mod.lut_apply_fxp(q, table, spec, fmt)
+
+
+def _fxp_acts(data: FxpFormat, luts):
+    """The shared ``(act_sigmoid, act_tanh)`` pair of the fxp cells: LUT
+    activations when ``luts`` is given (C3), full-precision-through-the-grid
+    otherwise (the paper's Fig. 6 sweep quantises data but not activations).
+    Each takes ``(q, in_fmt)`` and lands the result at the layer's ``data``
+    format — identical ops for every cell kind."""
+    if luts is None:
+        act_sig = lambda q, in_fmt: fxp_mod.quantize(
+            jax.nn.sigmoid(fxp_mod.dequantize(q, in_fmt)), data)
+        act_tanh = lambda q, in_fmt: fxp_mod.quantize(
+            jnp.tanh(fxp_mod.dequantize(q, in_fmt)), data)
+    else:
+        sig_table, sig_spec = luts["sigmoid"]
+        tanh_table, tanh_spec = luts["tanh"]
+        act_sig = lambda q, in_fmt: lut_mod.lut_apply_fxp(
+            q, sig_table, sig_spec, in_fmt, out_fmt=data)
+        act_tanh = lambda q, in_fmt: lut_mod.lut_apply_fxp(
+            q, tanh_table, tanh_spec, in_fmt, out_fmt=data)
+    return act_sig, act_tanh
 
 
 def lstm_cell_fxp(
@@ -296,18 +399,7 @@ def lstm_cell_fxp(
                   bias=qparams.b[k * hdim:(k + 1) * hdim],
                   out_fmt=lf.gates[k])
               for k in range(4)]
-    if luts is None:
-        act_sig = lambda q, in_fmt: fxp_mod.quantize(
-            jax.nn.sigmoid(fxp_mod.dequantize(q, in_fmt)), data)
-        act_tanh = lambda q, in_fmt: fxp_mod.quantize(
-            jnp.tanh(fxp_mod.dequantize(q, in_fmt)), data)
-    else:
-        sig_table, sig_spec = luts["sigmoid"]
-        tanh_table, tanh_spec = luts["tanh"]
-        act_sig = lambda q, in_fmt: lut_mod.lut_apply_fxp(
-            q, sig_table, sig_spec, in_fmt, out_fmt=data)
-        act_tanh = lambda q, in_fmt: lut_mod.lut_apply_fxp(
-            q, tanh_table, tanh_spec, in_fmt, out_fmt=data)
+    act_sig, act_tanh = _fxp_acts(data, luts)
     i_t = act_sig(zs[0], lf.gates.i)
     f_t = act_sig(zs[1], lf.gates.f)
     g_t = act_tanh(zs[2], lf.gates.g)
@@ -315,6 +407,50 @@ def lstm_cell_fxp(
     c_t = fxp_mod.fxp_add(fxp_mod.fxp_mul(f_t, qc, data), fxp_mod.fxp_mul(i_t, g_t, data), data)
     h_t = fxp_mod.fxp_mul(o_t, act_tanh(c_t, data), data)
     return h_t, c_t
+
+
+def gru_cell_fxp(
+    qparams: GRUParams,
+    qx_t: jax.Array,
+    qh: jax.Array,
+    fmt: "FxpFormat | fxp_mod.LayerFormats",
+    luts: dict[str, tuple[jax.Array, lut_mod.LutSpec]] | None = None,
+) -> jax.Array:
+    """Quantised GRU cell — the single-state face of the same C1–C4 recipe
+    ``lstm_cell_fxp`` pins (and THE integer oracle the fused GRU kernel and
+    ``ref.gru_sequence_fxp_ref`` are equal to).  Gate order ``r, z, n``:
+    ``r``/``z`` rescale out of the stacked matmul over ``[x, h]`` (per-gate
+    formats supported exactly as for LSTM), the candidate's matmul runs over
+    ``[x, fxp_mul(r, h)]``, and the state update represents the constant 1
+    exactly as ``1 << frac_bits`` on the integer grid:
+    ``h' = sat(fxp_mul(sat(one - z), n) + fxp_mul(z, h))``."""
+    lf = fmt if isinstance(fmt, fxp_mod.LayerFormats) else fxp_mod.LayerFormats.uniform(fmt)
+    data = lf.data
+    hdim = qparams.hidden_size
+    qxh = jnp.concatenate([qx_t, qh], axis=-1)
+    if lf.is_uniform:
+        z_rz = fxp_mod.fxp_matmul(qxh, qparams.w[:, :2 * hdim], data,
+                                  bias=qparams.b[:2 * hdim])
+        zs = [z_rz[..., :hdim], z_rz[..., hdim:]]
+    else:
+        # Independent per-gate-column accumulators, as in lstm_cell_fxp.
+        zs = [fxp_mod.fxp_matmul(
+                  qxh, qparams.w[:, k * hdim:(k + 1) * hdim], data,
+                  bias=qparams.b[k * hdim:(k + 1) * hdim],
+                  out_fmt=lf.gates[k])
+              for k in range(2)]
+    act_sig, act_tanh = _fxp_acts(data, luts)
+    r_t = act_sig(zs[0], lf.gates[0])
+    z_t = act_sig(zs[1], lf.gates[1])
+    qxrh = jnp.concatenate([qx_t, fxp_mod.fxp_mul(r_t, qh, data)], axis=-1)
+    z_n = fxp_mod.fxp_matmul(
+        qxrh, qparams.w[:, 2 * hdim:], data, bias=qparams.b[2 * hdim:],
+        out_fmt=None if lf.is_uniform else lf.gates[2])
+    n_t = act_tanh(z_n, data if lf.is_uniform else lf.gates[2])
+    one = jnp.int32(1 << data.frac_bits)
+    one_minus_z = fxp_mod.saturate(one - z_t, data)
+    return fxp_mod.fxp_add(fxp_mod.fxp_mul(one_minus_z, n_t, data),
+                           fxp_mod.fxp_mul(z_t, qh, data), data)
 
 
 # ---------------------------------------------------------------------------
@@ -384,11 +520,64 @@ def lstm_layer_fxp(
     return qh, qc
 
 
+def gru_layer(
+    params: GRUParams,
+    xs: jax.Array,
+    h0: jax.Array | None = None,
+    cell: Callable = gru_cell_fused,
+    return_sequence: bool = False,
+    **cell_kwargs,
+):
+    """Float GRU over ``xs: (..., n_seq, n_in)`` via ``lax.scan`` — the
+    single-state sibling of ``lstm_layer``."""
+    n_h = params.hidden_size
+    batch_shape = xs.shape[:-2]
+    h = h0 if h0 is not None else jnp.zeros((*batch_shape, n_h), xs.dtype)
+
+    def step(h, x_t):
+        h = cell(params, x_t, h, **cell_kwargs)
+        return h, (h if return_sequence else None)
+
+    h, seq = jax.lax.scan(step, h, jnp.moveaxis(xs, -2, 0))
+    if return_sequence:
+        return jnp.moveaxis(seq, 0, -2), h
+    return h
+
+
+def gru_layer_fxp(
+    qparams: GRUParams,
+    qxs: jax.Array,
+    fmt: "FxpFormat | fxp_mod.LayerFormats",
+    luts: dict | None = None,
+    qh0: jax.Array | None = None,
+    return_sequence: bool = False,
+):
+    """Quantised GRU layer scan: int32 ``h`` carried step to step (C5), the
+    readable oracle the fused GRU stack kernel is integer-equal to."""
+    n_h = qparams.hidden_size
+    batch_shape = qxs.shape[:-2]
+    qh = qh0 if qh0 is not None else jnp.zeros((*batch_shape, n_h), jnp.int32)
+
+    def step(qh, qx_t):
+        qh = gru_cell_fxp(qparams, qx_t, qh, fmt, luts)
+        return qh, (qh if return_sequence else None)
+
+    qh, seq = jax.lax.scan(step, qh, jnp.moveaxis(qxs, -2, 0))
+    if return_sequence:
+        return jnp.moveaxis(seq, 0, -2), qh
+    return qh
+
+
 # ---------------------------------------------------------------------------
 # Unified dispatcher: one API, six datapaths (see module docstring matrix)
 # ---------------------------------------------------------------------------
 
 LSTM_BACKENDS = ("sequential", "fused", "pallas", "pallas_seq", "fxp", "pallas_fxp")
+
+# The dispatcher is cell-generic; the backend registry is shared.  Arity-1
+# cells (GRU) support every backend except the float Pallas LSTM kernels
+# ("pallas"/"pallas_seq") — recurrent_forward enforces this.
+RECURRENT_BACKENDS = LSTM_BACKENDS
 
 _FXP_BACKENDS = ("fxp", "pallas_fxp")
 _PALLAS_BACKENDS = ("pallas", "pallas_seq", "pallas_fxp")
@@ -414,9 +603,36 @@ def _lut_kernel_args(luts: dict | None) -> dict:
     )
 
 
-def _forward_one_layer(p, xs, h0, c0, need_seq, backend, fmt, luts,
+def _forward_one_layer(spec, p, xs, h0, c0, need_seq, backend, fmt, luts,
                        interpret, block_b, block_h, time_tile):
-    """One layer through one backend.  Returns ``(h_seq | None, h_T, c_T)``."""
+    """One layer of one cell kind through one backend.  Returns
+    ``(h_seq | None, h_T, c_T)`` — ``c_T`` is ``None`` for arity-1 cells."""
+    if spec.kind == "gru":
+        if backend == "sequential" or backend == "fused":
+            cell = gru_cell_sequential if backend == "sequential" else gru_cell_fused
+            out = gru_layer(p, xs, h0, cell=cell, return_sequence=need_seq)
+            return (out[0], out[1], None) if need_seq else (None, out, None)
+
+        if backend == "fxp":
+            out = gru_layer_fxp(p, xs, fmt, luts, qh0=h0,
+                                return_sequence=need_seq)
+            return (out[0], out[1], None) if need_seq else (None, out, None)
+
+        # pallas_fxp (the float Pallas kernels are LSTM-only; recurrent_forward
+        # rejects them for GRU before we get here).
+        from repro.kernels.lstm_fxp_seq import gru_sequence_fxp_pallas
+
+        B, _, _ = xs.shape
+        h = h0 if h0 is not None else jnp.zeros((B, p.hidden_size), jnp.int32)
+        out = gru_sequence_fxp_pallas(
+            xs, p.w, p.b, h,
+            formats=fmt,
+            return_sequence=need_seq, block_b=block_b, time_tile=time_tile,
+            interpret=interpret,
+            **_lut_kernel_args(luts),
+        )
+        return (out[0], out[1], None) if need_seq else (None, out, None)
+
     if backend == "sequential" or backend == "fused":
         cell = lstm_cell_sequential if backend == "sequential" else lstm_cell_fused
         out = lstm_layer(p, xs, h0, c0, cell=cell, return_sequence=need_seq)
@@ -472,7 +688,8 @@ def _forward_one_layer(p, xs, h0, c0, need_seq, backend, fmt, luts,
     return out if need_seq else (None, *out)
 
 
-def lstm_forward(
+def recurrent_forward(
+    spec: "CellSpec | str",
     params,
     xs: jax.Array,
     *,
@@ -489,34 +706,42 @@ def lstm_forward(
     block_h: int = 128,
     time_tile: int | None = None,
 ):
-    """Run a (stacked) LSTM through one of the six backends.
+    """Run a (stacked) gated recurrence of cell kind ``spec`` through one of
+    the registered backends.  ``lstm_forward`` / ``gru_forward`` are the
+    per-cell faces of this dispatcher.
 
     Parameters
     ----------
-    params : ``LSTMParams`` or a list of them (one per stacked layer; layer
-        ``l``'s ``input_size`` must equal layer ``l-1``'s ``hidden_size`` —
-        hidden sizes may differ between layers).  EVERY multi-layer stack on
-        ``"pallas_fxp"`` runs as ONE kernel with the inter-layer hidden
-        sequence resident in VMEM (``lstm_sequence_fxp_stack_pallas``, which
-        pads heterogeneous ``H`` in-kernel); the other backends run layer by
-        layer, where inter-layer traffic is the full hidden-state sequence.
+    spec : a ``CellSpec`` or registered kind string (``"lstm"`` / ``"gru"``).
+    params : the spec's param class (``LSTMParams`` / ``GRUParams``) or a
+        list of them (one per stacked layer; layer ``l``'s ``input_size``
+        must equal layer ``l-1``'s ``hidden_size`` — hidden sizes may differ
+        between layers).  EVERY multi-layer stack on ``"pallas_fxp"`` runs as
+        ONE kernel with the inter-layer hidden sequence resident in VMEM
+        (``*_sequence_fxp_stack_pallas``, which pads heterogeneous ``H``
+        in-kernel); the other backends run layer by layer, where inter-layer
+        traffic is the full hidden-state sequence.
     xs : ``(B, n_seq, n_in)`` or ``(n_seq, n_in)``.  Float for the float
         backends; int32 fixed point (already quantised to layer 0's data
         format) for ``"fxp"``/``"pallas_fxp"``.
-    backend : one of ``LSTM_BACKENDS`` — see the module docstring matrix.
+    backend : one of ``RECURRENT_BACKENDS`` — see the module docstring
+        matrix.  The float Pallas kernels (``"pallas"``/``"pallas_seq"``)
+        are LSTM-only; arity-1 cells raise ``NotImplementedError`` there.
     fmt, luts : fixed-point format — ``FxpFormat`` (global), ``LayerFormats``
         (per-gate) or ``StackFormats`` (per-layer + per-gate) — plus optional
         ``make_lut_pair`` tables (fxp backends only).
     h0, c0 : initial state — a single ``(B, n_h)`` array (applied to layer 0
         of a single-layer stack), a per-layer list (required for
         heterogeneous-``H`` stacks), or a stacked ``(L, ...)`` array
-        (multi-layer, uniform ``H``); default zeros.
+        (multi-layer, uniform ``H``); default zeros.  ``c0`` is LSTM-only:
+        arity-1 cells (GRU) reject a non-``None`` ``c0``.
     return_sequence : also return the top layer's per-step hidden states.
-    return_state : ``"top"`` (default) returns the top layer's ``(h_T, c_T)``
-        — backward compatible; ``"all"`` returns per-layer lists
-        ``([h_T^0..h_T^{L-1}], [c_T^0..c_T^{L-1}])`` so a chunked
-        continuation of a *stacked* LSTM is exact: feed the lists back as
-        ``h0``/``c0`` of the next chunk and the integers match one long call.
+    return_state : ``"top"`` (default) returns the top layer's final state —
+        ``(h_T, c_T)`` for LSTM, bare ``h_T`` for GRU; ``"all"`` returns
+        per-layer lists (``([h_T^l...], [c_T^l...])`` / ``[h_T^l...]``) so a
+        chunked continuation of a *stacked* recurrence is exact: feed the
+        lists back as ``h0``/``c0`` of the next chunk and the integers match
+        one long call.
     num_layers : optional cross-check against ``len(params)``.
     interpret : Pallas interpret mode; ``None`` = auto (compiled on TPU,
         interpret elsewhere so every backend runs everywhere).
@@ -525,15 +750,26 @@ def lstm_forward(
         double-buffered ``time_tile``-step chunks (``None`` = whole sequence
         in one block); integer-equal either way.  See the module docstring.
 
-    Returns ``(h_T, c_T)`` (top layer, or per-layer lists with
-    ``return_state="all"``), or ``(h_seq, (h_T, c_T))`` when
-    ``return_sequence`` is set — the same convention as ``lstm_layer``.
+    Returns the final state (shaped per ``return_state`` / the cell's state
+    arity, see above), or ``(h_seq, state)`` when ``return_sequence`` is set
+    — the same convention as ``lstm_layer`` / ``gru_layer``.
     """
+    spec = cell_spec(spec)
     if backend not in LSTM_BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; expected one of {LSTM_BACKENDS}")
     if return_state not in ("top", "all"):
         raise ValueError(
             f"return_state must be 'top' or 'all', got {return_state!r}")
+    if spec.state_arity == 1:
+        if backend in ("pallas", "pallas_seq"):
+            raise NotImplementedError(
+                f"backend {backend!r} (float Pallas LSTM kernels) does not "
+                f"support cell kind {spec.kind!r}; use 'sequential', "
+                "'fused', 'fxp' or 'pallas_fxp'")
+        if c0 is not None:
+            raise ValueError(
+                f"cell kind {spec.kind!r} carries a single hidden state; "
+                "c0 must be None")
 
     layers = list(params) if isinstance(params, (list, tuple)) else [params]
     if num_layers is not None and num_layers != len(layers):
@@ -600,34 +836,47 @@ def lstm_forward(
     # loop chains the layers, so the inter-layer hidden-state sequence never
     # bounces through HBM between layers (see kernels/lstm_fxp_seq.py).
     if backend == "pallas_fxp" and len(layers) > 1:
-        from repro.kernels.lstm_fxp_seq import lstm_sequence_fxp_stack_pallas
-
         def stacked_state(s):
             if s is None:
                 return None
             return [state_for(li, s) for li in range(len(layers))]
 
-        out = lstm_sequence_fxp_stack_pallas(
-            xs, [p.w for p in layers], [p.b for p in layers],
-            stacked_state(h0), stacked_state(c0),
+        kernel_kwargs = dict(
             formats=stack_fmt,
             return_sequence=return_sequence, block_b=block_b,
             time_tile=time_tile, interpret=interpret,
             **_lut_kernel_args(luts),
         )
-        if return_sequence:
-            seq, h_all, c_all = out
-            xs = seq
+        ws, bs = [p.w for p in layers], [p.b for p in layers]
+        if spec.state_arity == 1:
+            from repro.kernels.lstm_fxp_seq import gru_sequence_fxp_stack_pallas
+
+            out = gru_sequence_fxp_stack_pallas(
+                xs, ws, bs, stacked_state(h0), **kernel_kwargs)
+            if return_sequence:
+                xs, h_all = out
+            else:
+                h_all = out
+            hs, cs = list(h_all), [None] * len(layers)
         else:
-            h_all, c_all = out
-        hs, cs = list(h_all), list(c_all)
+            from repro.kernels.lstm_fxp_seq import lstm_sequence_fxp_stack_pallas
+
+            out = lstm_sequence_fxp_stack_pallas(
+                xs, ws, bs, stacked_state(h0), stacked_state(c0),
+                **kernel_kwargs)
+            if return_sequence:
+                seq, h_all, c_all = out
+                xs = seq
+            else:
+                h_all, c_all = out
+            hs, cs = list(h_all), list(c_all)
     else:
         hs, cs = [], []
         for li, p in enumerate(layers):
             need_seq = return_sequence or li < len(layers) - 1
             seq, h, c = _forward_one_layer(
-                p, xs, state_for(li, h0), state_for(li, c0), need_seq, backend,
-                None if stack_fmt is None else stack_fmt[li],
+                spec, p, xs, state_for(li, h0), state_for(li, c0), need_seq,
+                backend, None if stack_fmt is None else stack_fmt[li],
                 luts, interpret, block_b, block_h, time_tile)
             hs.append(h)
             cs.append(c)
@@ -642,14 +891,87 @@ def lstm_forward(
 
     if squeeze_batch:
         hs = [h[0] for h in hs]
-        cs = [c[0] for c in cs]
+        cs = [c if c is None else c[0] for c in cs]
         xs = xs[0] if return_sequence else xs
     elif lead_shape is not None:
         hs = [h.reshape(*lead_shape, h.shape[-1]) for h in hs]
-        cs = [c.reshape(*lead_shape, c.shape[-1]) for c in cs]
+        cs = [c if c is None else c.reshape(*lead_shape, c.shape[-1])
+              for c in cs]
         if return_sequence:
             xs = xs.reshape(*lead_shape, *xs.shape[-2:])
-    state = (hs, cs) if return_state == "all" else (hs[-1], cs[-1])
+    if spec.state_arity == 1:
+        state = hs if return_state == "all" else hs[-1]
+    else:
+        state = (hs, cs) if return_state == "all" else (hs[-1], cs[-1])
     if return_sequence:
         return xs, state
     return state
+
+
+def lstm_forward(
+    params,
+    xs: jax.Array,
+    *,
+    backend: str = "fused",
+    fmt: FxpFormat | None = None,
+    luts: dict | None = None,
+    h0=None,
+    c0=None,
+    return_sequence: bool = False,
+    return_state: str = "top",
+    num_layers: int | None = None,
+    interpret: bool | None = None,
+    block_b: int = 128,
+    block_h: int = 128,
+    time_tile: int | None = None,
+):
+    """Run a (stacked) LSTM through one of the six backends.
+
+    The LSTM face of :func:`recurrent_forward` — exact signature and
+    behaviour of the historical entry point; see ``recurrent_forward`` for
+    the parameter documentation (with ``spec=LSTM_CELL``, states are
+    ``(h, c)`` pairs and all six backends are available).
+
+    Returns ``(h_T, c_T)`` (top layer, or per-layer lists with
+    ``return_state="all"``), or ``(h_seq, (h_T, c_T))`` when
+    ``return_sequence`` is set — the same convention as ``lstm_layer``.
+    """
+    return recurrent_forward(
+        LSTM_CELL, params, xs,
+        backend=backend, fmt=fmt, luts=luts, h0=h0, c0=c0,
+        return_sequence=return_sequence, return_state=return_state,
+        num_layers=num_layers, interpret=interpret,
+        block_b=block_b, block_h=block_h, time_tile=time_tile,
+    )
+
+
+def gru_forward(
+    params,
+    xs: jax.Array,
+    *,
+    backend: str = "fused",
+    fmt: FxpFormat | None = None,
+    luts: dict | None = None,
+    h0=None,
+    return_sequence: bool = False,
+    return_state: str = "top",
+    num_layers: int | None = None,
+    interpret: bool | None = None,
+    block_b: int = 128,
+    block_h: int = 128,
+    time_tile: int | None = None,
+):
+    """Run a (stacked) GRU — the arity-1 face of :func:`recurrent_forward`.
+
+    Same conventions as ``lstm_forward`` except the state is a bare ``h``
+    (``h_T``, or a per-layer ``[h_T^l...]`` list with ``return_state="all"``)
+    and there is no ``c0``; backends ``"pallas"``/``"pallas_seq"`` (float
+    Pallas LSTM kernels) are not available.
+    """
+    return recurrent_forward(
+        GRU_CELL, params, xs,
+        backend=backend, fmt=fmt, luts=luts, h0=h0,
+        return_sequence=return_sequence, return_state=return_state,
+        num_layers=num_layers, interpret=interpret,
+        block_b=block_b, block_h=block_h, time_tile=time_tile,
+    )

@@ -34,35 +34,52 @@ import jax.numpy as jnp
 
 from repro.core import fxp as fxp_mod
 from repro.core import lut as lut_mod
+from repro.core.cell import GRUParams, cell_spec
 from repro.core.fxp import FxpFormat
-from repro.core.lstm import LSTMParams, lstm_forward
+from repro.core.lstm import LSTMParams, recurrent_forward
 
 __all__ = [
     "QuantizedLstmModel",
     "quantize_lstm_model",
     "quantized_lstm_forward",
+    "model_cell_kind",
     "Int8Tensor",
     "int8_channelwise",
     "int8_matmul",
 ]
 
 
+def model_cell_kind(lstm: Any) -> str:
+    """Cell kind implied by a params pytree (bare or per-layer list): the
+    param class is the source of truth (``GRUParams`` -> ``"gru"``,
+    ``LSTMParams`` -> ``"lstm"``), so every consumer of a float or quantised
+    model agrees without a side-channel flag."""
+    p0 = lstm[0] if isinstance(lstm, (list, tuple)) else lstm
+    return "gru" if isinstance(p0, GRUParams) else "lstm"
+
+
 @dataclasses.dataclass
 class QuantizedLstmModel:
-    """Fixed-point snapshot of the traffic model (LSTM + dense head).
+    """Fixed-point snapshot of the traffic model (recurrent stack + dense
+    head).
 
-    ``lstm`` is a bare ``LSTMParams`` for the paper's single-layer model, or
-    a per-layer list for stacked models — either form flows straight into
-    ``lstm_forward`` and ``SensorFleetEngine``."""
+    ``lstm`` is a bare params object (``LSTMParams``, or ``GRUParams`` for a
+    GRU model) for the paper's single-layer model, or a per-layer list for
+    stacked models — either form flows straight into ``recurrent_forward``
+    and ``SensorFleetEngine``.  ``cell`` records the cell kind; it is kept
+    as the LAST aux field so pytrees flattened before it existed still
+    unflatten (defaulting to ``"lstm"``)."""
 
-    lstm: Any                   # LSTMParams or [LSTMParams], int32 (x,y) storage
+    lstm: Any                   # cell params or [params], int32 (x,y) storage
     dense_w: jax.Array
     dense_b: jax.Array
     fmt: Any                    # FxpFormat | LayerFormats | StackFormats
     lut_depth: int | None       # None = full-precision activations
+    cell: str = "lstm"          # "lstm" | "gru"
 
     def tree_flatten(self):
-        return (self.lstm, self.dense_w, self.dense_b), (self.fmt, self.lut_depth)
+        return ((self.lstm, self.dense_w, self.dense_b),
+                (self.fmt, self.lut_depth, self.cell))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -77,7 +94,7 @@ jax.tree_util.register_pytree_node(
 def quantize_lstm_model(params: Any, fmt, lut_depth: int | None) -> QuantizedLstmModel:
     """PTQ of the trained float model (params as produced by
     ``repro.models.lstm_model.init_traffic_model``; single-layer or
-    stacked).
+    stacked, LSTM or GRU — the cell kind is read off the param class).
 
     ``fmt`` may be a single ``FxpFormat`` (every tensor on one grid — the
     paper's method), or a ``LayerFormats``/``StackFormats``: each layer's
@@ -86,9 +103,11 @@ def quantize_lstm_model(params: Any, fmt, lut_depth: int | None) -> QuantizedLst
     parameter storage).  The dense head is quantised at the top layer's data
     format — the format its ``h_T`` input arrives in.
     """
-    def q_layer(p: LSTMParams, lfmt: FxpFormat) -> LSTMParams:
-        return LSTMParams(w=fxp_mod.quantize(p.w, lfmt),
-                          b=fxp_mod.quantize(p.b, lfmt))
+    def q_layer(p, lfmt: FxpFormat):
+        # type(p) keeps the param class (LSTMParams / GRUParams) — the cell
+        # kind survives quantisation without a side channel.
+        return type(p)(w=fxp_mod.quantize(p.w, lfmt),
+                       b=fxp_mod.quantize(p.b, lfmt))
 
     lstm = params["lstm"]
     n_layers = len(lstm) if isinstance(lstm, (list, tuple)) else 1
@@ -101,13 +120,14 @@ def quantize_lstm_model(params: Any, fmt, lut_depth: int | None) -> QuantizedLst
         dense_b=fxp_mod.quantize(params["dense"]["b"], sf.out_fmt),
         fmt=fmt,
         lut_depth=lut_depth,
+        cell=model_cell_kind(lstm),
     )
 
 
 def quantized_lstm_forward(qmodel: QuantizedLstmModel, xs: jax.Array,
                            backend: str = "fxp") -> jax.Array:
-    """Bitstream-exact inference: float input -> quantise -> fixed-point LSTM
-    (+ LUT activations) -> fixed-point dense -> dequantise.
+    """Bitstream-exact inference: float input -> quantise -> fixed-point
+    recurrent stack (+ LUT activations) -> fixed-point dense -> dequantise.
 
     ``xs``: (..., n_seq, n_i) float.  Returns (..., n_o) float predictions.
     ``backend``: ``"fxp"`` (jnp scan simulator) or ``"pallas_fxp"`` (the fused
@@ -116,13 +136,15 @@ def quantized_lstm_forward(qmodel: QuantizedLstmModel, xs: jax.Array,
     """
     if backend not in ("fxp", "pallas_fxp"):
         raise ValueError(f"quantised forward needs an fxp backend, got {backend!r}")
+    spec = cell_spec(qmodel.cell)
     fmt = qmodel.fmt
     lstm = qmodel.lstm
     n_layers = len(lstm) if isinstance(lstm, (list, tuple)) else 1
     sf = fxp_mod.as_stack_formats(fmt, n_layers)
     luts = lut_mod.make_lut_pair(qmodel.lut_depth) if qmodel.lut_depth else None
     qxs = fxp_mod.quantize(xs, sf.in_fmt)
-    qh, _ = lstm_forward(lstm, qxs, backend=backend, fmt=fmt, luts=luts)
+    out = recurrent_forward(spec, lstm, qxs, backend=backend, fmt=fmt, luts=luts)
+    qh = out[0] if spec.state_arity == 2 else out
     qy = fxp_mod.fxp_matmul(qh, qmodel.dense_w, sf.out_fmt, bias=qmodel.dense_b)
     return fxp_mod.dequantize(qy, sf.out_fmt)
 

@@ -61,6 +61,16 @@ sequences of any length at the single-block kernel's steady-state rate.  A
 ragged tail (``T % tt != 0``) is padded and masked inside the kernel,
 preserving integer-exactness.
 
+Cell-generic template (``repro.core.cell.CellSpec``): the kernel body is a
+template over the cell kind — the gate-major layout generalises from
+``(L*4, F, Hp)`` to ``(L*n_gates, F, Hp)``, the per-gate static shift
+constants come from the first ``n_gates`` entries of each layer's gate
+formats, and only the elementwise tail (C2) and the state arity differ per
+cell.  ``gru_sequence_fxp_stack_pallas`` / ``gru_sequence_fxp_pallas`` run
+the 3-gate, single-state GRU (gate order ``r, z, n``; candidate matmul over
+``[x_t, r_t * h]``; no ``c`` inputs/outputs/scratch) through the same
+machinery — oracle ``repro.kernels.ref.gru_sequence_fxp_ref``.
+
 Bit-exactness: every operation replicates ``repro.core.fxp`` /
 ``repro.core.lut`` arithmetic operation-for-operation (same rounding mode,
 same saturation points, same float32 index computation), so in interpret
@@ -82,9 +92,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.cell import cell_spec
 from repro.core.fxp import FxpFormat, LayerFormats, StackFormats, as_stack_formats
 
-__all__ = ["lstm_sequence_fxp_pallas", "lstm_sequence_fxp_stack_pallas"]
+__all__ = [
+    "lstm_sequence_fxp_pallas",
+    "lstm_sequence_fxp_stack_pallas",
+    "gru_sequence_fxp_pallas",
+    "gru_sequence_fxp_stack_pallas",
+]
 
 
 def _int_dot(a, b):
@@ -93,14 +109,15 @@ def _int_dot(a, b):
     )
 
 
-def _lstm_seq_fxp_kernel(
-    xs_ref, w_ref, b_ref, sig_ref, tanh_ref, h0_ref, c0_ref,
+def _rnn_seq_fxp_kernel(
+    xs_ref, w_ref, b_ref, sig_ref, tanh_ref,
     *refs,
+    cell_kind: str,      # "lstm" | "gru" — selects the elementwise tail (C2)
     n_layers: int,
     time_tile: int,
     n_seq: int,
     has_tail: bool,
-    fmt_spec: tuple,     # per layer: ((x_d, y_d), 4 x (x_g, y_g)) — static
+    fmt_spec: tuple,     # per layer: ((x_d, y_d), n_gates x (x_g, y_g)) — static
     h_sizes: tuple,      # per layer: real H_l (<= Hp) — static
     sig_lo: float,
     sig_step: float,
@@ -112,19 +129,30 @@ def _lstm_seq_fxp_kernel(
     mxu_onehot: bool,
     return_sequence: bool,
 ):
-    h_scr, c_scr = refs[-2], refs[-1]       # (L, bb, Hp): every layer's state
-    out_refs = refs[:-2]
+    spec = cell_spec(cell_kind)
+    arity, n_gates = spec.state_arity, spec.n_gates
+    # Remaining refs, in order: state inputs (h0 [, c0]), outputs
+    # ([h_seq,] h [, c]) and VMEM scratch (h [, c]) — each state tensor is
+    # (L, bb, Hp); arity-1 cells simply have no c slots.
+    h0_ref = refs[0]
+    c0_ref = refs[1] if arity == 2 else None
+    scr = refs[len(refs) - arity:]
+    out_refs = refs[arity:len(refs) - arity]
+    h_scr = scr[0]
+    c_scr = scr[1] if arity == 2 else None
+    h_seq_ref = None
     if return_sequence:
-        h_seq_ref, h_out_ref, c_out_ref = out_refs
-    else:
-        h_out_ref, c_out_ref = out_refs
+        h_seq_ref, out_refs = out_refs[0], out_refs[1:]
+    h_out_ref = out_refs[0]
+    c_out_ref = out_refs[1] if arity == 2 else None
 
     tb = pl.program_id(1)                   # time-chunk index (sequential)
 
     @pl.when(tb == 0)
-    def _():                                # fresh batch tile: load h0/c0
+    def _():                                # fresh batch tile: load h0 (and c0)
         h_scr[...] = h0_ref[...]
-        c_scr[...] = c0_ref[...]
+        if arity == 2:
+            c_scr[...] = c0_ref[...]
 
     w = w_ref[...]                      # (L*4, F, Hp) int32 — loaded once (C5)
     b = b_ref[...]                      # (L*4, Hp) int32
@@ -178,83 +206,116 @@ def _lstm_seq_fxp_kernel(
 
     t0 = tb * time_tile                    # global index of this chunk's step 0
 
-    def step(t, hc):
-        hs, cs = hc                                    # (L, bb, Hp) each
+    def step(t, state):
+        hs = state[0]                                  # (L, bb, Hp)
+        cs = state[1] if arity == 2 else None
         inp = xs_ref[:, t, :]                          # (bb, in_w) dynamic slice
         new_h, new_c = [], []
         for l in range(n_layers):                      # unrolled at trace time
             (xd, yd), gate_fmts = fmt_spec[l]
             H_l = h_sizes[l]
-            qh, qc = hs[l], cs[l]
-            qxh = jnp.concatenate([inp, qh], axis=-1)  # (bb, F)
-            # C1: stacked-gate matmul — per-gate int32 accumulators are
-            # identical to the (F, 4H) stacked form, so gate-major keeps
-            # bit-exactness; zero-padded rows x zero-padded inputs add 0.
-            # The accumulator carries 2*xd fractional bits; each gate's
-            # rescale shift 2*xd - x_g lands directly in that gate's format.
-            z = [shift_rs(_int_dot(qxh, w[4 * l + g])
-                          + (b[4 * l + g][None, :] << xd),
-                          2 * xd - gate_fmts[g][0], gate_fmts[g][1])
-                 for g in range(4)]
-            i_t = act_sig(z[0], gate_fmts[0][0], xd, yd)
-            f_t = act_sig(z[1], gate_fmts[1][0], xd, yd)
-            g_t = act_tanh(z[2], gate_fmts[2][0], xd, yd)
-            o_t = act_sig(z[3], gate_fmts[3][0], xd, yd)
-            # C2: fused elementwise tail, same saturation order as the oracle
-            # (each product rescaled+saturated, then the sum saturated).
+            qh = hs[l]
+            # C2 building block: rescale+saturate after every multiply.
             fmul = lambda a, bb_: shift_rs(a * bb_, xd, yd)
-            qc_new = sat(fmul(f_t, qc) + fmul(i_t, g_t), yd)
-            qh_new = fmul(o_t, act_tanh(qc_new, xd, xd, yd))
+
+            # C1: stacked-gate matmul — per-gate int32 accumulators are
+            # identical to the (F, n_gates*H) stacked form, so gate-major
+            # keeps bit-exactness; zero-padded rows x zero-padded inputs add
+            # 0.  The accumulator carries 2*xd fractional bits; each gate's
+            # rescale shift 2*xd - x_g lands directly in that gate's format.
+            def zgate(g, x_in):
+                return shift_rs(_int_dot(x_in, w[n_gates * l + g])
+                                + (b[n_gates * l + g][None, :] << xd),
+                                2 * xd - gate_fmts[g][0], gate_fmts[g][1])
+
+            if cell_kind == "lstm":
+                qc = cs[l]
+                qxh = jnp.concatenate([inp, qh], axis=-1)  # (bb, F)
+                z = [zgate(g, qxh) for g in range(4)]
+                i_t = act_sig(z[0], gate_fmts[0][0], xd, yd)
+                f_t = act_sig(z[1], gate_fmts[1][0], xd, yd)
+                g_t = act_tanh(z[2], gate_fmts[2][0], xd, yd)
+                o_t = act_sig(z[3], gate_fmts[3][0], xd, yd)
+                # C2: fused elementwise tail, same saturation order as the
+                # oracle (each product rescaled+saturated, sum saturated).
+                qc_new = sat(fmul(f_t, qc) + fmul(i_t, g_t), yd)
+                qh_new = fmul(o_t, act_tanh(qc_new, xd, xd, yd))
+            else:                                      # gru (see core.cell)
+                qxh = jnp.concatenate([inp, qh], axis=-1)
+                r_t = act_sig(zgate(0, qxh), gate_fmts[0][0], xd, yd)
+                z_t = act_sig(zgate(1, qxh), gate_fmts[1][0], xd, yd)
+                # Candidate gate's matmul runs over [x_t, r_t * h_{t-1}] —
+                # the reset is applied to the state ENTERING the matmul.
+                qxh2 = jnp.concatenate([inp, fmul(r_t, qh)], axis=-1)
+                n_t = act_tanh(zgate(2, qxh2), gate_fmts[2][0], xd, yd)
+                # h' = (1 - z)*n + z*h with 1 exactly on-grid as 1 << xd.
+                one_minus_z = sat(jnp.int32(1 << xd) - z_t, yd)
+                qh_new = sat(fmul(one_minus_z, n_t) + fmul(z_t, qh), yd)
+                qc_new = None
             if H_l < Hp:
                 # Padded lanes must stay zero: a zero pre-activation maps to
-                # a NON-zero activation (sigmoid(0) = 0.5), so without the
-                # mask garbage would accumulate in h/c beyond H_l.
+                # a NON-zero activation (sigmoid(0) = 0.5, and the midpoint-
+                # sampled tanh LUT bin at 0 need not be 0), so without the
+                # mask garbage would accumulate in the state beyond H_l.
                 lane = jax.lax.broadcasted_iota(jnp.int32, qh_new.shape, 1)
                 qh_new = jnp.where(lane < H_l, qh_new, 0)
-                qc_new = jnp.where(lane < H_l, qc_new, 0)
+                if qc_new is not None:
+                    qc_new = jnp.where(lane < H_l, qc_new, 0)
             if has_tail:
                 # Padded steps past n_seq must not advance the recurrence.
                 valid = t0 + t < n_seq
                 qh_new = jnp.where(valid, qh_new, qh)
-                qc_new = jnp.where(valid, qc_new, qc)
+                if qc_new is not None:
+                    qc_new = jnp.where(valid, qc_new, cs[l])
             new_h.append(qh_new)
-            new_c.append(qc_new)
+            if qc_new is not None:
+                new_c.append(qc_new)
             if l + 1 < n_layers:
                 # Layer l's fresh h_t is layer l+1's input AT THIS TIMESTEP —
                 # it stays in VMEM/registers, never visiting HBM.  Requantise
                 # into layer l+1's data format (fxp_convert, static shift).
                 nxt_xd, nxt_yd = fmt_spec[l + 1][0]
-                inp = qh_new
+                nxt = qh_new
                 if (xd, yd) != (nxt_xd, nxt_yd):
-                    inp = shift_rs(inp, xd - nxt_xd, nxt_yd)
+                    nxt = shift_rs(nxt, xd - nxt_xd, nxt_yd)
                 if in_w != Hp:
-                    inp = jnp.pad(inp, ((0, 0), (0, in_w - Hp)))
+                    nxt = jnp.pad(nxt, ((0, 0), (0, in_w - Hp)))
+                inp = nxt
         if return_sequence:
             h_seq_ref[:, t, :] = new_h[-1]             # top layer only
-        return jnp.stack(new_h), jnp.stack(new_c)
+        if arity == 2:
+            return jnp.stack(new_h), jnp.stack(new_c)
+        return (jnp.stack(new_h),)
 
-    hs, cs = jax.lax.fori_loop(0, time_tile, step, (h_scr[...], c_scr[...]))
+    init = (h_scr[...], c_scr[...]) if arity == 2 else (h_scr[...],)
+    state = jax.lax.fori_loop(0, time_tile, step, init)
+    hs = state[0]
     h_scr[...] = hs                        # state persists to the next chunk
-    c_scr[...] = cs
     h_out_ref[...] = hs                    # same (i, 0) block every chunk:
-    c_out_ref[...] = cs                    # the final chunk's write survives
+    if arity == 2:                         # the final chunk's write survives
+        cs = state[1]
+        c_scr[...] = cs
+        c_out_ref[...] = cs
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "fmt_spec", "h_sizes", "sig_lo", "sig_hi", "tanh_lo", "tanh_hi",
-        "return_sequence", "block_b", "time_tile", "mxu_onehot", "interpret",
+        "cell_kind", "fmt_spec", "h_sizes", "sig_lo", "sig_hi", "tanh_lo",
+        "tanh_hi", "return_sequence", "block_b", "time_tile", "mxu_onehot",
+        "interpret",
     ),
 )
-def _lstm_seq_fxp_call(
+def _rnn_seq_fxp_call(
     qxs, w4, b4, sig_table, tanh_table, qh0, qc0, *,
-    fmt_spec, h_sizes, sig_lo, sig_hi, tanh_lo, tanh_hi,
+    cell_kind, fmt_spec, h_sizes, sig_lo, sig_hi, tanh_lo, tanh_hi,
     return_sequence, block_b, time_tile, mxu_onehot, interpret,
 ):
+    spec = cell_spec(cell_kind)
+    arity, n_gates = spec.state_arity, spec.n_gates
     B, T, in_w = qxs.shape
-    L4, F, Hp = w4.shape
-    L = L4 // 4
+    Lg, F, Hp = w4.shape
+    L = Lg // n_gates
     use_lut = sig_table.shape[0] > 1 or tanh_table.shape[0] > 1
     sig_depth = sig_table.shape[0]
     tanh_depth = tanh_table.shape[0]
@@ -264,7 +325,8 @@ def _lstm_seq_fxp_call(
     if pad_b:
         qxs = jnp.pad(qxs, ((0, pad_b), (0, 0), (0, 0)))
         qh0 = jnp.pad(qh0, ((0, 0), (0, pad_b), (0, 0)))
-        qc0 = jnp.pad(qc0, ((0, 0), (0, pad_b), (0, 0)))
+        if arity == 2:
+            qc0 = jnp.pad(qc0, ((0, 0), (0, pad_b), (0, 0)))
     Bp = B + pad_b
 
     tt = T if time_tile is None else min(time_tile, T)
@@ -275,7 +337,8 @@ def _lstm_seq_fxp_call(
     n_tt = Tp // tt
 
     kernel = functools.partial(
-        _lstm_seq_fxp_kernel,
+        _rnn_seq_fxp_kernel,
+        cell_kind=cell_kind,
         n_layers=L, time_tile=tt, n_seq=T, has_tail=bool(pad_t),
         fmt_spec=fmt_spec, h_sizes=h_sizes,
         sig_lo=sig_lo, sig_step=(sig_hi - sig_lo) / sig_depth, sig_depth=sig_depth,
@@ -284,47 +347,52 @@ def _lstm_seq_fxp_call(
         use_lut=use_lut, mxu_onehot=mxu_onehot, return_sequence=return_sequence,
     )
 
-    out_specs = [
-        pl.BlockSpec((L, bb, Hp), lambda i, t: (0, i, 0)),
-        pl.BlockSpec((L, bb, Hp), lambda i, t: (0, i, 0)),
-    ]
-    out_shape = [
-        jax.ShapeDtypeStruct((L, Bp, Hp), jnp.int32),
-        jax.ShapeDtypeStruct((L, Bp, Hp), jnp.int32),
-    ]
+    state_spec = lambda: pl.BlockSpec((L, bb, Hp), lambda i, t: (0, i, 0))
+    out_specs = [state_spec() for _ in range(arity)]
+    out_shape = [jax.ShapeDtypeStruct((L, Bp, Hp), jnp.int32)
+                 for _ in range(arity)]
     if return_sequence:
         out_specs = [pl.BlockSpec((bb, tt, Hp), lambda i, t: (i, t, 0))] + out_specs
         out_shape = [jax.ShapeDtypeStruct((Bp, Tp, Hp), jnp.int32)] + out_shape
+
+    in_specs = [
+        pl.BlockSpec((bb, tt, in_w), lambda i, t: (i, t, 0)),
+        pl.BlockSpec((Lg, F, Hp), lambda i, t: (0, 0, 0)),
+        pl.BlockSpec((Lg, Hp), lambda i, t: (0, 0)),
+        pl.BlockSpec((1, sig_depth), lambda i, t: (0, 0)),
+        pl.BlockSpec((1, tanh_depth), lambda i, t: (0, 0)),
+    ] + [state_spec() for _ in range(arity)]
+    operands = [qxs, w4, b4, sig_table.reshape(1, sig_depth),
+                tanh_table.reshape(1, tanh_depth), qh0]
+    if arity == 2:
+        operands.append(qc0)
 
     outs = pl.pallas_call(
         kernel,
         # Batch tiles outer, time chunks inner: the innermost grid dimension
         # iterates fastest, so for each batch tile the chunks run in order and
-        # the VMEM scratch legally carries h/c from chunk to chunk.
+        # the VMEM scratch legally carries the state from chunk to chunk.
         grid=(Bp // bb, n_tt),
-        in_specs=[
-            pl.BlockSpec((bb, tt, in_w), lambda i, t: (i, t, 0)),
-            pl.BlockSpec((L4, F, Hp), lambda i, t: (0, 0, 0)),
-            pl.BlockSpec((L4, Hp), lambda i, t: (0, 0)),
-            pl.BlockSpec((1, sig_depth), lambda i, t: (0, 0)),
-            pl.BlockSpec((1, tanh_depth), lambda i, t: (0, 0)),
-            pl.BlockSpec((L, bb, Hp), lambda i, t: (0, i, 0)),
-            pl.BlockSpec((L, bb, Hp), lambda i, t: (0, i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=[
-            pltpu.VMEM((L, bb, Hp), jnp.int32),  # h, all layers, across chunks
-            pltpu.VMEM((L, bb, Hp), jnp.int32),  # c, all layers, across chunks
+            # per-state-tensor scratch: all layers' h (and c), across chunks
+            pltpu.VMEM((L, bb, Hp), jnp.int32) for _ in range(arity)
         ],
         # Neither grid dimension is safely parallelisable: time chunks carry
         # the recurrence, and batch tiles re-initialise the shared scratch.
         compiler_params=pltpu.TPUCompilerParams(
             dimension_semantics=("arbitrary", "arbitrary")),
         interpret=interpret,
-    )(qxs, w4, b4, sig_table.reshape(1, sig_depth),
-      tanh_table.reshape(1, tanh_depth), qh0, qc0)
+    )(*operands)
 
+    if arity == 1:
+        if return_sequence:
+            h_seq, h = outs
+            return h_seq[:B, :T], h[:, :B]
+        (h,) = outs
+        return h[:, :B]
     if return_sequence:
         h_seq, h, c = outs
         return h_seq[:B, :T], h[:, :B], c[:, :B]
@@ -332,32 +400,35 @@ def _lstm_seq_fxp_call(
     return h[:, :B], c[:, :B]
 
 
-def _pack_gate_major(qw, qb, n_in_l, in_w, H, Hp):
-    """One layer's stacked ``(F_l, 4H)`` weights -> gate-major
-    ``(4, in_w + Hp, Hp)`` with the input rows at ``[0:n_in_l]``, the hidden
-    rows at ``[in_w:in_w+H]`` and the real output columns at ``[0:H]``; every
-    other row/column is zero (zero rows meet zero-padded inputs, and zero
-    columns keep padded output lanes inert)."""
+def _pack_gate_major(qw, qb, n_in_l, in_w, H, Hp, n_gates=4):
+    """One layer's stacked ``(F_l, n_gates*H)`` weights -> gate-major
+    ``(n_gates, in_w + Hp, Hp)`` with the input rows at ``[0:n_in_l]``, the
+    hidden rows at ``[in_w:in_w+H]`` and the real output columns at
+    ``[0:H]``; every other row/column is zero (zero rows meet zero-padded
+    inputs, and zero columns keep padded output lanes inert)."""
     F_l = qw.shape[0]
-    wl = qw.reshape(F_l, 4, H).transpose(1, 0, 2)           # (4, F_l, H)
+    wl = qw.reshape(F_l, n_gates, H).transpose(1, 0, 2)     # (n_gates, F_l, H)
     if n_in_l == in_w and H == Hp:
         packed = wl
     else:
-        packed = jnp.zeros((4, in_w + Hp, Hp), jnp.int32)
+        packed = jnp.zeros((n_gates, in_w + Hp, Hp), jnp.int32)
         packed = packed.at[:, :n_in_l, :H].set(wl[:, :n_in_l, :])
         packed = packed.at[:, in_w:in_w + H, :H].set(wl[:, n_in_l:, :])
-    qb = qb.reshape(4, H)
+    qb = qb.reshape(n_gates, H)
     if H != Hp:
         qb = jnp.pad(qb, ((0, 0), (0, Hp - H)))
     return packed, qb
 
 
-def _fmt_spec(formats: StackFormats) -> tuple:
+def _fmt_spec(formats: StackFormats, n_gates=4) -> tuple:
     """Hashable static spec the jitted call keys on: per layer,
-    ``((x_d, y_d), ((x_i, y_i), (x_f, y_f), (x_g, y_g), (x_o, y_o)))``."""
+    ``((x_d, y_d), n_gates x (x_g, y_g))``.  Only the first ``n_gates``
+    entries of each layer's gate container are consumed, so the arity-4
+    uniform default serves 3-gate cells too."""
     return tuple(
         ((lf.data.frac_bits, lf.data.total_bits),
-         tuple((g.frac_bits, g.total_bits) for g in lf.gates))
+         tuple((lf.gates[g].frac_bits, lf.gates[g].total_bits)
+               for g in range(n_gates)))
         for lf in formats.layers)
 
 
@@ -399,21 +470,40 @@ def lstm_sequence_fxp_stack_pallas(
     ``return_sequence=True``, ``(qh_seq, qh, qc)`` (``qh_seq`` is the top
     layer's ``(B, T, H_{L-1})``).
     """
+    return _stack_fxp_pallas(
+        "lstm", qxs, qws, qbs, qh0, qc0, sig_table, tanh_table,
+        formats=formats, frac_bits=frac_bits, total_bits=total_bits,
+        sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
+        return_sequence=return_sequence, block_b=block_b, time_tile=time_tile,
+        mxu_onehot=mxu_onehot, interpret=interpret,
+    )
+
+
+def _stack_fxp_pallas(
+    cell_kind, qxs, qws, qbs, qh0, qc0, sig_table, tanh_table, *,
+    formats, frac_bits, total_bits, sig_lo, sig_hi, tanh_lo, tanh_hi,
+    return_sequence, block_b, time_tile, mxu_onehot, interpret,
+):
+    """Shared cell-generic body of the ``*_sequence_fxp_stack_pallas``
+    faces: validate, pack the gate-major layout, pad/stack the state and
+    dispatch to the jitted kernel call."""
+    spec = cell_spec(cell_kind)
+    arity, n_gates = spec.state_arity, spec.n_gates
     if time_tile is not None and time_tile < 1:
         raise ValueError(f"time_tile must be >= 1, got {time_tile}")
     qws, qbs = list(qws), list(qbs)
     if len(qws) != len(qbs) or not qws:
         raise ValueError("qws and qbs must be equal-length, non-empty lists")
     L = len(qws)
-    hs_l = [w.shape[1] // 4 for w in qws]
+    hs_l = [w.shape[1] // n_gates for w in qws]
     n_in = qxs.shape[-1]
     B = qxs.shape[0]
     for l, w in enumerate(qws):
         exp_in = n_in if l == 0 else hs_l[l - 1]
         if w.shape[0] != exp_in + hs_l[l]:
             raise ValueError(
-                f"layer {l}: want weights ({exp_in + hs_l[l]}, {4 * hs_l[l]}), "
-                f"got {w.shape}")
+                f"layer {l}: want weights "
+                f"({exp_in + hs_l[l]}, {n_gates * hs_l[l]}), got {w.shape}")
 
     if formats is None:
         formats = FxpFormat(frac_bits, total_bits)
@@ -425,10 +515,10 @@ def lstm_sequence_fxp_stack_pallas(
     if n_in < in_w:
         qxs = jnp.pad(qxs, ((0, 0), (0, 0), (0, in_w - n_in)))
     packed = [_pack_gate_major(w, b, n_in if l == 0 else hs_l[l - 1],
-                               in_w, hs_l[l], Hp)
+                               in_w, hs_l[l], Hp, n_gates)
               for l, (w, b) in enumerate(zip(qws, qbs))]
-    w4 = jnp.concatenate([p[0] for p in packed], axis=0)    # (L*4, F, Hp)
-    b4 = jnp.concatenate([p[1] for p in packed], axis=0)    # (L*4, Hp)
+    w4 = jnp.concatenate([p[0] for p in packed], axis=0)    # (L*n_gates, F, Hp)
+    b4 = jnp.concatenate([p[1] for p in packed], axis=0)    # (L*n_gates, Hp)
 
     def to_stacked(s, name):
         if s is None:
@@ -447,7 +537,7 @@ def lstm_sequence_fxp_stack_pallas(
         return s
 
     qh0 = to_stacked(qh0, "qh0")
-    qc0 = to_stacked(qc0, "qc0")
+    qc0 = to_stacked(qc0, "qc0") if arity == 2 else None
     if (sig_table is None) != (tanh_table is None):
         raise ValueError("pass both LUT tables or neither")
     # depth-1 dummies signal "no LUT" to the jitted call (real tables have
@@ -456,15 +546,25 @@ def lstm_sequence_fxp_stack_pallas(
         sig_table = jnp.zeros((1,), jnp.float32)
     if tanh_table is None:
         tanh_table = jnp.zeros((1,), jnp.float32)
-    out = _lstm_seq_fxp_call(
+    out = _rnn_seq_fxp_call(
         qxs, w4, b4,
         jnp.asarray(sig_table, jnp.float32), jnp.asarray(tanh_table, jnp.float32),
         qh0, qc0,
-        fmt_spec=_fmt_spec(formats), h_sizes=tuple(hs_l),
+        cell_kind=cell_kind,
+        fmt_spec=_fmt_spec(formats, n_gates), h_sizes=tuple(hs_l),
         sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
         return_sequence=return_sequence, block_b=block_b, time_tile=time_tile,
         mxu_onehot=mxu_onehot, interpret=interpret,
     )
+    if arity == 1:
+        if return_sequence:
+            h_seq, h = out
+            h_seq = h_seq[..., :hs_l[-1]]
+        else:
+            h = out
+        if not uniform_h:
+            h = [h[li, :, :hs_l[li]] for li in range(L)]
+        return (h_seq, h) if return_sequence else h
     if return_sequence:
         h_seq, h, c = out
         h_seq = h_seq[..., :hs_l[-1]]
@@ -474,6 +574,92 @@ def lstm_sequence_fxp_stack_pallas(
         h = [h[li, :, :hs_l[li]] for li in range(L)]
         c = [c[li, :, :hs_l[li]] for li in range(L)]
     return (h_seq, h, c) if return_sequence else (h, c)
+
+
+def gru_sequence_fxp_stack_pallas(
+    qxs: jax.Array,                 # (B, T, n_in) int32 fixed point
+    qws,                            # length-L sequence of (F_l, 3*H_l) int32
+    qbs,                            # length-L sequence of (3*H_l,) int32
+    qh0=None,                       # (L, B, H) int32, or per-layer list of (B, H_l)
+    sig_table: jax.Array | None = None,   # (depth,) float32 LUT, None = exact sigmoid
+    tanh_table: jax.Array | None = None,  # (depth,) float32 LUT, None = exact tanh
+    *,
+    formats: StackFormats | LayerFormats | FxpFormat | None = None,
+    frac_bits: int = 8,
+    total_bits: int = 16,
+    sig_lo: float = -8.0,
+    sig_hi: float = 8.0,
+    tanh_lo: float = -4.0,
+    tanh_hi: float = 4.0,
+    return_sequence: bool = False,
+    block_b: int = 128,
+    time_tile: int | None = None,
+    mxu_onehot: bool = True,
+    interpret: bool = False,
+):
+    """Run an ``L``-layer quantised GRU stack in ONE Pallas kernel — the
+    arity-1 instantiation of the same kernel template as
+    ``lstm_sequence_fxp_stack_pallas`` (gate-major weights ``(L*3, F, Hp)``,
+    gate order ``r, z, n``; no cell-state tensors anywhere: one state input,
+    one state output, one VMEM scratch buffer).  Semantics per
+    ``repro.core.cell.GRU_CELL``; oracle:
+    ``repro.kernels.ref.gru_sequence_fxp_ref`` /
+    ``repro.core.lstm.gru_layer_fxp``.
+
+    Returns ``qh`` stacked ``(L, B, H)`` for a uniform-``H`` stack, or
+    per-layer lists of ``(B, H_l)`` otherwise; with
+    ``return_sequence=True``, ``(qh_seq, qh)`` (``qh_seq`` is the top
+    layer's ``(B, T, H_{L-1})``).
+    """
+    return _stack_fxp_pallas(
+        "gru", qxs, qws, qbs, qh0, None, sig_table, tanh_table,
+        formats=formats, frac_bits=frac_bits, total_bits=total_bits,
+        sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
+        return_sequence=return_sequence, block_b=block_b, time_tile=time_tile,
+        mxu_onehot=mxu_onehot, interpret=interpret,
+    )
+
+
+def gru_sequence_fxp_pallas(
+    qxs: jax.Array,                 # (B, T, n_in) int32 fixed point
+    qw: jax.Array,                  # (F, 3H) int32 stacked gates, r,z,n blocks
+    qb: jax.Array,                  # (3H,) int32
+    qh0: jax.Array | None = None,   # (B, H) int32
+    sig_table: jax.Array | None = None,   # (depth,) float32 LUT, None = exact sigmoid
+    tanh_table: jax.Array | None = None,  # (depth,) float32 LUT, None = exact tanh
+    *,
+    formats: LayerFormats | FxpFormat | None = None,
+    frac_bits: int = 8,
+    total_bits: int = 16,
+    sig_lo: float = -8.0,
+    sig_hi: float = 8.0,
+    tanh_lo: float = -4.0,
+    tanh_hi: float = 4.0,
+    return_sequence: bool = False,
+    block_b: int = 128,
+    time_tile: int | None = None,
+    mxu_onehot: bool = True,
+    interpret: bool = False,
+):
+    """Run the whole quantised GRU recurrence in one Pallas kernel (one
+    layer) — the ``L = 1`` face of ``gru_sequence_fxp_stack_pallas``, same
+    conventions as ``lstm_sequence_fxp_pallas`` minus the cell state.
+    Returns ``qh_T`` int32, or ``(qh_seq, qh_T)`` with
+    ``return_sequence=True``.
+    """
+    out = gru_sequence_fxp_stack_pallas(
+        qxs, [qw], [qb],
+        None if qh0 is None else qh0[None],
+        sig_table, tanh_table,
+        formats=formats, frac_bits=frac_bits, total_bits=total_bits,
+        sig_lo=sig_lo, sig_hi=sig_hi, tanh_lo=tanh_lo, tanh_hi=tanh_hi,
+        return_sequence=return_sequence, block_b=block_b, time_tile=time_tile,
+        mxu_onehot=mxu_onehot, interpret=interpret,
+    )
+    if return_sequence:
+        h_seq, h = out
+        return h_seq, h[0]
+    return out[0]
 
 
 def lstm_sequence_fxp_pallas(

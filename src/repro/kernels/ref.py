@@ -13,6 +13,7 @@ __all__ = [
     "lstm_step_ref",
     "lstm_sequence_ref",
     "lstm_sequence_fxp_ref",
+    "gru_sequence_fxp_ref",
     "lut_act_ref",
     "fxp_matmul_ref",
     "ssd_chunk_scan_ref",
@@ -131,6 +132,94 @@ def lstm_sequence_fxp_ref(
     if return_sequence:
         return jnp.moveaxis(seq, 0, 1), qh, qc
     return qh, qc
+
+
+def gru_sequence_fxp_ref(
+    qxs: jax.Array,                 # (B, T, n_in) int32 fixed point
+    qw: jax.Array,                  # (n_in + H, 3H) int32 stacked gates (r,z,n)
+    qb: jax.Array,                  # (3H,) int32
+    qh0: jax.Array | None = None,   # (B, H) int32
+    sig_table: jax.Array | None = None,   # (depth,) float32; None = exact sigmoid
+    tanh_table: jax.Array | None = None,  # (depth,) float32; None = exact tanh
+    *,
+    frac_bits: int = 8,
+    total_bits: int = 16,
+    sig_bounds: tuple[float, float] = (-8.0, 8.0),
+    tanh_bounds: tuple[float, float] = (-4.0, 4.0),
+    return_sequence: bool = False,
+):
+    """Fused fixed-point GRU sequence oracle — the bit-level spec of
+    ``gru_sequence_fxp_pallas`` (and of ``repro.core.lstm.gru_layer_fxp``,
+    restated self-contained), using the same ``(x, y)`` arithmetic as
+    ``lstm_sequence_fxp_ref``.
+
+    Cell semantics (``repro.core.cell.GRU_CELL``): gates ``r, z`` come from
+    the stacked matmul over ``[x_t, h_{t-1}]`` (columns ``[0, 2H)``); the
+    candidate ``n`` is a second matmul over ``[x_t, r_t * h_{t-1}]``
+    (columns ``[2H, 3H)``); ``h_t = (1 - z_t) * n_t + z_t * h_{t-1}`` with
+    ``1`` represented exactly as ``1 << frac_bits``.
+
+    Returns ``qh_T`` int32, or ``(qh_seq, qh_T)`` when ``return_sequence``
+    is set.
+    """
+    B = qxs.shape[0]
+    H = qw.shape[1] // 3
+    qmin, qmax = -(1 << (total_bits - 1)), (1 << (total_bits - 1)) - 1
+    half = (1 << (frac_bits - 1)) if frac_bits > 0 else 0
+    scale = 2.0 ** (-frac_bits)
+
+    def sat(v):
+        return jnp.clip(v, qmin, qmax)
+
+    def rescale(acc):
+        return sat((acc + half) >> frac_bits)
+
+    def quant(y):
+        # fxp.quantize: round-half-up (floor(v + 0.5)), then saturate.
+        return sat(jnp.floor(y * (1 << frac_bits) + 0.5).astype(jnp.int32))
+
+    def lut(q, table, bounds):
+        lo, hi = bounds
+        step = (hi - lo) / table.shape[0]
+        x = q.astype(jnp.float32) * scale
+        idx = jnp.clip(jnp.floor((x - lo) / step).astype(jnp.int32),
+                       0, table.shape[0] - 1)
+        return quant(jnp.take(table, idx, axis=0))
+
+    if sig_table is None:
+        act_sig = lambda q: quant(jax.nn.sigmoid(q.astype(jnp.float32) * scale))
+    else:
+        act_sig = lambda q: lut(q, sig_table, sig_bounds)
+    if tanh_table is None:
+        act_tanh = lambda q: quant(jnp.tanh(q.astype(jnp.float32) * scale))
+    else:
+        act_tanh = lambda q: lut(q, tanh_table, tanh_bounds)
+
+    def fmul(a, b):
+        return rescale(a.astype(jnp.int32) * b.astype(jnp.int32))
+
+    one = jnp.int32(1 << frac_bits)
+
+    def step(qh, qx_t):
+        qxh = jnp.concatenate([qx_t, qh], axis=-1)
+        acc = jnp.matmul(qxh.astype(jnp.int32), qw[:, :2 * H].astype(jnp.int32))
+        acc = acc + (qb[:2 * H].astype(jnp.int32) << frac_bits)
+        z_rz = rescale(acc)
+        r_t = act_sig(z_rz[..., :H])
+        z_t = act_sig(z_rz[..., H:])
+        qxrh = jnp.concatenate([qx_t, fmul(r_t, qh)], axis=-1)
+        acc_n = jnp.matmul(qxrh.astype(jnp.int32), qw[:, 2 * H:].astype(jnp.int32))
+        acc_n = acc_n + (qb[2 * H:].astype(jnp.int32) << frac_bits)
+        n_t = act_tanh(rescale(acc_n))
+        one_minus_z = sat(one - z_t)
+        qh = sat(fmul(one_minus_z, n_t) + fmul(z_t, qh))
+        return qh, (qh if return_sequence else None)
+
+    qh0 = qh0 if qh0 is not None else jnp.zeros((B, H), jnp.int32)
+    qh, seq = jax.lax.scan(step, qh0, jnp.moveaxis(qxs, 1, 0))
+    if return_sequence:
+        return jnp.moveaxis(seq, 0, 1), qh
+    return qh
 
 
 def lut_act_ref(x: jax.Array, table: jax.Array, lo: float, hi: float):

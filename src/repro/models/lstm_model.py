@@ -16,8 +16,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.lstm import (LSTMParams, init_lstm_params, lstm_cell_fused,
-                             lstm_forward, lstm_layer)
+from repro.core.lstm import (LSTMParams, init_recurrent_params,
+                             lstm_cell_fused, lstm_layer, recurrent_forward)
+from repro.core.quantize import model_cell_kind
 from repro.data.traffic import TrafficDataset
 from repro.training.optimizer import OptState, adam, step_decay_schedule
 
@@ -33,20 +34,21 @@ __all__ = [
 
 def init_traffic_model(key: jax.Array, input_size: int = 1, hidden_size: int = 20,
                        out_size: int = 1, dtype=jnp.float32,
-                       num_layers: int = 1) -> dict[str, Any]:
-    """``num_layers=1`` (the paper's Fig. 1 model) stores a bare
-    ``LSTMParams`` under ``"lstm"``; deeper stacks (the follow-up
-    parameterised-architecture direction) store a per-layer list, which
-    ``lstm_forward`` — and therefore training, PTQ and the fleet engine —
-    accepts directly."""
+                       num_layers: int = 1, cell: str = "lstm") -> dict[str, Any]:
+    """``num_layers=1`` (the paper's Fig. 1 model) stores a bare params
+    object (``LSTMParams``, or ``GRUParams`` for ``cell="gru"``) under
+    ``"lstm"``; deeper stacks (the follow-up parameterised-architecture
+    direction) store a per-layer list, which ``recurrent_forward`` — and
+    therefore training, PTQ and the fleet engine — accepts directly.  The
+    param class carries the cell kind, so no flag travels with the pytree."""
     k1, k2 = jax.random.split(key)
     if num_layers == 1:
-        lstm = init_lstm_params(k1, input_size, hidden_size, dtype)
+        lstm = init_recurrent_params(cell, k1, input_size, hidden_size, dtype)
     else:
         keys = jax.random.split(k1, num_layers)
-        lstm = [init_lstm_params(keys[li],
-                                 input_size if li == 0 else hidden_size,
-                                 hidden_size, dtype)
+        lstm = [init_recurrent_params(cell, keys[li],
+                                      input_size if li == 0 else hidden_size,
+                                      hidden_size, dtype)
                 for li in range(num_layers)]
     limit = (6.0 / (hidden_size + out_size)) ** 0.5
     return {
@@ -64,21 +66,30 @@ def traffic_forward(params: dict[str, Any], xs: jax.Array,
     """xs: (..., n_seq, n_i) -> (..., n_o).  Only the last hidden state feeds
     the dense layer (paper: n_f == n_h).
 
-    ``backend`` selects the LSTM datapath through ``lstm_forward`` (training
-    uses the default ``"fused"``, which is differentiable).  ``cell`` is the
-    legacy escape hatch for a custom cell callable, and activation-injection
-    kwargs (``sigmoid_fn``/``tanh_fn``, the C3 LUT pattern) imply the fused
-    cell; both route through ``lstm_layer`` directly.
+    The cell kind is read off the param class (``LSTMParams``/``GRUParams``),
+    so LSTM and GRU models flow through the same call.  ``backend`` selects
+    the datapath through ``recurrent_forward`` (training uses the default
+    ``"fused"``, which is differentiable).  ``cell`` is the legacy escape
+    hatch for a custom *LSTM* cell callable, and activation-injection kwargs
+    (``sigmoid_fn``/``tanh_fn``, the C3 LUT pattern) imply the fused cell;
+    both route through ``lstm_layer`` directly.
     """
+    kind = model_cell_kind(params["lstm"])
     if cell is not None or "sigmoid_fn" in kwargs or "tanh_fn" in kwargs:
         if isinstance(params["lstm"], (list, tuple)):
             raise ValueError("the legacy cell/activation-injection path is "
                              "single-layer; stacked models go through "
                              "lstm_forward backends")
+        if kind != "lstm":
+            raise ValueError("the legacy cell/activation-injection path takes "
+                             "an LSTM cell callable; GRU models go through "
+                             "recurrent_forward backends")
         h, _ = lstm_layer(params["lstm"], xs, cell=cell or lstm_cell_fused,
                           **kwargs)
     else:
-        h, _ = lstm_forward(params["lstm"], xs, backend=backend, **kwargs)
+        out = recurrent_forward(kind, params["lstm"], xs, backend=backend,
+                                **kwargs)
+        h = out[0] if kind == "lstm" else out
     return h @ params["dense"]["w"] + params["dense"]["b"]
 
 
@@ -111,14 +122,16 @@ def train_traffic_model(
     lr0: float = 0.01,
     hidden_size: int = 20,
     num_layers: int = 1,
+    cell: str = "lstm",
     verbose: bool = False,
 ) -> tuple[dict[str, Any], list[float]]:
     """Full-precision training, faithful to §5.1 (``num_layers > 1`` trains
-    the stacked variant through the same recipe)."""
+    the stacked variant, ``cell="gru"`` the GRU variant, through the same
+    recipe)."""
     key = jax.random.PRNGKey(seed)
     params = init_traffic_model(key, input_size=data.x_train.shape[-1],
                                 hidden_size=hidden_size,
-                                num_layers=num_layers)
+                                num_layers=num_layers, cell=cell)
     opt = adam()  # paper betas/eps are the defaults
     opt_state = opt.init(params)
     sched = step_decay_schedule(lr0, step_size=3, gamma=0.5)

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fxp as fxp_mod
+from repro.core.cell import GRU_CELL, GRUParams
 from repro.core.fxp import FxpFormat
 from repro.core.lstm import GATE_ORDER, LSTMParams
 
@@ -88,16 +89,46 @@ def _observe_layer(p: LSTMParams, xs: jax.Array) -> tuple[jax.Array, dict[str, j
     return jnp.moveaxis(h_seq, 0, -2), maxes
 
 
+def _observe_gru_layer(p: GRUParams, xs: jax.Array) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """GRU sibling of ``_observe_layer`` (gate order ``r, z, n``): same
+    observation points minus the cell state, which the GRU does not have —
+    downstream format selection keys off the gates actually observed."""
+    n_h = p.hidden_size
+    batch_shape = xs.shape[:-2]
+    h0 = jnp.zeros((*batch_shape, n_h), jnp.float32)
+
+    def step(h, x_t):
+        xh = jnp.concatenate([x_t, h], axis=-1)
+        z_rz = xh @ p.w[:, :2 * n_h] + p.b[:2 * n_h]
+        zr, zz = z_rz[..., :n_h], z_rz[..., n_h:]
+        r_t = jax.nn.sigmoid(zr)
+        z_t = jax.nn.sigmoid(zz)
+        xrh = jnp.concatenate([x_t, r_t * h], axis=-1)
+        zn = xrh @ p.w[:, 2 * n_h:] + p.b[2 * n_h:]
+        n_t = jnp.tanh(zn)
+        h_t = (1.0 - z_t) * n_t + z_t * h
+        obs = {f"preact_{name}": jnp.max(jnp.abs(zg))
+               for name, zg in zip(GRU_CELL.gates, (zr, zz, zn))}
+        obs["hidden"] = jnp.max(jnp.abs(h_t))
+        return h_t, (h_t, obs)
+
+    _, (h_seq, obs_seq) = jax.lax.scan(step, h0, jnp.moveaxis(xs, -2, 0))
+    maxes = {k: jnp.max(v) for k, v in obs_seq.items()}
+    return jnp.moveaxis(h_seq, 0, -2), maxes
+
+
 def observe_traffic_model(params: dict[str, Any], xs: jax.Array) -> CalibrationStats:
-    """Run the float traffic model over calibration windows ``xs``
-    (``(N, n_seq, n_i)``) and record every quantisation point's range."""
+    """Run the float traffic model (LSTM or GRU — read off the param class)
+    over calibration windows ``xs`` (``(N, n_seq, n_i)``) and record every
+    quantisation point's range."""
     xs = jnp.asarray(xs, jnp.float32)
     stats: dict[str, float] = {"input": float(jnp.max(jnp.abs(xs)))}
     lstm = params["lstm"]
     layers = list(lstm) if isinstance(lstm, (list, tuple)) else [lstm]
     seq = xs
     for li, p in enumerate(layers):
-        seq, maxes = _observe_layer(p, seq)
+        observe = _observe_gru_layer if isinstance(p, GRUParams) else _observe_layer
+        seq, maxes = observe(p, seq)
         stats[f"weights/l{li}"] = float(jnp.max(jnp.abs(p.w)))
         stats[f"bias/l{li}"] = float(jnp.max(jnp.abs(p.b)))
         for k, v in maxes.items():
@@ -169,11 +200,23 @@ def _data_range(stats: CalibrationStats, li: int, n_layers: int) -> float:
     input for layer 0, the previous layer's hidden state above).  The top
     layer additionally shares its grid with the dense head (``fxp_matmul`` at
     ``out_fmt`` quantises ``dense_w`` and lands ``dense_out`` on that grid)."""
-    keys = [f"weights/l{li}", f"bias/l{li}", f"cell/l{li}", f"hidden/l{li}"]
+    keys = [f"weights/l{li}", f"bias/l{li}", f"hidden/l{li}"]
+    if f"cell/l{li}" in stats.max_abs:  # absent for GRU layers (no cell state)
+        keys.append(f"cell/l{li}")
     keys.append("input" if li == 0 else f"hidden/l{li - 1}")
     if li == n_layers - 1:
         keys += ["dense_w", "dense_out"]
     return max(stats.max_abs[k] for k in keys)
+
+
+def _gate_names(stats: CalibrationStats, li: int) -> tuple[str, ...]:
+    """Gate names observed for layer ``li`` — ``(r, z, n)`` when the stats
+    came from a GRU layer, the LSTM ``GATE_ORDER`` otherwise.  Keying off the
+    recorded observations keeps format selection cell-generic without a cell
+    flag travelling with the stats."""
+    if f"preact_{GRU_CELL.gates[0]}/l{li}" in stats.max_abs:
+        return GRU_CELL.gates
+    return GATE_ORDER
 
 
 def suggest_stack_formats(stats: CalibrationStats, total_bits: int = 16,
@@ -198,7 +241,7 @@ def suggest_stack_formats(stats: CalibrationStats, total_bits: int = 16,
         gates = fxp_mod.GateFormats(*(
             FxpFormat.for_range(stats.max_abs[f"preact_{g}/l{li}"],
                                 total_bits, headroom_bits)
-            for g in GATE_ORDER))
+            for g in _gate_names(stats, li)))
         layers.append(fxp_mod.LayerFormats(data=data, gates=gates))
     return fxp_mod.StackFormats(layers=tuple(layers))
 
@@ -238,6 +281,6 @@ def calibrated_stack_formats(params: dict[str, Any], xs: jax.Array,
         data = fit(_data_range(stats, li, n_layers), f"data/l{li}")
         gates = fxp_mod.GateFormats(*(
             fit(stats.max_abs[f"preact_{g}/l{li}"], f"preact_{g}/l{li}")
-            for g in GATE_ORDER))
+            for g in _gate_names(stats, li)))
         layers.append(fxp_mod.LayerFormats(data=data, gates=gates))
     return fxp_mod.StackFormats(layers=tuple(layers))

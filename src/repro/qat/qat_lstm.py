@@ -36,10 +36,12 @@ import numpy as np
 
 from repro.core import fxp as fxp_mod
 from repro.core import lut as lut_mod
+from repro.core.cell import GRUParams
 from repro.core.fxp import FxpFormat
 from repro.core.lstm import LSTMParams
 from repro.core.lut import make_lut_pair
-from repro.core.quantize import QuantizedLstmModel, quantize_lstm_model
+from repro.core.quantize import (QuantizedLstmModel, model_cell_kind,
+                                 quantize_lstm_model)
 from repro.models.lstm_model import init_traffic_model, mse
 from repro.parallel.sharding import RunContext
 from repro.qat.fakequant import (fake_act, fake_fxp_add, fake_fxp_matmul,
@@ -50,6 +52,7 @@ from repro.training.trainer import TrainState, make_train_step
 __all__ = [
     "qat_quantize_params",
     "qat_lstm_cell",
+    "qat_gru_cell",
     "qat_lstm_forward",
     "qat_traffic_forward",
     "freeze",
@@ -71,8 +74,9 @@ def qat_quantize_params(params: dict[str, Any], fmt) -> dict[str, Any]:
     n_layers = len(lstm) if isinstance(lstm, (list, tuple)) else 1
     sf = fxp_mod.as_stack_formats(fmt, n_layers)
 
-    def q(p: LSTMParams, lfmt: FxpFormat) -> LSTMParams:
-        return LSTMParams(w=fake_quant(p.w, lfmt), b=fake_quant(p.b, lfmt))
+    def q(p, lfmt: FxpFormat):
+        # type(p) keeps the param class (LSTMParams / GRUParams).
+        return type(p)(w=fake_quant(p.w, lfmt), b=fake_quant(p.b, lfmt))
 
     return {
         "lstm": ([q(p, sf[li].data) for li, p in enumerate(lstm)]
@@ -141,6 +145,46 @@ def qat_lstm_cell(
     return h_t, c_t
 
 
+def qat_gru_cell(
+    qp: GRUParams,
+    x_t: jax.Array,
+    h: jax.Array,
+    fmt,
+    luts: dict | None = None,
+) -> jax.Array:
+    """One QAT GRU step, op-for-op the schedule of ``gru_cell_fxp`` (gate
+    order ``r, z, n``): ``r``/``z`` out of the stacked matmul over
+    ``[x, h]``, the candidate's matmul over ``[x, fake_fxp_mul(r, h)]``, and
+    the state update with the constant 1 exactly on-grid —
+    ``h' = (1 - z) * n + z * h`` in saturating fixed point.  ``qp`` must
+    already be fake-quantised (on-grid)."""
+    lf = fmt if isinstance(fmt, fxp_mod.LayerFormats) else fxp_mod.LayerFormats.uniform(fmt)
+    data = lf.data
+    hdim = qp.hidden_size
+    xh = jnp.concatenate([x_t, h], axis=-1)
+    if lf.is_uniform:
+        z_rz = fake_fxp_matmul(xh, qp.w[:, :2 * hdim], qp.b[:2 * hdim], data)
+        zs = [z_rz[..., :hdim], z_rz[..., hdim:]]
+        gate_acts = [_acts(data, luts)] * 3
+    else:
+        # Independent per-gate-column accumulators, as in qat_lstm_cell.
+        zs = [fake_fxp_matmul(xh, qp.w[:, k * hdim:(k + 1) * hdim],
+                              qp.b[k * hdim:(k + 1) * hdim], data, lf.gates[k])
+              for k in range(2)]
+        gate_acts = [_acts(lf.gates[k], luts, data) for k in range(3)]
+    r_t = gate_acts[0][0](zs[0])
+    z_t = gate_acts[1][0](zs[1])
+    xrh = jnp.concatenate([x_t, fake_fxp_mul(r_t, h, data)], axis=-1)
+    z_n = fake_fxp_matmul(xrh, qp.w[:, 2 * hdim:], qp.b[2 * hdim:], data,
+                          None if lf.is_uniform else lf.gates[2])
+    n_t = gate_acts[2][1](z_n)
+    # 1.0 is exactly on-grid (1 << frac_bits); fake_quant only saturates,
+    # mirroring the integer saturate(one - z_t) with the clipped STE backward.
+    one_minus_z = fake_quant(1.0 - z_t, data)
+    return fake_fxp_add(fake_fxp_mul(one_minus_z, n_t, data),
+                        fake_fxp_mul(z_t, h, data), data)
+
+
 def qat_lstm_forward(
     params,
     xs: jax.Array,
@@ -151,30 +195,36 @@ def qat_lstm_forward(
     return_sequence: bool = False,
     return_state: str = "top",
 ):
-    """QAT forward of a (stacked) LSTM — the fake-quant mirror of
-    ``lstm_forward(backend="fxp")``.
+    """QAT forward of a (stacked) recurrent model — the fake-quant mirror of
+    ``recurrent_forward(backend="fxp")``.  The cell kind is read off the
+    param class (``LSTMParams``/``GRUParams``), as everywhere else.
 
-    ``params``: float ``LSTMParams`` or a per-layer list (master weights —
-    fake-quantised inside, so the weight-STE gradient reaches them).
-    ``xs``: float ``(..., n_seq, n_in)`` — fake-quantised on entry (the input
-    quantisation point).  ``fmt``: ``FxpFormat``, ``LayerFormats`` or
-    ``StackFormats`` — with per-layer formats, layer ``l`` runs entirely at
-    ``fmt[l]`` and the inter-layer hidden sequence passes through
-    ``fake_quant`` at layer ``l+1``'s data format, which on on-grid inputs
-    equals the integer ``fxp_convert`` requantisation exactly.  ``h0``/``c0``:
-    on-grid per-layer lists or a single array, as in ``lstm_forward``.
-    Returns the ``lstm_forward`` convention: ``(h, c)`` / per-layer lists /
-    ``(h_seq, state)``.
+    ``params``: float ``LSTMParams``/``GRUParams`` or a per-layer list
+    (master weights — fake-quantised inside, so the weight-STE gradient
+    reaches them).  ``xs``: float ``(..., n_seq, n_in)`` — fake-quantised on
+    entry (the input quantisation point).  ``fmt``: ``FxpFormat``,
+    ``LayerFormats`` or ``StackFormats`` — with per-layer formats, layer
+    ``l`` runs entirely at ``fmt[l]`` and the inter-layer hidden sequence
+    passes through ``fake_quant`` at layer ``l+1``'s data format, which on
+    on-grid inputs equals the integer ``fxp_convert`` requantisation exactly.
+    ``h0``/``c0``: on-grid per-layer lists or a single array, as in
+    ``recurrent_forward`` (``c0`` must stay ``None`` for GRU).  Returns the
+    ``recurrent_forward`` convention: ``(h, c)`` for LSTM, bare ``h`` for
+    GRU, per-layer lists with ``return_state="all"``, ``(h_seq, state)``
+    with ``return_sequence=True``.
 
     Quantising any output with its layer's data format yields exactly the
-    integers of ``lstm_forward(quantised params, quantised xs,
+    integers of ``recurrent_forward(quantised params, quantised xs,
     backend="fxp"|"pallas_fxp")``.
     """
     if return_state not in ("top", "all"):
         raise ValueError(f"return_state must be 'top' or 'all', got {return_state!r}")
     layers = list(params) if isinstance(params, (list, tuple)) else [params]
+    is_gru = isinstance(layers[0], GRUParams)
+    if is_gru and c0 is not None:
+        raise ValueError("cell 'gru' has a single hidden state; c0 must be None")
     sf = fxp_mod.as_stack_formats(fmt, len(layers))
-    qls = [LSTMParams(w=fake_quant(p.w, sf[li].data), b=fake_quant(p.b, sf[li].data))
+    qls = [type(p)(w=fake_quant(p.w, sf[li].data), b=fake_quant(p.b, sf[li].data))
            for li, p in enumerate(layers)]
 
     xs_ndim = jnp.asarray(xs).ndim  # per-layer state rank: xs rank - 1 + H
@@ -207,19 +257,27 @@ def qat_lstm_forward(
         n_h = qp.hidden_size
         batch_shape = seq.shape[:-2]
         h = state_for(li, h0)
-        c = state_for(li, c0)
         h = h if h is not None else jnp.zeros((*batch_shape, n_h), jnp.float32)
-        c = c if c is not None else jnp.zeros((*batch_shape, n_h), jnp.float32)
-
-        def step(carry, x_t, qp=qp, lfmt=lfmt):
-            h, c = carry
-            h, c = qat_lstm_cell(qp, x_t, h, c, lfmt, luts)
-            return (h, c), (h if need_seq else None)
-
         xs_t = jnp.moveaxis(seq, -2, 0)
-        (h, c), out_seq = jax.lax.scan(step, (h, c), xs_t)
+
+        if is_gru:
+            def gstep(h, x_t, qp=qp, lfmt=lfmt):
+                h = qat_gru_cell(qp, x_t, h, lfmt, luts)
+                return h, (h if need_seq else None)
+
+            h, out_seq = jax.lax.scan(gstep, h, xs_t)
+        else:
+            c = state_for(li, c0)
+            c = c if c is not None else jnp.zeros((*batch_shape, n_h), jnp.float32)
+
+            def step(carry, x_t, qp=qp, lfmt=lfmt):
+                h, c = carry
+                h, c = qat_lstm_cell(qp, x_t, h, c, lfmt, luts)
+                return (h, c), (h if need_seq else None)
+
+            (h, c), out_seq = jax.lax.scan(step, (h, c), xs_t)
+            cs.append(c)
         hs.append(h)
-        cs.append(c)
         if need_seq:
             seq = jnp.moveaxis(out_seq, 0, -2)
             if li + 1 < len(layers) and sf[li + 1].data != lfmt.data:
@@ -228,7 +286,10 @@ def qat_lstm_forward(
                 # shift + saturate), with the clipped STE as backward.
                 seq = fake_quant(seq, sf[li + 1].data)
 
-    state = (hs, cs) if return_state == "all" else (hs[-1], cs[-1])
+    if is_gru:
+        state = hs if return_state == "all" else hs[-1]
+    else:
+        state = (hs, cs) if return_state == "all" else (hs[-1], cs[-1])
     if return_sequence:
         return seq, state
     return state
@@ -245,7 +306,8 @@ def qat_traffic_forward(params: dict[str, Any], xs: jax.Array, fmt,
     lstm = params["lstm"]
     n_layers = len(lstm) if isinstance(lstm, (list, tuple)) else 1
     sf = fxp_mod.as_stack_formats(fmt, n_layers)
-    h, _ = qat_lstm_forward(lstm, xs, fmt, luts)
+    out = qat_lstm_forward(lstm, xs, fmt, luts)
+    h = out[0] if model_cell_kind(lstm) == "lstm" else out
     w = fake_quant(params["dense"]["w"], sf.out_fmt)
     b = fake_quant(params["dense"]["b"], sf.out_fmt)
     return fake_fxp_matmul(h, w, b, sf.out_fmt)
@@ -278,13 +340,15 @@ class QatTrafficModel:
     hidden_size: int = 20
     out_size: int = 1
     num_layers: int = 1
+    cell: str = "lstm"
 
     def __post_init__(self):
         self.luts = make_lut_pair(self.lut_depth) if self.lut_depth else None
 
     def init(self, key: jax.Array) -> dict[str, Any]:
         return init_traffic_model(key, self.input_size, self.hidden_size,
-                                  self.out_size, num_layers=self.num_layers)
+                                  self.out_size, num_layers=self.num_layers,
+                                  cell=self.cell)
 
     def loss(self, params, batch, ctx) -> tuple[jax.Array, dict]:
         xs, ys = batch
@@ -320,7 +384,8 @@ def finetune_qat(
     model = QatTrafficModel(
         fmt=fmt, lut_depth=lut_depth,
         input_size=lstm0.input_size, hidden_size=lstm0.hidden_size,
-        out_size=params["dense"]["w"].shape[1], num_layers=n_layers)
+        out_size=params["dense"]["w"].shape[1], num_layers=n_layers,
+        cell=model_cell_kind(params["lstm"]))
 
     xs = np.asarray(data.x_train)
     ys = np.asarray(data.y_train)

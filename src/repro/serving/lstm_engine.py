@@ -29,6 +29,14 @@ Design (mirrors ``repro.serving.engine.ServingEngine``, the LM analogue):
   is discarded with a ``where`` on the slot axis, so occupancy never changes
   the bits of occupied lanes.
 
+Cells: the engine is cell-generic over ``repro.core.cell`` — pass
+``GRUParams`` (bare or per-layer list) and the fleet serves the fxp GRU
+through the same fused stack kernel, carrying ``(L, slots, H)`` hidden state
+only (``_qc`` is ``None``; streams' ``qc0``/``qc`` must be/stay ``None``).
+The cell kind rides in the checkpoint manifest (``extra["engine"]["cell"]``,
+defaulting to ``"lstm"`` for pre-GRU checkpoints) and restore refuses a
+params/checkpoint cell mismatch.
+
 Stacked models: pass a *list* of per-layer ``LSTMParams`` (uniform hidden
 size ``H``).  ``fmt`` may be a single ``FxpFormat`` or a per-layer/per-gate
 ``StackFormats`` (mixed precision): the kernel rescales between formats
@@ -90,8 +98,9 @@ import numpy as np
 from jax.sharding import NamedSharding
 
 from repro.core import fxp as fxp_mod
+from repro.core.cell import GRUParams, cell_spec
 from repro.core.fxp import FxpFormat, StackFormats
-from repro.core.lstm import LSTMParams, lstm_forward
+from repro.core.lstm import LSTMParams, lstm_forward, recurrent_forward
 from repro.parallel.sharding import fleet_slot_specs, shard_map
 
 __all__ = ["SensorStream", "SensorFleetEngine", "SlotShardingError"]
@@ -117,10 +126,10 @@ class SensorStream:
     rid: int
     qxs: np.ndarray                     # (T, n_in) int32, quantised to fmt
     qh0: np.ndarray | None = None       # (H,) or (L, H) int32 initial state (default 0)
-    qc0: np.ndarray | None = None
+    qc0: np.ndarray | None = None       # LSTM only; must stay None on a GRU engine
     h_seq: np.ndarray | None = None     # (T, H) int32 top layer, filled as chunks land
     qh: np.ndarray | None = None        # (H,) or (L, H) int32 final hidden state
-    qc: np.ndarray | None = None        # (H,) or (L, H) int32 final cell state
+    qc: np.ndarray | None = None        # (H,) or (L, H) int32 final cell state (None for GRU)
     done: bool = False
     cursor: int = 0                     # timesteps consumed so far
     error: str | None = None            # set when rejected or quarantined
@@ -154,6 +163,11 @@ class SensorFleetEngine:
         layers = list(qparams) if isinstance(qparams, (list, tuple)) else [qparams]
         if not layers:
             raise ValueError("qparams must name at least one layer")
+        # cell kind is read off the param class (GRUParams -> "gru"), like
+        # everywhere else in the datapath; it decides the state arity (GRU
+        # carries h only — self._qc stays None and streams' qc0/qc are None)
+        self.cell = "gru" if isinstance(layers[0], GRUParams) else "lstm"
+        self._arity = cell_spec(self.cell).state_arity
         hidden = {p.hidden_size for p in layers}
         if len(hidden) > 1:
             raise ValueError(
@@ -208,7 +222,8 @@ class SensorFleetEngine:
                          if (1 << k) <= chunk]
         # ALL layers' carry, one lane per slot: the multi-layer state plumbing
         self._qh = jnp.zeros((self.n_layers, batch_slots, self.n_h), jnp.int32)
-        self._qc = jnp.zeros((self.n_layers, batch_slots, self.n_h), jnp.int32)
+        self._qc = (jnp.zeros((self.n_layers, batch_slots, self.n_h), jnp.int32)
+                    if self._arity == 2 else None)
         self.active: dict[int, SensorStream] = {}
         self.quarantined: list[SensorStream] = []   # rejected/poisoned streams
         self.steps_run = 0              # batched kernel invocations so far
@@ -219,33 +234,45 @@ class SensorFleetEngine:
             return_state="all", interpret=interpret, time_tile=time_tile,
         )
 
-        def step_fn(ws, bs, qx, qh, qc, lane_mask):
-            params = [LSTMParams(w, b) for w, b in zip(ws, bs)]
-            # block_b defaults to the batch this trace sees: all slots
-            # unsharded, the per-device slot block under shard_map
-            seq, (hs, cs) = lstm_forward(
-                params, qx, h0=list(qh), c0=list(qc),
-                block_b=qx.shape[0] if block_b is None else block_b,
-                **fwd_kwargs)
-            keep = lane_mask[None, :, None]
-            h = jnp.stack(hs)
-            c = jnp.stack(cs)
-            return seq, jnp.where(keep, h, qh), jnp.where(keep, c, qc)
+        if self.cell == "gru":
+            def step_fn(ws, bs, qx, qh, lane_mask):
+                params = [GRUParams(w, b) for w, b in zip(ws, bs)]
+                seq, hs = recurrent_forward(
+                    "gru", params, qx, h0=list(qh),
+                    block_b=qx.shape[0] if block_b is None else block_b,
+                    **fwd_kwargs)
+                keep = lane_mask[None, :, None]
+                return seq, jnp.where(keep, jnp.stack(hs), qh)
+        else:
+            def step_fn(ws, bs, qx, qh, qc, lane_mask):
+                params = [LSTMParams(w, b) for w, b in zip(ws, bs)]
+                # block_b defaults to the batch this trace sees: all slots
+                # unsharded, the per-device slot block under shard_map
+                seq, (hs, cs) = lstm_forward(
+                    params, qx, h0=list(qh), c0=list(qc),
+                    block_b=qx.shape[0] if block_b is None else block_b,
+                    **fwd_kwargs)
+                keep = lane_mask[None, :, None]
+                h = jnp.stack(hs)
+                c = jnp.stack(cs)
+                return seq, jnp.where(keep, h, qh), jnp.where(keep, c, qc)
 
         self._state_sharding = None
         if self.shard_slots:
             # shard_map over the mesh data axis: each device runs the SAME
             # kernel on its own slot block — no collectives, identical bits
             specs = fleet_slot_specs(data_axis)
+            n_state = self._arity      # (h,) for GRU, (h, c) for LSTM
             step_fn = shard_map(
                 step_fn, mesh=mesh,
                 in_specs=(specs["params"], specs["params"], specs["x"],
-                          specs["state"], specs["state"], specs["mask"]),
-                out_specs=(specs["seq"], specs["state"], specs["state"]),
+                          *(specs["state"],) * n_state, specs["mask"]),
+                out_specs=(specs["seq"], *(specs["state"],) * n_state),
                 check=False)
             self._state_sharding = NamedSharding(mesh, specs["state"])
             self._qh = jax.device_put(self._qh, self._state_sharding)
-            self._qc = jax.device_put(self._qc, self._state_sharding)
+            if self._qc is not None:
+                self._qc = jax.device_put(self._qc, self._state_sharding)
             self._ws = [jax.device_put(w, NamedSharding(mesh, specs["params"]))
                         for w in self._ws]
             self._bs = [jax.device_put(b, NamedSharding(mesh, specs["params"]))
@@ -324,7 +351,14 @@ class SensorFleetEngine:
                 f"range [{in_fmt.qmin}, {in_fmt.qmax}]")
         qxs = qxs.astype(np.int32)
         h0 = self._state_init(stream.rid, stream.qh0, "qh0")
-        c0 = self._state_init(stream.rid, stream.qc0, "qc0")
+        if self._arity == 1:
+            if stream.qc0 is not None:
+                raise ValueError(
+                    f"stream {stream.rid}: qc0 must be None on a GRU engine "
+                    "(the GRU carries a single hidden state)")
+            c0 = None
+        else:
+            c0 = self._state_init(stream.rid, stream.qc0, "qc0")
         free = self.free_slots()
         if not free:
             return False
@@ -333,12 +367,14 @@ class SensorFleetEngine:
         stream.cursor = 0
         stream.h_seq = np.zeros((len(qxs), self.n_h), np.int32)
         self._qh = self._qh.at[:, slot].set(jnp.asarray(h0))
-        self._qc = self._qc.at[:, slot].set(jnp.asarray(c0))
+        if c0 is not None:
+            self._qc = self._qc.at[:, slot].set(jnp.asarray(c0))
         if self._state_sharding is not None:
             # keep the carry pinned to the block partition so the joining
             # stream's state lands on (and stays on) slot_to_shard(slot)
             self._qh = jax.device_put(self._qh, self._state_sharding)
-            self._qc = jax.device_put(self._qc, self._state_sharding)
+            if self._qc is not None:
+                self._qc = jax.device_put(self._qc, self._state_sharding)
         self.active[slot] = stream
         return True
 
@@ -402,9 +438,13 @@ class SensorFleetEngine:
             x[slot] = s.qxs[s.cursor : s.cursor + t_step]
             mask[slot] = True
 
-        seq, self._qh, self._qc = self._step(
-            self._ws, self._bs, jnp.asarray(x), self._qh, self._qc,
-            jnp.asarray(mask))
+        if self._arity == 1:
+            seq, self._qh = self._step(
+                self._ws, self._bs, jnp.asarray(x), self._qh, jnp.asarray(mask))
+        else:
+            seq, self._qh, self._qc = self._step(
+                self._ws, self._bs, jnp.asarray(x), self._qh, self._qc,
+                jnp.asarray(mask))
         self.steps_run += 1
         self.timesteps_run += t_step
 
@@ -416,15 +456,16 @@ class SensorFleetEngine:
             if s.remaining == 0:
                 finished.append(slot)
         if finished:
-            qh_np, qc_np = np.asarray(self._qh), np.asarray(self._qc)
+            qh_np = np.asarray(self._qh)
+            qc_np = None if self._qc is None else np.asarray(self._qc)
             for slot in finished:
                 s = self.active.pop(slot)   # slot freed for the next submit
                 if self.n_layers == 1:      # back-compat: (H,) for one layer
                     s.qh = qh_np[0, slot].copy()
-                    s.qc = qc_np[0, slot].copy()
+                    s.qc = None if qc_np is None else qc_np[0, slot].copy()
                 else:
                     s.qh = qh_np[:, slot].copy()
-                    s.qc = qc_np[:, slot].copy()
+                    s.qc = None if qc_np is None else qc_np[:, slot].copy()
                 s.done = True
 
     def run(self, streams: list[SensorStream]) -> list[SensorStream]:
@@ -468,10 +509,13 @@ class SensorFleetEngine:
                 leaf["qc0"] = np.asarray(s.qc0, np.int32)
             streams[str(slot)] = leaf
             table[str(slot)] = {"rid": s.rid, "cursor": s.cursor}
-        tree = {"qh": self._qh, "qc": self._qc, "streams": streams}
+        tree = {"qh": self._qh, "streams": streams}
+        if self._qc is not None:
+            tree["qc"] = self._qc
         extra = {
             "kind": "sensor_fleet",
             "engine": {
+                "cell": self.cell,
                 "n_layers": self.n_layers, "n_in": self.n_in,
                 "n_h": self.n_h, "batch_slots": self.slots,
                 "chunk": self.chunk, "time_tile": self.time_tile,
@@ -557,6 +601,12 @@ class SensorFleetEngine:
                   else backend,
                   block_b=block_b, interpret=interpret, mesh=mesh,
                   shard_slots=shard_slots, data_axis=data_axis)
+        ckpt_cell = cfg.get("cell", "lstm")   # pre-GRU checkpoints are LSTM
+        if eng.cell != ckpt_cell:
+            raise ValueError(
+                f"qparams are a {eng.cell!r} stack but the checkpoint was "
+                f"saved by a {ckpt_cell!r} fleet — the state geometry and "
+                "integer semantics differ")
         if (eng.n_layers, eng.n_in, eng.n_h) != (cfg["n_layers"], cfg["n_in"],
                                                  cfg["n_h"]):
             raise ValueError(
@@ -581,12 +631,14 @@ class SensorFleetEngine:
         tree, _, _ = manager.restore(template, step=step)
 
         eng._qh = jnp.asarray(np.asarray(tree["qh"]), jnp.int32)
-        eng._qc = jnp.asarray(np.asarray(tree["qc"]), jnp.int32)
+        if eng._arity == 2:
+            eng._qc = jnp.asarray(np.asarray(tree["qc"]), jnp.int32)
         if eng._state_sharding is not None:
             # elastic resharding: the SAME gathered carry, block-partitioned
             # onto the new mesh by the slot->device placement function
             eng._qh = jax.device_put(eng._qh, eng._state_sharding)
-            eng._qc = jax.device_put(eng._qc, eng._state_sharding)
+            if eng._qc is not None:
+                eng._qc = jax.device_put(eng._qc, eng._state_sharding)
         for slot_str, meta in extra["slot_table"].items():
             leaf = tree.get("streams", {})[slot_str]
             # np.array (not asarray): npz-restored buffers arrive read-only

@@ -7,9 +7,10 @@ Rewrites ``lstm_fxp_golden.json`` (single layer),
 top layer's hidden sequence — the multi-layer state-plumbing contract),
 ``lstm_fleet_sharded_golden.json`` (a 2-layer ``SensorFleetEngine`` slot-churn
 schedule whose per-stream integers the slot-sharded engine must reproduce on
-any device count) and ``lstm_qat_frozen_golden.json`` (a QAT-fine-tuned model
-frozen to integers — the trained-then-frozen QAT<->PTQ parity contract) next
-to this file.  See README.md for when (and when not) to regenerate.  Inputs
+any device count), ``gru_fxp_golden.json`` (the single-layer quantised GRU —
+the cell-generic datapath's second cell) and ``lstm_qat_frozen_golden.json``
+(a QAT-fine-tuned model frozen to integers — the trained-then-frozen
+QAT<->PTQ parity contract) next to this file.  See README.md for when (and when not) to regenerate.  Inputs
 and parameters of all but the QAT fixture are drawn as raw integers from a
 fixed seed — no float quantisation on the input side — so those fixtures are
 reproducible everywhere; the LUT tables are float32 sampled once and stored
@@ -30,7 +31,8 @@ import numpy as np
 
 from repro.core.fxp import (FxpFormat, GateFormats, LayerFormats,
                             StackFormats, fmt_to_dict)
-from repro.core.lstm import LSTMParams, lstm_forward, lstm_layer_fxp
+from repro.core.lstm import (GRUParams, LSTMParams, gru_layer_fxp,
+                             lstm_forward, lstm_layer_fxp)
 from repro.core.lut import make_lut_pair
 
 SEED = 20260730
@@ -43,6 +45,7 @@ STACK_OUT_PATH = pathlib.Path(__file__).parent / "lstm_fxp_stack2_golden.json"
 QAT_OUT_PATH = pathlib.Path(__file__).parent / "lstm_qat_frozen_golden.json"
 FLEET_OUT_PATH = pathlib.Path(__file__).parent / "lstm_fleet_sharded_golden.json"
 MIXED_OUT_PATH = pathlib.Path(__file__).parent / "lstm_mixed_golden.json"
+GRU_OUT_PATH = pathlib.Path(__file__).parent / "gru_fxp_golden.json"
 
 # mixed-precision fixture knobs: a hetero-H stack section (kernel padding +
 # lane masking under per-layer/per-gate formats) and a uniform-H fleet
@@ -288,6 +291,44 @@ def regen_mixed() -> None:
     print(f"wrote {MIXED_OUT_PATH} ({MIXED_OUT_PATH.stat().st_size} bytes)")
 
 
+def regen_gru() -> None:
+    """Quantised-GRU fixture (gate order ``r, z, n``, single hidden state):
+    ``gru_layer_fxp`` is the generating simulator; ``test_golden.py`` replays
+    the integers through the simulator AND the fused GRU Pallas kernel, and
+    ``tests/spmd_scripts/check_sharded_fleet.py`` replays the same streams-of-
+    one-window through the slot-sharded fleet."""
+    fmt = FxpFormat(FRAC, TOTAL)
+    rng = np.random.default_rng(SEED + 4)
+    qxs = rng.integers(-2 << FRAC, 2 << FRAC, (B, T, N_IN), dtype=np.int32)
+    qw = rng.integers(-1 << FRAC, 1 << FRAC, (N_IN + N_H, 3 * N_H), dtype=np.int32)
+    qb = rng.integers(-1 << (FRAC - 1), 1 << (FRAC - 1), (3 * N_H,), dtype=np.int32)
+
+    luts = make_lut_pair(LUT_DEPTH)
+    qp = GRUParams(w=jnp.asarray(qw), b=jnp.asarray(qb))
+    h_seq, qh = gru_layer_fxp(qp, jnp.asarray(qxs), fmt, luts,
+                              return_sequence=True)
+
+    golden = {
+        "description": "integer-exact golden for the (x,y) fxp GRU datapath "
+                       "(gates r,z,n; single hidden state); regenerate with "
+                       "tests/golden/regen.py (see README.md)",
+        "seed": SEED + 4,
+        "fmt": {"frac_bits": FRAC, "total_bits": TOTAL},
+        "lut": {"depth": LUT_DEPTH,
+                "sigmoid": _lut_entry(luts, "sigmoid"),
+                "tanh": _lut_entry(luts, "tanh")},
+        "qxs": qxs.tolist(),
+        "qw": qw.tolist(),
+        "qb": qb.tolist(),
+        "outputs": {
+            "h_seq": np.asarray(h_seq).tolist(),
+            "qh": np.asarray(qh).tolist(),
+        },
+    }
+    GRU_OUT_PATH.write_text(json.dumps(golden, indent=1) + "\n")
+    print(f"wrote {GRU_OUT_PATH} ({GRU_OUT_PATH.stat().st_size} bytes)")
+
+
 def regen_qat() -> None:
     """QAT-frozen fixture: train the paper model briefly, fine-tune it under
     the quantiser, freeze, and pin the frozen integers AND their outputs on
@@ -383,4 +424,5 @@ if __name__ == "__main__":
     regen_stack2()
     regen_fleet_sharded()
     regen_mixed()
+    regen_gru()
     regen_qat()

@@ -40,7 +40,8 @@ import jax.numpy as jnp  # noqa: E402
 from repro.checkpoint.checkpoint import CheckpointManager  # noqa: E402
 from repro.checkpoint.elastic import elastic_fleet_restore  # noqa: E402
 from repro.core.fxp import FxpFormat, quantize  # noqa: E402
-from repro.core.lstm import LSTMParams, init_lstm_params  # noqa: E402
+from repro.core.lstm import (GRUParams, LSTMParams,  # noqa: E402
+                             init_gru_params, init_lstm_params)
 from repro.core.lut import make_lut_pair  # noqa: E402
 from repro.parallel.sharding import fleet_mesh  # noqa: E402
 from repro.serving.faults import (FaultPlan, InjectedKill,  # noqa: E402
@@ -180,6 +181,65 @@ def check_kill_restore_reshard_battery():
                       "resumed integer-identical", flush=True)
 
 
+def check_gru_kill_restore_reshard():
+    """Cell-generic restore (ISSUE 8): a 2-layer GRU fleet — single hidden
+    state, ``cell: gru`` in the checkpoint manifest — killed on D devices
+    and restored on D' != D resumes every stream integer-identically (and
+    no stream ever grows a qc)."""
+    qps = []
+    for li in range(2):
+        p = init_gru_params(jax.random.PRNGKey(50 + li),
+                            N_IN if li == 0 else N_H, N_H)
+        qps.append(GRUParams(w=quantize(p.w, FMT), b=quantize(p.b, FMT)))
+    luts = make_lut_pair(64)
+
+    def gru_streams():
+        rng = np.random.default_rng(17)
+        out = []
+        for i, T in enumerate(LENS):
+            qxs = np.asarray(quantize(
+                jnp.asarray(rng.normal(size=(T, N_IN)).astype(np.float32)),
+                FMT))
+            s = SensorStream(rid=i, qxs=qxs)
+            if i == 1:
+                s.qh0 = rng.integers(-100, 100, (2, N_H)).astype(np.int32)
+            out.append(s)
+        return out
+
+    golden = gru_streams()
+    SensorFleetEngine(qps, FMT, luts, batch_slots=SLOTS, chunk=4,
+                      backend="fxp", interpret=True).run(golden)
+    assert all(s.qc is None for s in golden)
+
+    for ndev in RESHARD_TO:
+        with tempfile.TemporaryDirectory() as td:
+            mgr = CheckpointManager(td, keep=3)
+            pending = gru_streams()
+            eng = SensorFleetEngine(qps, FMT, luts, batch_slots=SLOTS,
+                                    chunk=4, backend="fxp", interpret=True,
+                                    mesh=_mesh_for(NDEV))
+            assert eng.cell == "gru", eng.cell
+            plan = FaultPlan(kill_after_steps=5)
+            try:
+                serve_with_checkpoints(eng, pending, mgr, every=2,
+                                       mode="sync", plan=plan)
+            except InjectedKill:
+                pass
+            else:
+                raise AssertionError("the injected kill never fired")
+            mgr.wait()
+            eng2 = SensorFleetEngine.restore(
+                mgr, qps, FMT, luts, mesh=_mesh_for(ndev), interpret=True)
+            assert eng2.cell == "gru", eng2.cell
+            n = _assert_resumed_matches(golden, eng2, pending,
+                                        f"gru reshard {NDEV}->{ndev}")
+            for s in list(eng2.active.values()) + pending:
+                assert s.qc is None, f"gru stream {s.rid} grew a qc"
+            if args.verbose:
+                print(f"  gru D={NDEV} -> D'={ndev}: {n} in-flight streams "
+                      "resumed integer-identical", flush=True)
+
+
 def check_elastic_policy_restore():
     """checkpoint.elastic.elastic_fleet_restore picks the mesh itself from
     the devices alive now (all NDEV forced devices) and resumes exactly."""
@@ -229,6 +289,7 @@ def check_async_checkpoint_restore():
 
 
 _check(check_kill_restore_reshard_battery)
+_check(check_gru_kill_restore_reshard)
 _check(check_elastic_policy_restore)
 _check(check_torn_write_fallback_reshard)
 _check(check_async_checkpoint_restore)

@@ -41,7 +41,8 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.core.fxp import FxpFormat, quantize  # noqa: E402
-from repro.core.lstm import LSTMParams, init_lstm_params, lstm_forward  # noqa: E402
+from repro.core.lstm import (GRUParams, LSTMParams, gru_forward,  # noqa: E402
+                             init_gru_params, init_lstm_params, lstm_forward)
 from repro.core.lut import LutSpec, make_lut_pair  # noqa: E402
 from repro.parallel.sharding import fleet_mesh  # noqa: E402
 from repro.serving.lstm_engine import SensorFleetEngine, SensorStream  # noqa: E402
@@ -220,6 +221,60 @@ def check_mid_flight_join_leave_placement():
     assert shards == sorted(shards) and len(set(shards)) == NDEV, shards
 
 
+def check_gru_stacked_churn():
+    """Cell-generic serving (ISSUE 8): a 2-layer GRU fleet — single hidden
+    state, no qc anywhere — sharded == unsharded == per-stream gru_forward,
+    as integers, with slot churn and one nonzero-h0 stream."""
+    n_layers = 2
+    qps = []
+    for li in range(n_layers):
+        p = init_gru_params(jax.random.PRNGKey(40 + li),
+                            N_IN if li == 0 else N_H, N_H)
+        qps.append(GRUParams(w=quantize(p.w, FMT), b=quantize(p.b, FMT)))
+    luts = make_lut_pair(64)
+
+    def streams(seed=13):
+        rng = np.random.default_rng(seed)
+        lens = [5, 9, 16, 7, 12, 4, 10, 6, 3, 11][: NDEV + 4]
+        out = []
+        for i, T in enumerate(lens):
+            qxs = np.asarray(quantize(
+                jnp.asarray(rng.normal(size=(T, N_IN)).astype(np.float32)),
+                FMT))
+            s = SensorStream(rid=i, qxs=qxs)
+            if i == 1:
+                s.qh0 = rng.integers(-100, 100, (n_layers, N_H)).astype(np.int32)
+            out.append(s)
+        return out
+
+    kw = dict(batch_slots=NDEV, chunk=4, time_tile=4, backend="pallas_fxp",
+              interpret=True)
+    sh, un = streams(), streams()
+    eng = SensorFleetEngine(qps, FMT, luts, mesh=MESH, **kw)
+    assert eng.cell == "gru", eng.cell
+    eng.run(sh)
+    SensorFleetEngine(qps, FMT, luts, **kw).run(un)
+    for s_got, s_want in zip(sh, un):
+        assert s_got.done and s_want.done
+        assert s_got.qc is None and s_want.qc is None
+        np.testing.assert_array_equal(
+            s_got.h_seq, s_want.h_seq,
+            err_msg=f"gru sharded vs unsharded: stream {s_got.rid} h_seq")
+        np.testing.assert_array_equal(
+            s_got.qh, s_want.qh, err_msg=f"gru stream {s_got.rid} qh")
+    for s in sh:
+        h0 = None if s.qh0 is None else jnp.asarray(s.qh0)[:, None]
+        seq, hs = gru_forward(
+            qps, jnp.asarray(s.qxs)[None], backend="pallas_fxp", fmt=FMT,
+            luts=luts, h0=h0, return_sequence=True, return_state="all",
+            block_b=1, time_tile=4, interpret=True)
+        np.testing.assert_array_equal(
+            s.h_seq, np.asarray(seq[0]),
+            err_msg=f"gru stream {s.rid} vs solo gru_forward")
+        np.testing.assert_array_equal(
+            s.qh, np.stack([np.asarray(h[0]) for h in hs]))
+
+
 def check_golden_replay_sharded():
     """The committed fixture's integers, reproduced by the SHARDED engine:
     the cross-device half of the golden contract (test_golden.py replays the
@@ -286,6 +341,7 @@ else:
     _check(check_single_layer_churn_vs_unsharded_and_pallas_fxp)
     _check(check_stacked_l2_churn)
     _check(check_mid_flight_join_leave_placement)
+    _check(check_gru_stacked_churn)
     _check(check_golden_replay_sharded)
 
 if _failures:

@@ -24,7 +24,8 @@ import pytest
 from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
 
 from repro.core.fxp import FxpFormat, quantize
-from repro.core.lstm import (LSTM_BACKENDS, LSTMParams, init_lstm_params,
+from repro.core.lstm import (LSTM_BACKENDS, GRUParams, LSTMParams,
+                             gru_forward, init_gru_params, init_lstm_params,
                              lstm_forward)
 from repro.core.lut import make_lut_pair
 
@@ -32,6 +33,8 @@ RNG = np.random.default_rng(42)
 
 FLOAT_BACKENDS = ("sequential", "fused", "pallas", "pallas_seq")
 FXP_BACKENDS = ("fxp", "pallas_fxp")
+# GRU has no dedicated float Pallas kernels (see core/lstm.py docstring)
+GRU_FLOAT_BACKENDS = ("sequential", "fused")
 
 
 def _setup(n_in, n_h, t, b, key=0):
@@ -330,6 +333,111 @@ def test_time_tile_validation():
 
 
 # ---------------------------------------------------------------------------
+# GRU rows (ISSUE 8): the same contracts through the cell-generic datapath
+# ---------------------------------------------------------------------------
+
+
+def _gru_setup(n_in, n_h, t, b, key=0):
+    params = init_gru_params(jax.random.PRNGKey(key), n_in, n_h)
+    xs = jnp.asarray(RNG.normal(size=(b, t, n_in)).astype(np.float32))
+    return params, xs
+
+
+def _gru_quantized(params, xs, fmt):
+    qp = GRUParams(w=quantize(params.w, fmt), b=quantize(params.b, fmt))
+    return qp, quantize(xs, fmt)
+
+
+def _gru_fxp_outputs(qp, qxs, fmt, luts, time_tile=None,
+                     return_sequence=False):
+    outs = {
+        "fxp": gru_forward(qp, qxs, backend="fxp", fmt=fmt, luts=luts,
+                           return_sequence=return_sequence),
+        "pallas_fxp": gru_forward(qp, qxs, backend="pallas_fxp", fmt=fmt,
+                                  luts=luts, block_b=2,
+                                  return_sequence=return_sequence),
+    }
+    if time_tile is not None:
+        outs[f"pallas_fxp/tt{time_tile}"] = gru_forward(
+            qp, qxs, backend="pallas_fxp", fmt=fmt, luts=luts, block_b=2,
+            time_tile=time_tile, return_sequence=return_sequence)
+    return outs
+
+
+@pytest.mark.cells
+@pytest.mark.parametrize("n_seq,n_h,b,tile", FXP_SHAPES)
+@pytest.mark.parametrize("frac,total", [(8, 16), (6, 12)])
+def test_gru_fxp_backends_integer_equal(n_seq, n_h, b, tile, frac, total):
+    fmt = FxpFormat(frac, total)
+    params, xs = _gru_setup(2, n_h, n_seq, b)
+    qp, qxs = _gru_quantized(params, xs, fmt)
+    luts = make_lut_pair(64)
+    _assert_int_equal_pairwise(_gru_fxp_outputs(qp, qxs, fmt, luts, tile))
+
+
+@pytest.mark.cells
+@pytest.mark.parametrize("n_seq,n_h,b,tile", [(32, 20, 3, 4), (17, 33, 2, 5)])
+def test_gru_fxp_backends_integer_equal_with_sequence(n_seq, n_h, b, tile):
+    fmt = FxpFormat(8, 16)
+    params, xs = _gru_setup(2, n_h, n_seq, b)
+    qp, qxs = _gru_quantized(params, xs, fmt)
+    luts = make_lut_pair(64)
+    outs = _gru_fxp_outputs(qp, qxs, fmt, luts, tile, return_sequence=True)
+    _assert_int_equal_pairwise(outs)
+    seq, h = outs["fxp"]
+    assert seq.shape == (b, n_seq, n_h)
+    np.testing.assert_array_equal(np.asarray(seq[:, -1]), np.asarray(h))
+
+
+@pytest.mark.cells
+@pytest.mark.parametrize("n_seq,n_h,b", [(7, 20, 3), (26, 33, 2)])
+def test_gru_float_backends_allclose_pairwise(n_seq, n_h, b):
+    params, xs = _gru_setup(2, n_h, n_seq, b)
+    outs = {be: gru_forward(params, xs, backend=be)
+            for be in GRU_FLOAT_BACKENDS}
+    for be in GRU_FLOAT_BACKENDS[1:]:
+        np.testing.assert_allclose(
+            np.asarray(outs[GRU_FLOAT_BACKENDS[0]]), np.asarray(outs[be]),
+            atol=1e-5, err_msg=be)
+
+
+@pytest.mark.cells
+@pytest.mark.parametrize("backend", FXP_BACKENDS)
+def test_gru_stacked_chunked_continuation_integer_equal(backend):
+    """Single-state chunked serving: two half-sequence calls with carried
+    all-layer h are integer-equal to one full call (the fleet-engine
+    contract, GRU edition — no c to carry)."""
+    fmt = FxpFormat(8, 16)
+    n_h, n_seq, b = 12, 24, 3
+    qps = []
+    for li in range(2):
+        p = init_gru_params(jax.random.PRNGKey(3 + li),
+                            2 if li == 0 else n_h, n_h)
+        qps.append(GRUParams(w=quantize(p.w, fmt), b=quantize(p.b, fmt)))
+    xs = jnp.asarray(RNG.normal(size=(b, n_seq, 2)).astype(np.float32))
+    qxs = quantize(xs, fmt)
+    luts = make_lut_pair(64)
+    kw = dict(backend=backend, fmt=fmt, luts=luts, block_b=2,
+              time_tile=4 if backend == "pallas_fxp" else None)
+
+    seq_full, hs_full = gru_forward(qps, qxs, return_sequence=True,
+                                    return_state="all", **kw)
+    cut = n_seq // 2
+    seq_a, hs_a = gru_forward(qps, qxs[:, :cut], return_sequence=True,
+                              return_state="all", **kw)
+    seq_b, hs_b = gru_forward(qps, qxs[:, cut:], h0=hs_a,
+                              return_sequence=True, return_state="all", **kw)
+
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(seq_a), np.asarray(seq_b)], axis=1),
+        np.asarray(seq_full))
+    for li in range(2):
+        np.testing.assert_array_equal(np.asarray(hs_b[li]),
+                                      np.asarray(hs_full[li]),
+                                      err_msg=f"layer {li} h")
+
+
+# ---------------------------------------------------------------------------
 # Hypothesis sweep (slow tier): randomly drawn shapes x formats x tiles
 # ---------------------------------------------------------------------------
 
@@ -366,6 +474,21 @@ def test_property_fxp_backends_integer_equal(n_seq, n_h, n_in, b, frac, tile, de
     qp, qxs = _quantized(params, xs, fmt)
     luts = make_lut_pair(depth)
     _assert_int_equal_pairwise(_fxp_outputs(qp, qxs, fmt, luts, tile))
+
+
+@pytest.mark.slow
+@pytest.mark.cells
+@_SETTINGS
+@given(**_SWEEP)
+def test_property_gru_fxp_backends_integer_equal(n_seq, n_h, n_in, b, frac,
+                                                 tile, depth):
+    fmt = FxpFormat(frac, 16)
+    rng = np.random.default_rng(n_seq * 999 + n_h * 11 + b)
+    params = init_gru_params(jax.random.PRNGKey(frac), n_in, n_h)
+    xs = jnp.asarray(rng.normal(size=(b, n_seq, n_in)).astype(np.float32))
+    qp, qxs = _gru_quantized(params, xs, fmt)
+    luts = make_lut_pair(depth)
+    _assert_int_equal_pairwise(_gru_fxp_outputs(qp, qxs, fmt, luts, tile))
 
 
 @pytest.mark.slow

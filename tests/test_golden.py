@@ -13,12 +13,14 @@ import numpy as np
 import pytest
 
 from repro.core.fxp import FxpFormat
-from repro.core.lstm import LSTMParams, lstm_layer_fxp
+from repro.core.lstm import GRUParams, LSTMParams, gru_layer_fxp, lstm_layer_fxp
 from repro.core.lut import LutSpec, build_table
-from repro.kernels.lstm_fxp_seq import (lstm_sequence_fxp_pallas,
+from repro.kernels.lstm_fxp_seq import (gru_sequence_fxp_pallas,
+                                        lstm_sequence_fxp_pallas,
                                         lstm_sequence_fxp_stack_pallas)
 
 GOLDEN_PATH = pathlib.Path(__file__).parent / "golden" / "lstm_fxp_golden.json"
+GRU_PATH = pathlib.Path(__file__).parent / "golden" / "gru_fxp_golden.json"
 STACK_PATH = (pathlib.Path(__file__).parent / "golden"
               / "lstm_fxp_stack2_golden.json")
 QAT_PATH = (pathlib.Path(__file__).parent / "golden"
@@ -63,6 +65,11 @@ def golden_fleet():
 @pytest.fixture(scope="module")
 def golden_mixed():
     return _load(MIXED_PATH)
+
+
+@pytest.fixture(scope="module")
+def golden_gru():
+    return _load(GRU_PATH)
 
 
 def _stored_luts(g):
@@ -119,6 +126,44 @@ def test_pallas_kernel_matches_golden_integers(golden, time_tile):
     np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(out["h_seq"]))
     np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
     np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"]))
+
+
+@pytest.mark.cells
+def test_gru_simulator_matches_golden_integers(golden_gru):
+    """The quantised-GRU scan simulator reproduces the committed integers
+    (gate order r,z,n; single hidden state — no qc in the fixture)."""
+    g = golden_gru
+    fmt = g["_fmt"]
+    qp = GRUParams(w=jnp.asarray(g["qw"], jnp.int32),
+                   b=jnp.asarray(g["qb"], jnp.int32))
+    h_seq, qh = gru_layer_fxp(qp, jnp.asarray(g["qxs"], jnp.int32), fmt,
+                              _stored_luts(g), return_sequence=True)
+    out = g["outputs"]
+    np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(out["h_seq"]))
+    np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
+
+
+@pytest.mark.cells
+@pytest.mark.parametrize("time_tile", [None, 3, 5])
+def test_gru_pallas_kernel_matches_golden_integers(golden_gru, time_tile):
+    """The fused GRU kernel (cell-generic template; both tilings) reproduces
+    the committed integers exactly."""
+    g = golden_gru
+    fmt = g["_fmt"]
+    luts = _stored_luts(g)
+    (sig_t, sig_s), (tanh_t, tanh_s) = luts["sigmoid"], luts["tanh"]
+    h_seq, qh = gru_sequence_fxp_pallas(
+        jnp.asarray(g["qxs"], jnp.int32),
+        jnp.asarray(g["qw"], jnp.int32),
+        jnp.asarray(g["qb"], jnp.int32),
+        None, sig_t, tanh_t,
+        frac_bits=fmt.frac_bits, total_bits=fmt.total_bits,
+        sig_lo=sig_s.bounds[0], sig_hi=sig_s.bounds[1],
+        tanh_lo=tanh_s.bounds[0], tanh_hi=tanh_s.bounds[1],
+        return_sequence=True, block_b=2, time_tile=time_tile, interpret=True)
+    out = g["outputs"]
+    np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(out["h_seq"]))
+    np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
 
 
 def test_stack_simulator_matches_golden_integers(golden_stack):
