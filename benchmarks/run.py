@@ -17,8 +17,32 @@ overwritten (``load_trajectory`` / ``append_run``; tested in
 import argparse
 import json
 import os
+import platform
 import sys
 import time
+
+
+def bench_env() -> dict:
+    """Per-run environment metadata stored with each trajectory entry, so a
+    perf regression can be attributed (new jax? different backend? interpret
+    mode?) before anyone stares at numbers.  jax imports lazily: loading the
+    trajectory tooling must not drag in the accelerator stack."""
+    env = {
+        "host": platform.node(),
+        "platform": platform.platform(),
+        "python": platform.python_version(),
+    }
+    try:
+        import jax
+        env["jax"] = jax.__version__
+        env["backend"] = jax.default_backend()
+        env["device_count"] = jax.device_count()
+    except Exception:  # pragma: no cover - jax always present in this image
+        env["jax"] = None
+    # Pallas kernels auto-select interpret mode off-TPU (see repro.core.lstm);
+    # record the effective mode so compiled vs interpret rows never mix.
+    env["pallas_interpret"] = env.get("backend") not in ("tpu",)
+    return env
 
 
 def load_trajectory(path: str) -> list:
@@ -49,20 +73,24 @@ def load_trajectory(path: str) -> list:
 
 
 def append_run(path: str, rows: list, only: str | None = None,
-               now: str | None = None) -> int:
+               now: str | None = None, env: dict | None = None) -> int:
     """Merge this run into the trajectory at ``path`` (append-only history).
 
     Prior entries are always kept — corrupt files are backed up by
     ``load_trajectory`` rather than clobbered — and the write is
     temp-file + rename so an interrupted run can't truncate the history.
-    Returns the new number of runs in the trajectory.
+    ``env`` (see ``bench_env``) is stored alongside the rows; older entries
+    without it stay valid.  Returns the new number of runs in the trajectory.
     """
     history = load_trajectory(path)
-    history.append({
+    entry = {
         "time": now or time.strftime("%Y-%m-%dT%H:%M:%S"),
         "only": only,
         "rows": rows,
-    })
+    }
+    if env is not None:
+        entry["env"] = env
+    history.append(entry)
     tmp = f"{path}.tmp"
     with open(tmp, "w") as f:
         json.dump(history, f, indent=1)
@@ -103,16 +131,22 @@ def main(argv=None) -> None:
             for row in mod.run():
                 derived = str(row["derived"]).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']},{derived}")
-                all_rows.append({"name": row["name"],
-                                 "us_per_call": row["us_per_call"],
-                                 "derived": derived})
+                entry = {"name": row["name"],
+                         "us_per_call": row["us_per_call"],
+                         "derived": derived}
+                # dispersion fields from timeit_stats rows, when present
+                for k in ("p50_us", "p95_us", "cv", "n"):
+                    if k in row:
+                        entry[k] = row[k]
+                all_rows.append(entry)
         except Exception as e:  # keep the harness running
             failures += 1
             print(f"{tag}/ERROR,0,{type(e).__name__}: {str(e)[:120]}".replace(",", ";"))
             print(f"[bench] {tag} failed: {e}", file=sys.stderr)
 
     if args.json:
-        n_runs = append_run(args.json, all_rows, only=args.only)
+        n_runs = append_run(args.json, all_rows, only=args.only,
+                            env=bench_env())
         print(f"[bench] appended {len(all_rows)} rows to {args.json} "
               f"({n_runs} runs in trajectory)", file=sys.stderr)
 

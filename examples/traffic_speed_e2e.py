@@ -23,6 +23,11 @@ an uninterrupted run (``tests/spmd_scripts/check_fleet_restore.py``).
 ``--cell gru`` runs the same pipeline end to end on the quantised GRU
 (``repro.core.cell.GRU_CELL``): training, PTQ/QAT, the fused stack kernel
 and the fleet engine are all cell-generic, and every flag above composes.
+``--metrics-json PATH`` / ``--trace-json PATH`` switch on the fleet-wide
+observability layer (``repro.obs``): latency histograms, slot occupancy,
+quarantine counts and checkpoint I/O timings land in PATH as sorted JSON,
+and spans land as Chrome ``trace_event`` JSON viewable in chrome://tracing
+or https://ui.perfetto.dev — with zero perturbation of the served integers.
 
     PYTHONPATH=src python examples/traffic_speed_e2e.py [--sensors 512] [--ticks 16]
     PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --sensors 64
@@ -31,6 +36,8 @@ and the fleet engine are all cell-generic, and every flag above composes.
         python examples/traffic_speed_e2e.py --engine --shard --sensors 64
     PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --sensors 32 \
         --checkpoint-dir /tmp/fleet_ck --kill-after 4
+    PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --sensors 32 \
+        --metrics-json m.json --trace-json t.json
 """
 
 import argparse
@@ -100,6 +107,16 @@ def main(argv=None):
                          "the last checkpoint in --checkpoint-dir, and "
                          "resume — surviving streams finish bit-identical "
                          "to an uninterrupted run (--engine only)")
+    ap.add_argument("--metrics-json", metavar="PATH",
+                    help="enable the repro.obs metrics registry (counters, "
+                         "gauges, latency histograms across serving, "
+                         "checkpointing and kernel dispatch) and write its "
+                         "snapshot to PATH on exit; zero-perturbation — the "
+                         "served integers are unchanged")
+    ap.add_argument("--trace-json", metavar="PATH",
+                    help="enable repro.obs span tracing and write a Chrome "
+                         "trace_event JSON to PATH on exit (open in "
+                         "chrome://tracing or https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
     if args.shard and not args.engine:
         ap.error("--shard only shards the SensorFleetEngine; pass --engine too")
@@ -108,6 +125,7 @@ def main(argv=None):
                  "SensorFleetEngine; pass --engine too")
     if args.kill_after is not None and not args.checkpoint_dir:
         ap.error("--kill-after needs --checkpoint-dir to restore from")
+    _enable_obs(args)
 
     # --- train on one sensor (paper; --cell gru swaps the recurrent cell) ---
     data = make_traffic_dataset(seed=0)
@@ -151,6 +169,7 @@ def main(argv=None):
 
     if args.engine:
         serve_fleet_engine(qmodel, args)
+        _dump_obs(args)
         return
 
     # --- fleet serving -------------------------------------------------------
@@ -172,6 +191,28 @@ def main(argv=None):
     print(f"{total} inferences in {dt:.2f}s -> {total/dt:.0f} inf/s on this host")
     print("(paper: 17 534 inf/s on the XC7S15 at 71 mW; a v5e pod serves the "
           "full 11 160-sensor fleet in one batched call per tick)")
+    _dump_obs(args)
+
+
+def _enable_obs(args):
+    """Switch on the process-wide metrics/tracing globals per the CLI flags
+    (off by default: the no-op singletons)."""
+    from repro import obs
+    if args.metrics_json:
+        obs.enable()
+    if args.trace_json:
+        obs.enable_tracing()
+
+
+def _dump_obs(args):
+    from repro import obs
+    if args.metrics_json:
+        obs.get_registry().save_json(args.metrics_json)
+        print(f"metrics snapshot -> {args.metrics_json}")
+    if args.trace_json:
+        obs.get_tracer().save(args.trace_json)
+        print(f"Chrome trace -> {args.trace_json} "
+              "(chrome://tracing / ui.perfetto.dev)")
 
 
 def serve_fleet_engine(qmodel, args):

@@ -16,7 +16,9 @@ case "${1:-all}" in
   # bit-identity gate), then the fault-injection gate (kill/restore/reshard,
   # torn checkpoint writes, poison-input quarantine — the 2-device restore
   # battery rides the spmd smoke above), then the cell-equivalence gate
-  # (CellSpec plumbing + fxp GRU vs ref/golden integers), then everything
+  # (CellSpec plumbing + fxp GRU vs ref/golden integers), then the
+  # observability gate (metrics/tracing determinism + zero-perturbation
+  # goldens + counter persistence across kill/restore), then everything
   # not marked slow.  The slow tier picks up the QAT fine-tuning sweep, the
   # 8-device SPMD equivalence + kill-restore batteries, and the GRU
   # hypothesis sweeps via their 'slow' markers.
@@ -25,7 +27,8 @@ case "${1:-all}" in
         python -m pytest -x -q -m "spmd and not slow" && \
         python -m pytest -x -q -m "faults and not slow and not spmd" && \
         python -m pytest -x -q -m "cells and not slow and not qat and not spmd and not faults" && \
-        exec python -m pytest -x -q -m "not slow and not qat and not spmd and not faults and not cells" ;;
+        python -m pytest -x -q -m "obs and not slow" && \
+        exec python -m pytest -x -q -m "not slow and not qat and not spmd and not faults and not cells and not obs" ;;
   slow) exec python -m pytest -q -m slow ;;
   all)  exec python -m pytest -x -q ;;
   *) echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;

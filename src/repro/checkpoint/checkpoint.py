@@ -61,6 +61,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.obs.metrics import get_registry as _metrics
+
 __all__ = ["CheckpointManager", "save_pytree", "restore_pytree"]
 
 
@@ -85,38 +87,51 @@ def _flatten_with_names(tree: Any):
 
 def save_pytree(tree: Any, directory: Path, extra: dict | None = None):
     """Atomic checkpoint write (synchronous)."""
-    directory = Path(directory)
-    tmp = directory.with_suffix(".tmp")
-    if tmp.exists():
-        shutil.rmtree(tmp)
-    tmp.mkdir(parents=True)
+    m = _metrics()
+    with m.time("ckpt/save_us"):
+        directory = Path(directory)
+        tmp = directory.with_suffix(".tmp")
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
 
-    names, leaves, _ = _flatten_with_names(tree)
-    arrays = {}
-    checksum = hashlib.sha256()
-    for name, leaf in zip(names, leaves):
-        arr = np.asarray(jax.device_get(leaf))
-        arrays[name] = arr
-        checksum.update(name.encode())
-        checksum.update(arr.tobytes()[:4096])  # prefix checksum: cheap + catches truncation
-    np.savez(tmp / "arrays.npz", **{n.replace("/", "%"): a for n, a in arrays.items()})
+        names, leaves, _ = _flatten_with_names(tree)
+        arrays = {}
+        checksum = hashlib.sha256()
+        for name, leaf in zip(names, leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            arrays[name] = arr
+            checksum.update(name.encode())
+            checksum.update(arr.tobytes()[:4096])  # prefix checksum: cheap + catches truncation
+        np.savez(tmp / "arrays.npz", **{n.replace("/", "%"): a for n, a in arrays.items()})
 
-    manifest = {
-        "leaves": {n: {"shape": list(arrays[n].shape), "dtype": str(arrays[n].dtype)}
-                   for n in names},
-        "checksum": checksum.hexdigest(),
-        "time": time.time(),
-        "extra": extra or {},
-    }
-    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
-    if directory.exists():
-        shutil.rmtree(directory)
-    tmp.rename(directory)  # atomic publish
+        manifest = {
+            "leaves": {n: {"shape": list(arrays[n].shape), "dtype": str(arrays[n].dtype)}
+                       for n in names},
+            "checksum": checksum.hexdigest(),
+            "time": time.time(),
+            "extra": extra or {},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        if directory.exists():
+            shutil.rmtree(directory)
+        tmp.rename(directory)  # atomic publish
+    m.inc("ckpt/saves_total")
+    if m.enabled:
+        m.inc("ckpt/payload_bytes", sum(a.nbytes for a in arrays.values()))
 
 
 def restore_pytree(template: Any, directory: Path, shardings: Any = None) -> Any:
     """Restore into ``template``'s structure; re-shard onto ``shardings``
     (elastic restore: the mesh may differ from the one that saved)."""
+    m = _metrics()
+    with m.time("ckpt/restore_us"):
+        tree = _restore_pytree_inner(template, directory, shardings)
+    m.inc("ckpt/restores_total")
+    return tree
+
+
+def _restore_pytree_inner(template, directory, shardings):
     directory = Path(directory)
     manifest = json.loads((directory / "manifest.json").read_text())
     data = np.load(directory / "arrays.npz")
@@ -197,6 +212,8 @@ class CheckpointManager:
             if d.is_dir():
                 shutil.rmtree(d, ignore_errors=True)
                 swept.append(d.name)
+        if swept:
+            _metrics().inc("ckpt/torn_sweeps_total", len(swept))
         return swept
 
     def manifest(self, step: int) -> dict:

@@ -93,4 +93,5 @@ def elastic_fleet_restore(manager, qparams, fmt, luts=None, *,
     eng = SensorFleetEngine.restore(manager, qparams, fmt, luts, step=use_step,
                                     mesh=mesh, data_axis=data_axis,
                                     **restore_kw)
+    eng.obs.inc("ckpt/elastic_restores_total")
     return eng, mesh

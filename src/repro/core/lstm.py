@@ -141,6 +141,7 @@ from repro.core import lut as lut_mod
 from repro.core.cell import (CELL_SPECS, GRU_CELL, LSTM_CELL, CellSpec,
                              GRUParams, cell_spec)
 from repro.core.fxp import FxpFormat
+from repro.obs.metrics import get_registry as _obs_metrics
 
 __all__ = [
     "LSTMParams",
@@ -774,6 +775,17 @@ def recurrent_forward(
     layers = list(params) if isinstance(params, (list, tuple)) else [params]
     if num_layers is not None and num_layers != len(layers):
         raise ValueError(f"num_layers={num_layers} but {len(layers)} param sets given")
+
+    # Dispatch counters (ISSUE 9): Python-level dispatches — i.e. trace-time
+    # under jit, once per recompile — never per traced step, and never a read
+    # of a traced value.
+    _m = _obs_metrics()
+    if _m.enabled:
+        _m.inc("kernel/dispatch_total")
+        _m.inc(f"kernel/dispatch/{spec.kind}/{backend}")
+        if backend in _PALLAS_BACKENDS:
+            _m.inc(f"kernel/blocks/{backend}/"
+                   f"L{len(layers)}_bb{block_b}_bh{block_h}_tt{time_tile}")
 
     is_fxp = backend in _FXP_BACKENDS
     stack_fmt = None

@@ -36,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import fxp as fxp_mod
 from repro.core import timing_model as tm
+from repro.obs.metrics import get_registry as _obs_metrics
 from repro.core.quantize import quantize_lstm_model
 from repro.models.lstm_model import evaluate_mse, evaluate_quantized_mse
 from repro.qat.calibrate import (calibrated_format, calibrated_stack_formats,
@@ -95,15 +96,18 @@ def pareto_search(
     for fb in frac_bits:
         fmt = calibrated_format(params, data.x_train[:256], fb, stats=stats)
         for depth in lut_depths:
-            ptq = quantize_lstm_model(params, fmt, depth)
-            ptq_mse = evaluate_quantized_mse(ptq, xs_t, ys_t)
-            qat_params, history = finetune_qat(
-                params, data, fmt, depth, epochs=epochs, lr0=lr0,
-                batch_size=batch_size, max_samples=max_samples)
-            qat_mse = evaluate_quantized_mse(freeze(qat_params, fmt, depth),
-                                             xs_t, ys_t)
-            energy = tm.parameterised_energy_per_inference_uj(
-                shapes, spec, fmt.total_bits, depth)
+            _m = _obs_metrics()
+            with _m.time("qat/point_eval_us"):
+                ptq = quantize_lstm_model(params, fmt, depth)
+                ptq_mse = evaluate_quantized_mse(ptq, xs_t, ys_t)
+                qat_params, history = finetune_qat(
+                    params, data, fmt, depth, epochs=epochs, lr0=lr0,
+                    batch_size=batch_size, max_samples=max_samples)
+                qat_mse = evaluate_quantized_mse(freeze(qat_params, fmt, depth),
+                                                 xs_t, ys_t)
+                energy = tm.parameterised_energy_per_inference_uj(
+                    shapes, spec, fmt.total_bits, depth)
+            _m.inc("qat/points_total")
             point = {
                 "frac_bits": fb,
                 "total_bits": fmt.total_bits,
@@ -190,22 +194,26 @@ def mixed_pareto_search(
         sfmt = calibrated_stack_formats(params, cal_xs, fb, stats=stats)
         for depth in lut_depths:
             for mode, fmt in (("global", gfmt), ("mixed", sfmt)):
-                ptq_mse = evaluate_quantized_mse(
-                    quantize_lstm_model(params, fmt, depth), xs_t, ys_t)
-                qat_params, history = finetune_qat(
-                    params, data, fmt, depth, epochs=epochs, lr0=lr0,
-                    batch_size=batch_size, max_samples=max_samples)
-                qat_mse = evaluate_quantized_mse(freeze(qat_params, fmt, depth),
-                                                 xs_t, ys_t)
-                if mode == "global":
-                    energy = tm.parameterised_energy_per_inference_uj(
-                        shapes, spec, gfmt.total_bits, depth)
-                    widths = [gfmt.total_bits]
-                else:
-                    layer_bits = _mixed_layer_bits(sfmt)
-                    energy = tm.mixed_energy_per_inference_uj(
-                        shapes, spec, layer_bits, depth)
-                    widths = sorted({w for bits in layer_bits for w in bits})
+                _m = _obs_metrics()
+                with _m.time("qat/point_eval_us"):
+                    ptq_mse = evaluate_quantized_mse(
+                        quantize_lstm_model(params, fmt, depth), xs_t, ys_t)
+                    qat_params, history = finetune_qat(
+                        params, data, fmt, depth, epochs=epochs, lr0=lr0,
+                        batch_size=batch_size, max_samples=max_samples)
+                    qat_mse = evaluate_quantized_mse(
+                        freeze(qat_params, fmt, depth), xs_t, ys_t)
+                    if mode == "global":
+                        energy = tm.parameterised_energy_per_inference_uj(
+                            shapes, spec, gfmt.total_bits, depth)
+                        widths = [gfmt.total_bits]
+                    else:
+                        layer_bits = _mixed_layer_bits(sfmt)
+                        energy = tm.mixed_energy_per_inference_uj(
+                            shapes, spec, layer_bits, depth)
+                        widths = sorted({w for bits in layer_bits
+                                         for w in bits})
+                _m.inc("qat/points_total")
                 point = {
                     "mode": mode,
                     "frac_bits": fb,

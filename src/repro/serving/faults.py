@@ -46,6 +46,7 @@ from typing import Any, Callable
 import numpy as np
 
 from repro.checkpoint.checkpoint import CheckpointManager, _flatten_with_names
+from repro.obs.metrics import get_registry as _obs_metrics
 
 __all__ = [
     "InjectedKill", "FaultPlan", "retry_io", "torn_save", "corrupt_published",
@@ -80,12 +81,15 @@ def retry_io(fn: Callable[[], Any], *, attempts: int = 3,
     """
     if attempts < 1:
         raise ValueError("attempts must be >= 1")
+    m = _obs_metrics()
     for k in range(attempts):
         try:
             return fn()
         except exceptions:
             if k == attempts - 1:
+                m.inc("ckpt/io_failures_total")
                 raise
+            m.inc("ckpt/io_retries_total")
             sleep(base_delay * (2 ** k))
 
 

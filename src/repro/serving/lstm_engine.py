@@ -84,6 +84,20 @@ dtype/ndim/feature-width/finiteness/fixed-point range at the boundary
 quarantine for bulk serving, and ``step`` quarantines a stream whose
 buffers were corrupted mid-flight — one poison stream fails alone, the
 rest of the batch's integers are untouched (masked lanes never interact).
+
+Observability (ISSUE 9): the engine reports itself through ``repro.obs`` —
+submit latency (``fleet/submit_us``), admit-queue depth, slot occupancy,
+per-step kernel-dispatch time (``fleet/step_us``), ``t_step`` bucket usage,
+quarantine counts by reason kind, and checkpoint save/restore timings +
+payload bytes — under the zero-perturbation contract: metrics/spans time and
+count Python-level events only and never touch traced values, so every
+bit-identity battery passes unchanged with observability fully enabled
+(``tests/test_obs.py``).  Off by default: instrumentation resolves the
+process-local registry/tracer at call time (no-op singletons unless
+``repro.obs.enable()`` / ``enable_tracing()`` ran, or a per-engine registry
+was passed via ``metrics=``).  ``engine.metrics()`` returns the snapshot;
+the full snapshot also rides the checkpoint side-car so counters survive
+kill -> restore (cumulative, not reset).
 """
 
 from __future__ import annotations
@@ -101,6 +115,8 @@ from repro.core import fxp as fxp_mod
 from repro.core.cell import GRUParams, cell_spec
 from repro.core.fxp import FxpFormat, StackFormats
 from repro.core.lstm import LSTMParams, lstm_forward, recurrent_forward
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.parallel.sharding import fleet_slot_specs, shard_map
 
 __all__ = ["SensorStream", "SensorFleetEngine", "SlotShardingError"]
@@ -159,6 +175,7 @@ class SensorFleetEngine:
         mesh=None,
         shard_slots: bool | None = None,
         data_axis: str = "data",
+        metrics=None,
     ):
         layers = list(qparams) if isinstance(qparams, (list, tuple)) else [qparams]
         if not layers:
@@ -229,6 +246,27 @@ class SensorFleetEngine:
         self.steps_run = 0              # batched kernel invocations so far
         self.timesteps_run = 0          # sum of t_step over those invocations
 
+        # Observability: metrics=None resolves the process-local registry at
+        # every call site (the no-op singleton unless repro.obs.enable() ran),
+        # so a fleet built before enable() still starts reporting after it;
+        # pass an explicit MetricsRegistry for per-engine isolation.  The
+        # declares below make every snapshot carry the serving surface —
+        # submit latency, occupancy, quarantine, checkpoint I/O — even before
+        # the first event (and they no-op on the disabled registry).
+        self._metrics_override = metrics
+        m = self.obs
+        m.declare_hist("fleet/submit_us", timed=True)
+        m.declare_hist("fleet/step_us", timed=True)
+        m.declare_hist("ckpt/save_us", timed=True)
+        m.declare_hist("ckpt/restore_us", timed=True)
+        m.declare_hist("fleet/ckpt_save_us", timed=True)
+        m.declare_hist("fleet/ckpt_restore_us", timed=True)
+        m.declare_counter("fleet/quarantined_total")
+        m.declare_counter("fleet/steps_total")
+        m.declare_counter("fleet/timesteps_total")
+        m.declare_gauge("fleet/slot_occupancy")
+        m.declare_gauge("fleet/admit_queue_depth")
+
         fwd_kwargs = dict(
             backend=backend, fmt=fmt, luts=luts, return_sequence=True,
             return_state="all", interpret=interpret, time_tile=time_tile,
@@ -281,6 +319,48 @@ class SensorFleetEngine:
         # jit re-specialises per input shape, i.e. once per t_step bucket
         self._step = jax.jit(step_fn)
 
+    # --- observability ------------------------------------------------------
+
+    @property
+    def obs(self):
+        """The metrics registry this engine reports into: the per-engine one
+        passed as ``metrics=``, else the process-local registry (resolved at
+        call time so ``repro.obs.enable()`` takes effect immediately)."""
+        if self._metrics_override is not None:
+            return self._metrics_override
+        return obs_metrics.get_registry()
+
+    def metrics(self) -> dict:
+        """Snapshot of the engine's metrics registry (counters, gauges,
+        histograms with p50/p95/p99), plus a ``derived`` section with the
+        kernel-dispatch throughput when step timings exist.  ``{}``-shaped
+        (all maps empty) while observability is disabled."""
+        snap = self.obs.snapshot()
+        step_us = snap.get("histograms", {}).get("fleet/step_us")
+        if step_us and step_us["sum"]:
+            snap["derived"] = {
+                "timesteps_per_s": self.timesteps_run * self.slots
+                / (step_us["sum"] / 1e6),
+            }
+        return snap
+
+    def _count_quarantine(self, kind: str) -> None:
+        m = self.obs
+        m.inc("fleet/quarantined_total")
+        m.inc(f"fleet/quarantined/{kind}")
+
+    @staticmethod
+    def _reason_kind(reason: str) -> str:
+        """Collapse a free-text quarantine reason (``_poison_reason`` embeds
+        shapes/dtypes) to a stable metric-key slug."""
+        for prefix, kind in (("qxs dtype", "qxs_dtype"),
+                             ("qxs shape", "qxs_shape"),
+                             ("cursor", "cursor"),
+                             ("h_seq", "h_seq")):
+            if reason.startswith(prefix):
+                return kind
+        return "other"
+
     # --- scheduling ---------------------------------------------------------
 
     def free_slots(self) -> list[int]:
@@ -324,6 +404,23 @@ class SensorFleetEngine:
         range all reject at this boundary instead of surfacing as an opaque
         failure deep inside the Pallas kernel.
         """
+        m = self.obs
+        m.inc("fleet/submit_total")
+        with m.time("fleet/submit_us"):
+            try:
+                ok = self._submit_inner(stream)
+            except (TypeError, ValueError) as e:
+                m.inc("fleet/submit_rejected_total")
+                m.inc(f"fleet/submit_rejected/{type(e).__name__}")
+                raise
+        if ok:
+            m.inc("fleet/admitted_total")
+            m.gauge("fleet/slot_occupancy", len(self.active) / self.slots)
+        else:
+            m.inc("fleet/submit_full_total")
+        return ok
+
+    def _submit_inner(self, stream: SensorStream) -> bool:
         qxs = np.asarray(stream.qxs)
         if not np.issubdtype(qxs.dtype, np.integer):
             if np.issubdtype(qxs.dtype, np.floating) \
@@ -407,46 +504,74 @@ class SensorFleetEngine:
         s = self.active.pop(slot)
         s.error = reason
         self.quarantined.append(s)
+        self._count_quarantine(self._reason_kind(reason))
 
     def admit(self, pending: list) -> None:
         """Drain ``pending`` (in place) into free slots, quarantining
         malformed streams instead of raising — the graceful bulk-admission
         face of ``submit`` (one poison request must not kill the fleet)."""
-        while pending:
-            try:
-                if not self.submit(pending[0]):
-                    return                      # engine full: keep the rest
-            except (TypeError, ValueError) as e:
-                bad = pending.pop(0)
-                bad.error = f"{type(e).__name__}: {e}"
-                self.quarantined.append(bad)
-                continue
-            pending.pop(0)
+        m = self.obs
+        m.gauge("fleet/admit_queue_depth", len(pending))
+        try:
+            while pending:
+                try:
+                    if not self.submit(pending[0]):
+                        return                  # engine full: keep the rest
+                except (TypeError, ValueError) as e:
+                    bad = pending.pop(0)
+                    bad.error = f"{type(e).__name__}: {e}"
+                    self.quarantined.append(bad)
+                    self._count_quarantine(type(e).__name__)
+                    continue
+                pending.pop(0)
+        finally:
+            m.gauge("fleet/admit_queue_depth", len(pending))
 
     def step(self) -> None:
-        """One batched kernel call: advance every active slot ``t_step``."""
-        for slot in list(self.active):
-            reason = self._poison_reason(self.active[slot])
-            if reason is not None:
-                self._quarantine(slot, reason)
-        if not self.active:
-            return
-        t_step = self._pick_t_step()
-        x = np.zeros((self.slots, t_step, self.n_in), np.int32)
-        mask = np.zeros((self.slots,), bool)
-        for slot, s in self.active.items():
-            x[slot] = s.qxs[s.cursor : s.cursor + t_step]
-            mask[slot] = True
+        """One batched kernel call: advance every active slot ``t_step``.
 
-        if self._arity == 1:
-            seq, self._qh = self._step(
-                self._ws, self._bs, jnp.asarray(x), self._qh, jnp.asarray(mask))
-        else:
-            seq, self._qh, self._qc = self._step(
-                self._ws, self._bs, jnp.asarray(x), self._qh, self._qc,
-                jnp.asarray(mask))
-        self.steps_run += 1
-        self.timesteps_run += t_step
+        Instrumented (no-op while observability is disabled): counts/timers
+        only — nothing here reads or converts the traced arrays, so the
+        integers are identical with metrics and tracing fully enabled.
+        """
+        m = self.obs
+        tr = obs_trace.get_tracer()
+        with tr.span("fleet/step", active=len(self.active)):
+            for slot in list(self.active):
+                reason = self._poison_reason(self.active[slot])
+                if reason is not None:
+                    self._quarantine(slot, reason)
+            if not self.active:
+                return
+            t_step = self._pick_t_step()
+            m.gauge("fleet/slot_occupancy", len(self.active) / self.slots)
+            # t_step buckets are a deterministic function of the schedule —
+            # edges at the power-of-two buckets the jit specialises on
+            m.observe("fleet/t_step", t_step,
+                      edges=[float(b) for b in sorted(self._buckets)])
+            x = np.zeros((self.slots, t_step, self.n_in), np.int32)
+            mask = np.zeros((self.slots,), bool)
+            for slot, s in self.active.items():
+                x[slot] = s.qxs[s.cursor : s.cursor + t_step]
+                mask[slot] = True
+
+            # fleet/step_us times the dispatch only (jax is async; the
+            # np.asarray below is where the host blocks on the result)
+            with m.time("fleet/step_us"), \
+                    tr.span("fleet/kernel", t_step=t_step,
+                            backend=self.backend):
+                if self._arity == 1:
+                    seq, self._qh = self._step(
+                        self._ws, self._bs, jnp.asarray(x), self._qh,
+                        jnp.asarray(mask))
+                else:
+                    seq, self._qh, self._qc = self._step(
+                        self._ws, self._bs, jnp.asarray(x), self._qh, self._qc,
+                        jnp.asarray(mask))
+            self.steps_run += 1
+            self.timesteps_run += t_step
+            m.inc("fleet/steps_total")
+            m.inc("fleet/timesteps_total", t_step)
 
         seq_np = np.asarray(seq)
         finished = []
@@ -524,8 +649,12 @@ class SensorFleetEngine:
                 "params_sha256": self.params_checksum(),
             },
             "slot_table": table,
+            # steps_run/timesteps_run stay as first-class keys (pre-ISSUE-9
+            # checkpoints only have those); the full registry snapshot rides
+            # alongside so ALL counters/histograms survive kill -> restore
             "counters": {"steps_run": self.steps_run,
-                         "timesteps_run": self.timesteps_run},
+                         "timesteps_run": self.timesteps_run,
+                         "metrics": self.obs.snapshot()},
         }
         return tree, extra
 
@@ -544,15 +673,25 @@ class SensorFleetEngine:
         """
         from repro.serving.faults import retry_io
 
+        m = self.obs
+        tr = obs_trace.get_tracer()
         step = self.steps_run if step is None else step
-        tree, extra = self.checkpoint_payload()
-        if mode == "async":
-            manager.save_async(step, tree, extra=extra)
-        elif mode == "sync":
-            retry_io(lambda: manager.save(step, tree, extra=extra),
-                     attempts=attempts, base_delay=base_delay, sleep=sleep)
-        else:
-            raise ValueError(f"mode must be 'sync' or 'async', got {mode!r}")
+        with m.time("fleet/ckpt_save_us"), tr.span("fleet/ckpt_save",
+                                                   step=step, mode=mode):
+            tree, extra = self.checkpoint_payload()
+            if mode == "async":
+                manager.save_async(step, tree, extra=extra)
+            elif mode == "sync":
+                retry_io(lambda: manager.save(step, tree, extra=extra),
+                         attempts=attempts, base_delay=base_delay, sleep=sleep)
+            else:
+                raise ValueError(
+                    f"mode must be 'sync' or 'async', got {mode!r}")
+        m.inc("fleet/ckpt_saves_total")
+        if m.enabled:
+            # nbytes is metadata — no device->host transfer happens here
+            m.inc("fleet/ckpt_payload_bytes", sum(
+                getattr(leaf, "nbytes", 0) for leaf in jax.tree.leaves(tree)))
         return step
 
     @classmethod
@@ -563,7 +702,8 @@ class SensorFleetEngine:
                 backend: str | None = None, chunk: int | None = None,
                 time_tile: int | None = None, block_b: int | None = None,
                 interpret: bool | None = None,
-                strict_params: bool = True) -> "SensorFleetEngine":
+                strict_params: bool = True,
+                metrics=None) -> "SensorFleetEngine":
         """Rebuild a fleet from its latest (or ``step``-th) checkpoint and
         continue every in-flight stream bit-identically.
 
@@ -576,7 +716,29 @@ class SensorFleetEngine:
         verifies the quantised params' sha256 against the checkpoint —
         different weights cannot produce an integer-identical continuation,
         so a mismatch raises instead of silently serving garbage.
+
+        ``metrics=`` installs a per-engine registry on the restored fleet;
+        either way the checkpointed registry snapshot (if any) is loaded
+        back, so counters resume cumulative rather than from zero.
         """
+        m_restore = (metrics if metrics is not None
+                     else obs_metrics.get_registry())
+        with m_restore.time("fleet/ckpt_restore_us"), \
+                obs_trace.get_tracer().span("fleet/ckpt_restore"):
+            eng = cls._restore_inner(
+                manager, qparams, fmt, luts, step=step, mesh=mesh,
+                shard_slots=shard_slots, data_axis=data_axis, backend=backend,
+                chunk=chunk, time_tile=time_tile, block_b=block_b,
+                interpret=interpret, strict_params=strict_params,
+                metrics=metrics)
+        m_restore.inc("fleet/ckpt_restores_total")
+        return eng
+
+    @classmethod
+    def _restore_inner(cls, manager, qparams, fmt, luts=None,
+                       *, step, mesh, shard_slots, data_axis, backend, chunk,
+                       time_tile, block_b, interpret, strict_params,
+                       metrics) -> "SensorFleetEngine":
         manager.wait()
         manager.sweep_orphans()         # torn tmp dirs from a crash mid-save
         step = manager.latest_step() if step is None else step
@@ -600,7 +762,8 @@ class SensorFleetEngine:
                   backend=cfg.get("backend", "pallas_fxp") if backend is None
                   else backend,
                   block_b=block_b, interpret=interpret, mesh=mesh,
-                  shard_slots=shard_slots, data_axis=data_axis)
+                  shard_slots=shard_slots, data_axis=data_axis,
+                  metrics=metrics)
         ckpt_cell = cfg.get("cell", "lstm")   # pre-GRU checkpoints are LSTM
         if eng.cell != ckpt_cell:
             raise ValueError(
@@ -655,4 +818,9 @@ class SensorFleetEngine:
         counters = extra.get("counters", {})
         eng.steps_run = int(counters.get("steps_run", 0))
         eng.timesteps_run = int(counters.get("timesteps_run", 0))
+        msnap = counters.get("metrics")
+        if msnap:
+            # merge, not load: the resumed process keeps what it already
+            # recorded (this restore's own timing) on top of the saved counts
+            eng.obs.merge_snapshot(msnap)
         return eng

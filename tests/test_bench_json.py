@@ -9,7 +9,7 @@ import sys
 # benchmarks/ is a namespace package rooted at the repo top level
 sys.path.insert(0, str(pathlib.Path(__file__).parents[1]))
 
-from benchmarks.run import append_run, load_trajectory  # noqa: E402
+from benchmarks.run import append_run, bench_env, load_trajectory  # noqa: E402
 
 ROWS_A = [{"name": "kernel/x", "us_per_call": 1.0, "derived": "a"}]
 ROWS_B = [{"name": "kernel/y", "us_per_call": 2.0, "derived": "b"}]
@@ -54,3 +54,59 @@ def test_backups_do_not_clobber_each_other(tmp_path):
 
 def test_missing_file_yields_empty(tmp_path):
     assert load_trajectory(str(tmp_path / "nope.json")) == []
+
+
+# -- de-noised entries (ISSUE 9): env metadata + dispersion fields ----------
+
+
+def test_env_metadata_stored_per_entry(tmp_path):
+    path = str(tmp_path / "traj.json")
+    env = bench_env()
+    for key in ("host", "platform", "python", "jax", "backend",
+                "pallas_interpret"):
+        assert key in env
+    append_run(path, ROWS_A, now="t0", env=env)
+    append_run(path, ROWS_B, now="t1")          # env optional — older callers
+    history = load_trajectory(path)
+    assert history[0]["env"]["python"] == env["python"]
+    assert "env" not in history[1]
+
+
+def test_dispersion_fields_round_trip(tmp_path):
+    rows = [{"name": "kernel/z", "us_per_call": 3.0, "derived": "c",
+             "p50_us": 3.0, "p95_us": 4.5, "cv": 0.12, "n": 7}]
+    path = str(tmp_path / "traj.json")
+    append_run(path, rows, now="t0", env=bench_env())
+    got = load_trajectory(path)[0]["rows"][0]
+    assert got["p50_us"] == 3.0 and got["p95_us"] == 4.5
+    assert got["cv"] == 0.12 and got["n"] == 7
+
+
+def test_existing_trajectory_still_loads():
+    """The committed BENCH_kernels.json (entries from before env/dispersion
+    existed) must keep loading unchanged."""
+    path = pathlib.Path(__file__).parents[1] / "BENCH_kernels.json"
+    history = load_trajectory(str(path))
+    assert isinstance(history, list) and history
+    for run in history:
+        assert "rows" in run and "time" in run
+        for row in run["rows"]:
+            assert "name" in row and "us_per_call" in row
+    # load_trajectory must not have moved the real file aside
+    assert path.exists()
+
+
+def test_timeit_stats_shape():
+    from benchmarks.common import timeit_stats
+
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return __import__("jax").numpy.zeros(())
+
+    st = timeit_stats(fn, n=5, warmup=2)
+    assert len(calls) == 7                      # warmup + samples
+    assert set(st) == {"us_per_call", "p50_us", "p95_us", "cv", "n"}
+    assert st["us_per_call"] == st["p50_us"] <= st["p95_us"]
+    assert st["cv"] >= 0.0 and st["n"] == 5

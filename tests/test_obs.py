@@ -1,0 +1,437 @@
+"""Observability layer (ISSUE 9): metrics + tracing under the
+zero-perturbation contract.
+
+Three families:
+
+* unit — histogram bucket/quantile determinism, snapshot byte-stability,
+  span nesting/ordering (asserted on the deterministic ``seq``/``depth``
+  fields, never on timestamps), the disabled no-op path;
+* integration — the instrumented ``SensorFleetEngine`` produces the same
+  integers with metrics+tracing fully enabled as disabled, and the golden
+  fxp fixture replays integer-exact under a live registry;
+* persistence — the registry snapshot rides the checkpoint side-car, so a
+  kill -> restore -> resume fleet reports *cumulative* counters.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import obs
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.core.fxp import FxpFormat, quantize
+from repro.core.lstm import LSTMParams, init_lstm_params, lstm_layer_fxp
+from repro.core.lut import make_lut_pair
+from repro.obs.metrics import (DEFAULT_US_EDGES, NULL_REGISTRY, Histogram,
+                               MetricsRegistry, use_registry)
+from repro.obs.trace import NULL_TRACER, Tracer
+from repro.serving.faults import retry_io
+from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
+
+pytestmark = pytest.mark.obs
+
+FMT = FxpFormat(8, 16)
+N_IN, N_H = 2, 10
+
+
+@pytest.fixture(autouse=True)
+def _obs_globals_reset():
+    """Every test starts and ends on the no-op defaults."""
+    obs.disable_all()
+    yield
+    obs.disable_all()
+
+
+def _qps(n_layers=1, key=0):
+    out = []
+    for li in range(n_layers):
+        p = init_lstm_params(jax.random.PRNGKey(key + li),
+                             N_IN if li == 0 else N_H, N_H)
+        out.append(LSTMParams(w=quantize(p.w, FMT), b=quantize(p.b, FMT)))
+    return out
+
+
+def _streams(lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [SensorStream(rid=i, qxs=np.asarray(quantize(
+                jnp.asarray(rng.normal(size=(T, N_IN)).astype(np.float32)),
+                FMT)))
+            for i, T in enumerate(lens)]
+
+
+def _engine(qps, luts, **kw):
+    kw.setdefault("batch_slots", 4)
+    kw.setdefault("chunk", 4)
+    kw.setdefault("backend", "fxp")
+    return SensorFleetEngine(qps, FMT, luts, **kw)
+
+
+# -- histograms ---------------------------------------------------------------
+
+
+def test_histogram_bucket_edges():
+    h = Histogram(edges=(1.0, 10.0, 100.0))
+    for v in (0.5, 1.0, 5.0, 10.0, 99.0, 100.0, 1e6):
+        h.observe(v)
+    # bisect_left: a value equal to an edge lands in that edge's bucket
+    assert h.counts == [2, 2, 2, 1]          # <=1, <=10, <=100, overflow
+    assert h.count == 7
+    assert h.min == 0.5 and h.max == 1e6
+
+
+def test_histogram_quantiles_deterministic():
+    h = Histogram(edges=(1.0, 2.0, 5.0))
+    for v in [0.5] * 50 + [1.5] * 45 + [10.0] * 5:
+        h.observe(v)
+    assert h.quantile(0.50) == 1.0           # upper edge of covering bucket
+    assert h.quantile(0.95) == 2.0
+    assert h.quantile(0.99) == 10.0          # overflow -> observed max
+    snap = h.snapshot()
+    assert snap["p50"] == 1.0 and snap["p95"] == 2.0 and snap["p99"] == 10.0
+
+
+def test_histogram_rejects_bad_edges():
+    with pytest.raises(ValueError):
+        Histogram(edges=(5.0, 1.0))
+    with pytest.raises(ValueError):
+        Histogram(edges=())
+
+
+def test_histogram_snapshot_load_round_trip():
+    h = Histogram()
+    for v in (3.0, 7.0, 5e6, 123.4):
+        h.observe(v)
+    h2 = Histogram()
+    h2.load(h.snapshot())
+    assert h2.snapshot() == h.snapshot()
+
+
+def test_default_edges_are_ascending_microsecond_ladder():
+    assert list(DEFAULT_US_EDGES) == sorted(DEFAULT_US_EDGES)
+    assert DEFAULT_US_EDGES[0] == 1.0 and DEFAULT_US_EDGES[-1] == 5e6
+
+
+# -- registry -----------------------------------------------------------------
+
+
+def test_snapshot_determinism_byte_identical():
+    """Two registries fed the same non-timed sequence export byte-identical
+    JSON once explicitly-timed histograms are dropped."""
+    def feed(reg):
+        reg.inc("b/count", 2)
+        reg.inc("a/count")
+        reg.gauge("z/gauge", 0.25)
+        for v in (3.0, 17.0, 400.0):
+            reg.observe("lat", v)
+        with reg.time("wall_us"):            # the only wall-clock read
+            pass
+        return reg
+
+    j1 = feed(MetricsRegistry()).to_json(drop_timed=True)
+    j2 = feed(MetricsRegistry()).to_json(drop_timed=True)
+    assert j1 == j2
+    snap = json.loads(j1)
+    assert snap["counters"] == {"a/count": 1, "b/count": 2}
+    assert "wall_us" not in snap["histograms"]
+    # without drop_timed the timed histogram is present and flagged
+    full = feed(MetricsRegistry()).snapshot()
+    assert full["histograms"]["wall_us"]["timed"] is True
+    assert full["histograms"]["lat"]["timed"] is False
+
+
+def test_registry_merge_snapshot_adds():
+    a = MetricsRegistry()
+    a.inc("n", 5)
+    a.observe("lat", 3.0)
+    b = MetricsRegistry()
+    b.inc("n", 2)                            # recorded BEFORE the merge
+    b.observe("lat", 400.0)
+    b.gauge("occ", 0.5)
+    b.merge_snapshot(a.snapshot())
+    snap = b.snapshot()
+    assert snap["counters"]["n"] == 7        # saved + already-recorded
+    h = snap["histograms"]["lat"]
+    assert h["count"] == 2 and h["min"] == 3.0 and h["max"] == 400.0
+    assert snap["gauges"]["occ"] == 0.5      # point-in-time: local wins
+
+
+def test_registry_load_snapshot_cumulative():
+    a = MetricsRegistry()
+    a.inc("n", 5)
+    a.observe("lat", 3.0)
+    b = MetricsRegistry()
+    b.load_snapshot(a.snapshot())
+    b.inc("n", 2)
+    b.observe("lat", 400.0)
+    snap = b.snapshot()
+    assert snap["counters"]["n"] == 7
+    assert snap["histograms"]["lat"]["count"] == 2
+
+
+def test_null_registry_is_noop():
+    NULL_REGISTRY.inc("x")
+    NULL_REGISTRY.gauge("y", 1.0)
+    NULL_REGISTRY.observe("z", 2.0)
+    with NULL_REGISTRY.time("w"):
+        pass
+    assert NULL_REGISTRY.snapshot() == {"counters": {}, "gauges": {},
+                                        "histograms": {}}
+    assert NULL_REGISTRY.enabled is False
+    # the default global IS the null registry unless enable() ran
+    assert obs.get_registry() is NULL_REGISTRY
+    # time() hands back one shared context manager — no per-call allocation
+    assert NULL_REGISTRY.time("a") is NULL_REGISTRY.time("b")
+
+
+def test_enable_disable_swap_global():
+    reg = obs.enable()
+    assert obs.get_registry() is reg and reg.enabled
+    obs.disable()
+    assert obs.get_registry() is NULL_REGISTRY
+
+
+def test_use_registry_restores_previous():
+    reg = MetricsRegistry()
+    with use_registry(reg) as r:
+        assert obs.get_registry() is r is reg
+    assert obs.get_registry() is NULL_REGISTRY
+
+
+# -- tracing ------------------------------------------------------------------
+
+
+def test_span_nesting_and_ordering():
+    tr = Tracer()
+    with tr.span("outer", tag="a"):
+        with tr.span("inner1"):
+            pass
+        with tr.span("inner2"):
+            pass
+    with tr.span("later"):
+        pass
+    ev = {e["name"]: e for e in tr.events()}
+    assert set(ev) == {"outer", "inner1", "inner2", "later"}
+    # seq is global ENTRY order; depth is per-thread nesting
+    assert ev["outer"]["args"]["seq"] == 0
+    assert ev["inner1"]["args"]["seq"] == 1
+    assert ev["inner2"]["args"]["seq"] == 2
+    assert ev["later"]["args"]["seq"] == 3
+    assert ev["outer"]["args"]["depth"] == 0
+    assert ev["inner1"]["args"]["depth"] == 1
+    assert ev["inner2"]["args"]["depth"] == 1
+    assert ev["later"]["args"]["depth"] == 0
+    assert ev["outer"]["args"]["tag"] == "a"
+    # children are contained in the parent's [ts, ts+dur] interval
+    o = ev["outer"]
+    for name in ("inner1", "inner2"):
+        c = ev[name]
+        assert c["ts"] >= o["ts"]
+        assert c["ts"] + c["dur"] <= o["ts"] + o["dur"] + 1e-3
+
+
+def test_chrome_trace_format(tmp_path):
+    tr = Tracer()
+    with tr.span("fleet/step", t_step=8):
+        pass
+    tr.instant("marker", note="x")
+    doc = tr.to_chrome_trace()
+    assert doc["displayTimeUnit"] == "ms"
+    phs = {e["name"]: e["ph"] for e in doc["traceEvents"]}
+    assert phs == {"fleet/step": "X", "marker": "i"}
+    for e in doc["traceEvents"]:
+        assert {"name", "ph", "ts", "pid", "tid", "args"} <= set(e)
+    path = tmp_path / "t.json"
+    tr.save(path)
+    assert json.loads(path.read_text()) == doc
+
+
+def test_null_tracer_is_noop(tmp_path):
+    with NULL_TRACER.span("x"):
+        pass
+    assert NULL_TRACER.events() == []
+    assert obs.get_tracer() is NULL_TRACER
+    tr = obs.enable_tracing()
+    assert obs.get_tracer() is tr
+    obs.disable_tracing()
+    assert obs.get_tracer() is NULL_TRACER
+
+
+# -- zero-perturbation: goldens + engine bit-identity -------------------------
+
+
+def test_golden_integers_unchanged_with_obs_enabled():
+    """The committed golden fxp fixture replays integer-exact with metrics
+    AND tracing fully enabled — instrumentation never touches the datapath."""
+    from repro.core.lut import LutSpec
+
+    g = json.loads((pathlib.Path(__file__).parent / "golden"
+                    / "lstm_fxp_golden.json").read_text())
+    from repro.core.fxp import fmt_from_dict
+    fmt = fmt_from_dict(g["fmt"])
+    luts = {}
+    for name in ("sigmoid", "tanh"):
+        e = g["lut"][name]
+        spec = LutSpec(name, g["lut"]["depth"], e["lo"], e["hi"])
+        luts[name] = (jnp.asarray(np.asarray(e["table"], np.float32)), spec)
+    qp = LSTMParams(w=jnp.asarray(g["qw"], jnp.int32),
+                    b=jnp.asarray(g["qb"], jnp.int32))
+
+    reg = obs.enable()
+    obs.enable_tracing()
+    qxs = jnp.asarray(g["qxs"], jnp.int32)
+    out = g["outputs"]
+    # the bare layer scan...
+    h_seq, (qh, qc) = lstm_layer_fxp(qp, qxs, fmt, luts, return_sequence=True)
+    np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(out["h_seq"]))
+    np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
+    np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"]))
+    # ...and the instrumented dispatcher, same integers
+    from repro.core.lstm import lstm_forward
+    h_seq, (qh, qc) = lstm_forward(qp, qxs, backend="fxp", fmt=fmt, luts=luts,
+                                   return_sequence=True)
+    np.testing.assert_array_equal(np.asarray(h_seq), np.asarray(out["h_seq"]))
+    np.testing.assert_array_equal(np.asarray(qh), np.asarray(out["qh"]))
+    np.testing.assert_array_equal(np.asarray(qc), np.asarray(out["qc"]))
+    # and the registry actually saw the dispatch
+    assert reg.snapshot()["counters"]["kernel/dispatch/lstm/fxp"] >= 1
+
+
+def test_engine_bit_identical_with_and_without_obs():
+    qps, luts = _qps(), make_lut_pair(64)
+    plain = _streams([5, 9, 3, 7])
+    _engine(qps, luts).run(plain)            # registry: global NULL
+
+    reg = MetricsRegistry()
+    obs.enable_tracing()
+    observed = _streams([5, 9, 3, 7])
+    eng = _engine(qps, luts, metrics=reg)
+    eng.run(observed)
+    for a, b in zip(plain, observed):
+        np.testing.assert_array_equal(a.h_seq, b.h_seq)
+        np.testing.assert_array_equal(a.qh, b.qh)
+        np.testing.assert_array_equal(a.qc, b.qc)
+
+    snap = eng.metrics()
+    assert snap["counters"]["fleet/submit_total"] == 4
+    assert snap["counters"]["fleet/admitted_total"] == 4
+    # timesteps_total mirrors timesteps_run: t_step per batched call
+    assert snap["counters"]["fleet/timesteps_total"] == eng.timesteps_run
+    assert snap["counters"]["fleet/steps_total"] == eng.steps_run
+    assert snap["histograms"]["fleet/submit_us"]["count"] == 4
+    assert snap["histograms"]["fleet/step_us"]["count"] == eng.steps_run
+    assert snap["derived"]["timesteps_per_s"] > 0
+    # the t_step histogram uses the engine's power-of-two bucket edges
+    assert snap["histograms"]["fleet/t_step"]["edges"] == sorted(
+        float(b) for b in eng._buckets)
+    names = [e["name"] for e in obs.get_tracer().events()]
+    assert "fleet/step" in names and "fleet/kernel" in names
+
+
+def test_engine_quarantine_counts_by_reason():
+    qps, luts = _qps(), make_lut_pair(64)
+    reg = MetricsRegistry()
+    eng = _engine(qps, luts, metrics=reg)
+    good = _streams([4])
+    bad = SensorStream(rid=99, qxs=np.zeros((3, N_IN), np.float64))  # dtype
+    eng.admit([good[0], bad])
+    eng.run([])
+    snap = reg.snapshot()
+    assert snap["counters"]["fleet/quarantined_total"] == 1
+    quarantined = {k: v for k, v in snap["counters"].items()
+                   if k.startswith("fleet/quarantined/") and v}
+    assert quarantined == {"fleet/quarantined/TypeError": 1}
+    assert good[0].done
+    assert eng.quarantined == [bad] and bad.error
+
+
+# -- persistence: counters survive kill -> restore -> resume ------------------
+
+
+def test_metrics_survive_kill_restore_resume(tmp_path):
+    qps, luts = _qps(2), make_lut_pair(64)
+    mgr = CheckpointManager(tmp_path / "ck", keep=3)
+
+    reg_a = MetricsRegistry()
+    eng = _engine(qps, luts, metrics=reg_a)
+    eng.admit(_streams([12, 9, 14]))
+    for _ in range(3):
+        eng.step()
+    eng.save(mgr, step=3)
+    steps_at_save = reg_a.snapshot()["counters"]["fleet/steps_total"]
+    ts_at_save = reg_a.snapshot()["counters"]["fleet/timesteps_total"]
+    assert steps_at_save == 3
+    del eng, reg_a                           # the "killed" process
+
+    reg_b = MetricsRegistry()                # fresh process: fresh registry
+    eng2 = SensorFleetEngine.restore(mgr, qps, FMT, luts, metrics=reg_b)
+    snap = reg_b.snapshot()
+    assert snap["counters"]["fleet/steps_total"] == steps_at_save
+    assert snap["counters"]["fleet/timesteps_total"] == ts_at_save
+    while eng2.active:                       # resume to completion
+        eng2.step()
+    snap = reg_b.snapshot()
+    # CUMULATIVE, not reset: resumed steps add on top of the restored count
+    assert snap["counters"]["fleet/steps_total"] == eng2.steps_run > steps_at_save
+    assert snap["counters"]["fleet/timesteps_total"] > ts_at_save
+    assert snap["counters"]["fleet/ckpt_restores_total"] == 1
+    assert snap["histograms"]["fleet/ckpt_restore_us"]["count"] == 1
+
+
+def test_checkpoint_io_metrics(tmp_path):
+    qps, luts = _qps(), make_lut_pair(64)
+    with use_registry(MetricsRegistry()) as reg:
+        mgr = CheckpointManager(tmp_path / "ck", keep=2)
+        eng = _engine(qps, luts)             # uses the enabled global
+        eng.admit(_streams([6, 4]))
+        eng.step()
+        eng.save(mgr, step=1)
+        snap = reg.snapshot()
+        assert snap["counters"]["ckpt/saves_total"] == 1
+        assert snap["counters"]["fleet/ckpt_saves_total"] == 1
+        assert snap["counters"]["fleet/ckpt_payload_bytes"] > 0
+        assert snap["histograms"]["ckpt/save_us"]["count"] == 1
+        # orphaned tmp dir -> swept and counted on restore
+        (mgr.root / "step_9.tmp").mkdir()
+        SensorFleetEngine.restore(mgr, qps, FMT, luts)
+        snap = reg.snapshot()
+        assert snap["counters"]["ckpt/restores_total"] == 1
+        assert snap["counters"]["ckpt/torn_sweeps_total"] == 1
+        assert snap["histograms"]["ckpt/restore_us"]["count"] == 1
+
+
+def test_retry_io_metrics():
+    with use_registry(MetricsRegistry()) as reg:
+        calls = []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise OSError("transient")
+            return "ok"
+
+        assert retry_io(flaky, attempts=4, sleep=lambda _: None) == "ok"
+        assert reg.snapshot()["counters"]["ckpt/io_retries_total"] == 2
+        with pytest.raises(OSError):
+            retry_io(lambda: (_ for _ in ()).throw(OSError("dead")),
+                     attempts=2, sleep=lambda _: None)
+        snap = reg.snapshot()["counters"]
+        assert snap["ckpt/io_failures_total"] == 1
+        assert snap["ckpt/io_retries_total"] == 3
+
+
+def test_submit_rejection_counters():
+    qps, luts = _qps(), make_lut_pair(64)
+    reg = MetricsRegistry()
+    eng = _engine(qps, luts, metrics=reg)
+    with pytest.raises(TypeError):
+        eng.submit(SensorStream(rid=0, qxs=np.zeros((3, N_IN), np.float64)))
+    snap = reg.snapshot()["counters"]
+    assert snap["fleet/submit_total"] == 1
+    assert snap["fleet/submit_rejected_total"] == 1
+    assert snap["fleet/submit_rejected/TypeError"] == 1
+    assert snap.get("fleet/admitted_total", 0) == 0
