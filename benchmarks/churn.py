@@ -1,0 +1,240 @@
+"""Million-sensor churn benchmark: ingest + fleet under realistic arrivals.
+
+The paper's 17 534 inf/s is a steady-state device rate; a deployed fleet
+never sees steady state — sensors join, drain, disappear and occasionally
+send garbage.  This module generates that workload synthetically and
+deterministically (seeded Poisson arrivals per tick, ragged geometric
+stream lengths, a poison fraction for the quarantine path) and drives it
+through ``IngestQueue`` + ``SensorFleetEngine``, reporting what the
+ROADMAP's million-stream goal actually needs bounded:
+
+* **submit latency** p50/p95/p99 (µs) — wall-clock around every
+  ``queue.submit`` call, the producer-visible cost; bounded because the
+  ingest enqueue never waits on a device step.
+* **admission latency** — enqueue → slot claim, from the deterministic
+  ``fleet/ingest_wait_us`` histogram (how long a stream sits behind
+  backpressure).
+* **sustained timesteps/s** — completed per-sensor timesteps over the
+  whole run's wall time, including all churn overhead.
+
+Scalability: arrivals are generated lazily and completed streams are
+released every tick, so memory is bounded by (capacity + slots + one
+tick's arrivals) regardless of ``--streams`` — ``--streams 1000000``
+streams 10^6 logical sensors over a fixed slot budget without ever
+materialising them.  The bench row rides the usual perf trajectory:
+
+    PYTHONPATH=src:. python benchmarks/run.py --only churn --json BENCH_kernels.json
+
+or standalone (CI runs ``--smoke``, a seconds-scale N):
+
+    PYTHONPATH=src:. python benchmarks/churn.py --streams 2000 --slots 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.fxp import FxpFormat
+from repro.core.lstm import LSTMParams
+from repro.core.lut import make_lut_pair
+from repro.obs.metrics import MetricsRegistry
+from repro.serving.ingest import IngestQueue, QueueFullError
+from repro.serving.lstm_engine import SensorFleetEngine, SensorStream
+
+try:  # run.py imports us as a package module; the CLI runs us standalone
+    from benchmarks.common import sample_stats
+except ImportError:  # pragma: no cover
+    from common import sample_stats
+
+FMT = FxpFormat(8, 16)
+
+
+def churn_arrivals(n_streams: int, *, seed: int = 0, n_in: int = 1,
+                   lam: float = 4.0, mean_len: int = 24, max_len: int = 64,
+                   poison_every: int = 40):
+    """Lazy seeded churn scenario: yields ``(tick, SensorStream)``.
+
+    Per tick, ``Poisson(lam)`` sensors join; each brings a ragged
+    geometric-length stream (clipped to ``[4, max_len]``) of in-range
+    fixed-point codes.  Every ``poison_every``-th arrival is malformed
+    (float dtype — the quarantine mix: ingest must reject it at the
+    boundary without touching its neighbours).  Leave-churn needs no
+    explicit events: ragged lengths make streams drain and free slots at
+    different ticks.  O(1) memory in ``n_streams`` — nothing is
+    materialised until the consumer asks.
+    """
+    rng = np.random.default_rng(seed)
+    tick, emitted = 0, 0
+    half = min(4096, FMT.qmax // 2)
+    while emitted < n_streams:
+        for _ in range(min(int(rng.poisson(lam)), n_streams - emitted)):
+            t_len = int(np.clip(rng.geometric(1.0 / mean_len), 4, max_len))
+            if poison_every and emitted % poison_every == poison_every - 1:
+                qxs = rng.normal(size=(t_len, n_in)).astype(np.float32)
+            else:
+                qxs = rng.integers(-half, half, (t_len, n_in)).astype(np.int32)
+            yield tick, SensorStream(rid=emitted, qxs=qxs)
+            emitted += 1
+        tick += 1
+
+
+def run_churn(n_streams: int = 256, *, slots: int = 16, capacity: int = 64,
+              policy: str = "drop-oldest", seed: int = 0, chunk: int = 8,
+              n_in: int = 1, n_h: int = 20, lam: float | None = None) -> dict:
+    """Drive the churn scenario to completion; returns ``{"row", "stats"}``.
+
+    Paper-scale cell (H=20 fxp (8;16)) on the compiled ``fxp`` backend so
+    wall time measures the serving machinery, not Pallas interpret mode.
+    Deterministic for a given (n_streams, slots, capacity, policy, seed).
+    """
+    lam = max(1.0, slots / 2) if lam is None else lam
+    prng = np.random.default_rng(1234)        # params fixed; workload varies
+    qp = LSTMParams(
+        w=prng.integers(-1024, 1024, (n_in + n_h, 4 * n_h)).astype(np.int32),
+        b=prng.integers(-512, 512, (4 * n_h,)).astype(np.int32))
+    reg = MetricsRegistry()
+    eng = SensorFleetEngine(qp, FMT, make_lut_pair(256), batch_slots=slots,
+                            chunk=chunk, backend="fxp", metrics=reg)
+    # warm every t_step shape bucket, then zero the registry so the row
+    # reports the churn run only
+    eng.run([SensorStream(rid=-1 - i,
+                          qxs=np.zeros((2 * chunk - 1, n_in), np.int32))
+             for i in range(slots)])
+    reg.reset()
+    queue = IngestQueue(eng, capacity=capacity, policy=policy)
+
+    submit_us: list[float] = []
+    counts = {"arrived": 0, "queue_full": 0, "rejected": 0, "dropped": 0,
+              "quarantined": 0, "completed": 0}
+    done_timesteps = 0
+    live: list[SensorStream] = []
+
+    def harvest():
+        """Release finished/failed streams so memory stays O(capacity+slots)
+        at any --streams scale."""
+        nonlocal done_timesteps, live
+        keep = []
+        for s in live:
+            if s.done:
+                counts["completed"] += 1
+                done_timesteps += len(s.qxs)
+            elif s.error is None:
+                keep.append(s)
+        live = keep
+        counts["dropped"] += len(queue.dropped)
+        queue.dropped.clear()
+        counts["quarantined"] += len(eng.quarantined)
+        eng.quarantined.clear()
+
+    arrivals = churn_arrivals(n_streams, seed=seed, n_in=n_in, lam=lam)
+    t0 = time.perf_counter()
+    pending_next = None
+    tick = 0
+    exhausted = False
+    while not exhausted or queue.depth or eng.active:
+        while not exhausted:
+            if pending_next is None:
+                nxt = next(arrivals, None)
+                if nxt is None:
+                    exhausted = True
+                    break
+                pending_next = nxt
+            at_tick, s = pending_next
+            if at_tick > tick:
+                break
+            pending_next = None
+            counts["arrived"] += 1
+            t_sub = time.perf_counter()
+            try:
+                queue.submit(s)
+                live.append(s)
+            except QueueFullError:
+                counts["queue_full"] += 1
+            except (TypeError, ValueError):
+                counts["rejected"] += 1
+            submit_us.append((time.perf_counter() - t_sub) * 1e6)
+        queue.step()
+        harvest()
+        tick += 1
+    harvest()
+    wall_s = time.perf_counter() - t0
+
+    st = sample_stats(submit_us)
+    snap = reg.snapshot()
+    hists = snap.get("histograms", {})
+
+    def _hq(name, q):
+        # snapshot histograms carry deterministic p50/p95/p99 (repro.obs)
+        h = hists.get(name)
+        return (h or {}).get(q) or 0.0
+
+    sustained = done_timesteps / wall_s if wall_s else 0.0
+    row = {
+        "name": "serving/lstm_fleet_churn",
+        "us_per_call": round(st["us_per_call"], 1),
+        "p50_us": round(st["p50_us"], 1),
+        "p95_us": round(st["p95_us"], 1),
+        "p99_us": round(st["p99_us"], 1),
+        "cv": round(st["cv"], 3), "n": st["n"],
+        "derived": (
+            f"{counts['arrived']} churn arrivals via {slots} slots "
+            f"cap{capacity} {policy} H{n_h}; {counts['completed']} completed "
+            f"{counts['dropped']} dropped {counts['rejected']} rejected "
+            f"{counts['quarantined']} quarantined; admission "
+            f"p50={_hq('fleet/ingest_wait_us', 'p50'):.0f}us "
+            f"p99={_hq('fleet/ingest_wait_us', 'p99'):.0f}us; "
+            f"queue depth p99={_hq('fleet/ingest_queue_depth_hist', 'p99'):.0f}; "
+            f"{sustained:.0f} sensor timesteps/s sustained"),
+    }
+    return {"row": row, "stats": st, "counts": counts, "wall_s": wall_s,
+            "sustained_timesteps_per_s": sustained, "snapshot": snap}
+
+
+def run():
+    """run.py entry point (tag ``churn``): one moderate-N row."""
+    return [run_churn(n_streams=256, slots=16, capacity=64,
+                      policy="drop-oldest")["row"]]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--streams", type=int, default=2000,
+                    help="logical streams to churn through (scales to 1e6)")
+    ap.add_argument("--slots", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=64)
+    ap.add_argument("--policy", default="drop-oldest",
+                    choices=("reject", "drop-oldest", "block-with-deadline"))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI run (small N, asserts the row)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append the row to a JSON perf trajectory")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.streams, args.slots, args.capacity = 48, 4, 16
+    res = run_churn(args.streams, slots=args.slots, capacity=args.capacity,
+                    policy=args.policy, seed=args.seed)
+    row = res["row"]
+    print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+    print(f"submit p50/p95/p99 = {row['p50_us']}/{row['p95_us']}/"
+          f"{row['p99_us']} us over n={row['n']}; wall {res['wall_s']:.2f}s")
+    if args.smoke:
+        c = res["counts"]
+        assert c["completed"] > 0 and row["p99_us"] > 0.0, c
+        assert c["arrived"] == args.streams, c
+        print("churn smoke OK")
+    if args.json:
+        try:
+            from benchmarks.run import append_run, bench_env
+        except ImportError:  # pragma: no cover
+            from run import append_run, bench_env
+        append_run(args.json, [row], only="churn", env=bench_env())
+        print(f"appended churn row to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

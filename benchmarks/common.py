@@ -37,11 +37,30 @@ def timeit(fn, *args, n: int = 5, warmup: int = 2):
     return best * 1e6
 
 
+def sample_stats(samples) -> dict:
+    """Dispersion summary over raw samples (µs): median (the headline
+    ``us_per_call``), ``p50_us``/``p95_us``/``p99_us`` and the coefficient
+    of variation ``cv`` (std/mean) — best-of-n alone hides run-to-run and
+    tail noise, which is exactly what a perf trajectory needs to expose.
+    Shared by ``timeit_stats`` (call timing) and ``benchmarks.churn``
+    (per-submit latency samples)."""
+    ss = sorted(samples)
+    if not ss:
+        return {"us_per_call": 0.0, "p50_us": 0.0, "p95_us": 0.0,
+                "p99_us": 0.0, "cv": 0.0, "n": 0}
+    p50 = ss[len(ss) // 2] if len(ss) % 2 else (ss[len(ss) // 2 - 1]
+                                                + ss[len(ss) // 2]) / 2
+    p95 = ss[min(len(ss) - 1, int(0.95 * len(ss)))]
+    p99 = ss[min(len(ss) - 1, int(0.99 * len(ss)))]
+    mean = sum(ss) / len(ss)
+    var = sum((s - mean) ** 2 for s in ss) / len(ss)
+    cv = (var ** 0.5) / mean if mean else 0.0
+    return {"us_per_call": p50, "p50_us": p50, "p95_us": p95, "p99_us": p99,
+            "cv": cv, "n": len(ss)}
+
+
 def timeit_stats(fn, *args, n: int = 5, warmup: int = 2) -> dict:
-    """Repeat-sample timing with dispersion: median (the headline
-    ``us_per_call``), ``p50_us``/``p95_us`` and the coefficient of variation
-    ``cv`` (std/mean) — best-of-n alone hides run-to-run noise, which is
-    exactly what a perf trajectory needs to expose."""
+    """Repeat-sample timing with dispersion (see ``sample_stats``)."""
     for _ in range(warmup):
         r = fn(*args)
         jnp.asarray(r[0] if isinstance(r, tuple) else r).block_until_ready()
@@ -51,12 +70,4 @@ def timeit_stats(fn, *args, n: int = 5, warmup: int = 2) -> dict:
         r = fn(*args)
         jnp.asarray(r[0] if isinstance(r, tuple) else r).block_until_ready()
         samples.append((time.perf_counter() - t0) * 1e6)
-    ss = sorted(samples)
-    p50 = ss[len(ss) // 2] if len(ss) % 2 else (ss[len(ss) // 2 - 1]
-                                                + ss[len(ss) // 2]) / 2
-    p95 = ss[min(len(ss) - 1, int(0.95 * len(ss)))]
-    mean = sum(ss) / len(ss)
-    var = sum((s - mean) ** 2 for s in ss) / len(ss)
-    cv = (var ** 0.5) / mean if mean else 0.0
-    return {"us_per_call": p50, "p50_us": p50, "p95_us": p95,
-            "cv": cv, "n": len(ss)}
+    return sample_stats(samples)

@@ -105,8 +105,8 @@ def main(argv=None) -> None:
                     help="append rows to a JSON perf-trajectory file")
     args = ap.parse_args(argv)
 
-    from benchmarks import (fig6_frac_bits, fig35_breakdown, kernel_bench,
-                            roofline_report, table1_lut_depth,
+    from benchmarks import (churn, fig6_frac_bits, fig35_breakdown,
+                            kernel_bench, roofline_report, table1_lut_depth,
                             table2_resources, table3_throughput)
 
     modules = [
@@ -116,6 +116,7 @@ def main(argv=None) -> None:
         ("table3", table3_throughput),
         ("fig35", fig35_breakdown),
         ("kernels", kernel_bench),
+        ("churn", churn),
         ("roofline", roofline_report),
     ]
     if args.only is not None:
@@ -135,7 +136,7 @@ def main(argv=None) -> None:
                          "us_per_call": row["us_per_call"],
                          "derived": derived}
                 # dispersion fields from timeit_stats rows, when present
-                for k in ("p50_us", "p95_us", "cv", "n"):
+                for k in ("p50_us", "p95_us", "p99_us", "cv", "n"):
                     if k in row:
                         entry[k] = row[k]
                 all_rows.append(entry)

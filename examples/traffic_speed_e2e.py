@@ -20,6 +20,16 @@ runs; add ``--kill-after N`` to crash the fleet mid-flight, restore from the
 last checkpoint, and watch every surviving stream finish bit-identical to
 an uninterrupted run (``tests/spmd_scripts/check_fleet_restore.py``).
 
+``--engine --ingest`` puts the bounded admission queue
+(``repro.serving.ingest.IngestQueue``) in front of the engine: sensor
+submits become O(validation) enqueues that never wait on a device step,
+backpressure is an explicit policy (``--ingest-policy``
+reject / drop-oldest / block-with-deadline) instead of an implicit stall,
+and the drained integers stay bit-identical to calling ``engine.run``
+directly (``tests/test_ingest.py``).  With ``--checkpoint-dir`` /
+``--kill-after`` the still-enqueued streams ride the checkpoint and
+survive the crash too.
+
 ``--cell gru`` runs the same pipeline end to end on the quantised GRU
 (``repro.core.cell.GRU_CELL``): training, PTQ/QAT, the fused stack kernel
 and the fleet engine are all cell-generic, and every flag above composes.
@@ -38,6 +48,8 @@ or https://ui.perfetto.dev — with zero perturbation of the served integers.
         --checkpoint-dir /tmp/fleet_ck --kill-after 4
     PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --sensors 32 \
         --metrics-json m.json --trace-json t.json
+    PYTHONPATH=src python examples/traffic_speed_e2e.py --engine --ingest \
+        --ingest-capacity 32 --sensors 64
 """
 
 import argparse
@@ -97,6 +109,20 @@ def main(argv=None):
                     help="fractional bits of the QAT operating point "
                          "(total width sized by range calibration)")
     ap.add_argument("--qat-epochs", type=int, default=2)
+    ap.add_argument("--ingest", action="store_true",
+                    help="front the engine with the bounded admission queue "
+                         "(repro.serving.ingest.IngestQueue): submits become "
+                         "O(validation) enqueues, admission drains FIFO into "
+                         "free slots, served integers unchanged "
+                         "(--engine only)")
+    ap.add_argument("--ingest-capacity", type=int, default=64,
+                    help="admission queue capacity (--ingest only)")
+    ap.add_argument("--ingest-policy", default="reject",
+                    choices=["reject", "drop-oldest", "block-with-deadline"],
+                    help="backpressure policy when the queue is full "
+                         "(--ingest only; the driver retries rejected "
+                         "submits after a step, so 'reject' still serves "
+                         "every sensor)")
     ap.add_argument("--checkpoint-dir", metavar="DIR",
                     help="snapshot the engine's full serving state (slot "
                          "table, all layers' (h, c) carry, per-stream "
@@ -125,6 +151,8 @@ def main(argv=None):
                  "SensorFleetEngine; pass --engine too")
     if args.kill_after is not None and not args.checkpoint_dir:
         ap.error("--kill-after needs --checkpoint-dir to restore from")
+    if args.ingest and not args.engine:
+        ap.error("--ingest fronts the SensorFleetEngine; pass --engine too")
     _enable_obs(args)
 
     # --- train on one sensor (paper; --cell gru swaps the recurrent cell) ---
@@ -264,8 +292,68 @@ def serve_fleet_engine(qmodel, args):
 
     streams = _streams()
     eng = _engine()
+    queue = None
+    if args.ingest:
+        from repro.serving.ingest import IngestQueue
+        queue = IngestQueue(eng, capacity=args.ingest_capacity,
+                            policy=args.ingest_policy)
+        print(f"ingest queue: capacity {queue.capacity}, policy "
+              f"{queue.policy!r} — submits are O(validation) enqueues that "
+              "never wait on a device step")
     t0 = time.time()
-    if args.checkpoint_dir:
+    if args.checkpoint_dir and queue is not None:
+        from repro.checkpoint.checkpoint import CheckpointManager
+        from repro.serving.faults import (IngestFaultPlan, InjectedKill,
+                                          serve_through_ingest)
+        from repro.serving.ingest import IngestQueue
+        mgr = CheckpointManager(args.checkpoint_dir, keep=3)
+        # sensors trickle in four per tick instead of all up front, so the
+        # kill lands with streams still sitting in the admission queue
+        arrivals = [(i // 4 + 1, s) for i, s in enumerate(streams)]
+        try:
+            serve_through_ingest(
+                queue, arrivals, mgr, every=2,
+                plan=IngestFaultPlan(kill_after_steps=args.kill_after))
+        except InjectedKill:
+            print(f"KILLED after {args.kill_after} steps; last published "
+                  f"checkpoint: step {mgr.latest_step()} — restoring "
+                  "(in-queue streams ride the checkpoint)...")
+            queue = IngestQueue.restore(mgr, qmodel.lstm, fmt, luts,
+                                        mesh=mesh, backend=args.backend,
+                                        chunk=8, time_tile=8,
+                                        capacity=args.ingest_capacity,
+                                        policy=args.ingest_policy)
+            eng = queue.engine
+            print(f"restored with {queue.depth} stream(s) still enqueued "
+                  f"and {len(eng.active)} in flight")
+            # streams submitted after the last checkpoint died with the
+            # process; their clients resubmit from scratch (fresh copies —
+            # the dead objects' buffers are half-written)
+            fresh = _streams()
+            alive = ({s.rid for s in eng.active.values()}
+                     | {s.rid for s in queue.queued}
+                     | {p.rid for _, p in arrivals})
+            lost = [fresh[s.rid] for s in streams
+                    if not s.done and s.rid not in alive]
+            if lost:
+                print(f"{len(lost)} streams admitted after the checkpoint "
+                      "were lost with the process; resubmitting")
+            survivors = (list(eng.active.values()) + list(queue.queued)
+                         + [p for _, p in arrivals] + lost)
+            queue.run([p for _, p in arrivals] + lost)
+            golden = _streams()                  # uninterrupted oracle run
+            _engine().run(golden)
+            golden_by_rid = {g.rid: g for g in golden}
+            for s in survivors:
+                np.testing.assert_array_equal(s.h_seq,
+                                              golden_by_rid[s.rid].h_seq)
+            print(f"{len(survivors)} surviving streams (incl. the enqueued "
+                  "ones) resumed and finished BIT-IDENTICAL to the "
+                  "uninterrupted run")
+            by_rid = {s.rid: s for s in streams}
+            by_rid.update((s.rid, s) for s in survivors)
+            streams = [by_rid[r] for r in sorted(by_rid)]
+    elif args.checkpoint_dir:
         from repro.checkpoint.checkpoint import CheckpointManager
         from repro.serving.faults import (FaultPlan, InjectedKill,
                                           serve_with_checkpoints)
@@ -307,6 +395,8 @@ def serve_fleet_engine(qmodel, args):
             by_rid = {s.rid: s for s in streams}
             by_rid.update((s.rid, s) for s in survivors)
             streams = [by_rid[r] for r in sorted(by_rid)]
+    elif queue is not None:
+        queue.run(streams)
     else:
         eng.run(streams)
     dt = time.time() - t0

@@ -18,17 +18,22 @@ case "${1:-all}" in
   # battery rides the spmd smoke above), then the cell-equivalence gate
   # (CellSpec plumbing + fxp GRU vs ref/golden integers), then the
   # observability gate (metrics/tracing determinism + zero-perturbation
-  # goldens + counter persistence across kill/restore), then everything
-  # not marked slow.  The slow tier picks up the QAT fine-tuning sweep, the
-  # 8-device SPMD equivalence + kill-restore batteries, and the GRU
-  # hypothesis sweeps via their 'slow' markers.
+  # goldens + counter persistence across kill/restore), then the ingest
+  # gate (non-blocking admission: backpressure policies, FIFO-drain
+  # bit-identity, enqueued-stream kill/restore) plus a small-N churn smoke
+  # so the benchmark path itself is exercised, then everything not marked
+  # slow.  The slow tier picks up the QAT fine-tuning sweep, the 8-device
+  # SPMD equivalence + kill-restore batteries, and the GRU hypothesis
+  # sweeps via their 'slow' markers.
   fast) python -m pytest -x -q tests/test_hlo_analysis.py && \
         python -m pytest -x -q -m "qat and not slow" && \
         python -m pytest -x -q -m "spmd and not slow" && \
         python -m pytest -x -q -m "faults and not slow and not spmd" && \
         python -m pytest -x -q -m "cells and not slow and not qat and not spmd and not faults" && \
         python -m pytest -x -q -m "obs and not slow" && \
-        exec python -m pytest -x -q -m "not slow and not qat and not spmd and not faults and not cells and not obs" ;;
+        python -m pytest -x -q -m "ingest and not slow" && \
+        PYTHONPATH=src:. python benchmarks/churn.py --smoke && \
+        exec python -m pytest -x -q -m "not slow and not qat and not spmd and not faults and not cells and not obs and not ingest" ;;
   slow) exec python -m pytest -q -m slow ;;
   all)  exec python -m pytest -x -q ;;
   *) echo "usage: $0 [fast|slow|all]" >&2; exit 2 ;;

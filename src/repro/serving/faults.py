@@ -28,6 +28,17 @@ Injectable faults:
   dtype/ndim/feature-width, empty, fixed-point overflow), and
   ``poison_mid_flight`` corrupts an *admitted* stream so the engine's
   per-step quarantine path has something to catch.
+* **ingest queue overflow** — ``IngestFaultPlan(overflow_at=N,
+  overflow_burst=B)`` floods the ``IngestQueue`` with B extra arrivals
+  just before serving step N (an arrival storm): the queue's backpressure
+  policy — not an exception in the serving loop — must absorb it
+  (``reject`` → counted ``QueueFullError``s, ``drop-oldest`` → bounded
+  evictions), and the streams already enqueued still finish bit-exact.
+* **slow consumer** — ``IngestFaultPlan(stall_from=N, stall_steps=K)``
+  freezes the serving side (no ``pump``, no ``engine.step``) for K loop
+  iterations starting at step N while arrivals keep landing, so the queue
+  backs up exactly as it would behind a stalled device; admission must
+  resume FIFO afterwards with identical integers.
 
 Device-count change (D -> D') is not a fault to inject — it is the restore
 path itself: ``SensorFleetEngine.restore(..., mesh=)`` /
@@ -49,9 +60,10 @@ from repro.checkpoint.checkpoint import CheckpointManager, _flatten_with_names
 from repro.obs.metrics import get_registry as _obs_metrics
 
 __all__ = [
-    "InjectedKill", "FaultPlan", "retry_io", "torn_save", "corrupt_published",
-    "FlakyCheckpointManager", "poison_stream", "poison_mid_flight",
-    "POISON_KINDS", "serve_with_checkpoints",
+    "InjectedKill", "FaultPlan", "IngestFaultPlan", "retry_io", "torn_save",
+    "corrupt_published", "FlakyCheckpointManager", "poison_stream",
+    "poison_mid_flight", "POISON_KINDS", "serve_with_checkpoints",
+    "serve_through_ingest",
 ]
 
 
@@ -68,6 +80,27 @@ class FaultPlan:
 
     kill_after_steps: int | None = None   # SIGKILL after the N-th step
     torn_write_at: int | None = None      # the save at step K dies mid-write
+
+
+@dataclasses.dataclass
+class IngestFaultPlan(FaultPlan):
+    """``FaultPlan`` extended with the ingest-layer faults
+    ``serve_through_ingest`` injects (step counts are loop iterations of
+    the current call, like the base plan's):
+
+    * ``overflow_at``/``overflow_burst`` — queue-overflow burst: before
+      loop step N, submit B extra streams (from ``burst_streams``) on top
+      of the scheduled arrivals; the queue's policy must absorb the storm.
+    * ``stall_from``/``stall_steps`` — slow consumer: loop steps
+      ``[stall_from, stall_from + stall_steps)`` skip the serving side
+      entirely (no pump, no engine step) while arrivals continue, so the
+      queue depth grows against capacity.
+    """
+
+    overflow_at: int | None = None        # burst lands before loop step N
+    overflow_burst: int = 0               # how many extra streams in the burst
+    stall_from: int | None = None         # first stalled loop step
+    stall_steps: int = 0                  # how many steps the consumer stalls
 
 
 def retry_io(fn: Callable[[], Any], *, attempts: int = 3,
@@ -217,3 +250,66 @@ def serve_with_checkpoints(engine, pending: list, manager, *, every: int = 1,
                 and steps_done >= plan.kill_after_steps:
             raise InjectedKill(f"killed after step {steps_done}")
     return steps_done
+
+
+def serve_through_ingest(queue, arrivals: list, manager=None, *,
+                         every: int = 0, plan: IngestFaultPlan | None = None,
+                         burst_streams: list | None = None,
+                         mode: str = "sync") -> dict:
+    """Drive scheduled ``arrivals`` through an ``IngestQueue`` with the
+    ingest-layer faults injected at their exact loop steps.
+
+    ``arrivals`` is a list of ``(at_step, stream)`` pairs in FIFO order
+    (drained IN PLACE, like ``serve_with_checkpoints``'s pending list, so
+    after an ``InjectedKill`` the caller holds exactly the never-submitted
+    tail); every loop iteration submits the arrivals due at that step, then
+    — unless the slow-consumer stall window is active — runs one
+    ``queue.step()`` and the optional checkpoint cadence (``manager`` +
+    ``every``, through ``queue.save`` so enqueued streams ride along).
+    ``QueueFullError`` and validation rejections are counted, never raised:
+    backpressure is the behaviour under test, not a loop failure.  Returns
+    the counts ``{"steps", "enqueued", "queue_full", "rejected",
+    "stalled_steps"}``.
+    """
+    from repro.serving.ingest import QueueFullError
+
+    plan = plan or IngestFaultPlan()
+    burst = list(burst_streams or [])
+    stats = {"steps": 0, "enqueued": 0, "queue_full": 0, "rejected": 0,
+             "stalled_steps": 0}
+
+    def _submit(s):
+        try:
+            queue.submit(s)
+            stats["enqueued"] += 1
+        except QueueFullError:
+            stats["queue_full"] += 1
+        except (TypeError, ValueError):
+            stats["rejected"] += 1
+
+    loop_i = 0
+    while arrivals or queue.depth or queue.engine.active:
+        loop_i += 1
+        if plan.overflow_at == loop_i:
+            for s in burst[:plan.overflow_burst]:
+                _submit(s)
+        while arrivals and arrivals[0][0] <= loop_i:
+            _submit(arrivals.pop(0)[1])
+        if plan.stall_from is not None \
+                and plan.stall_from <= loop_i \
+                < plan.stall_from + plan.stall_steps:
+            stats["stalled_steps"] += 1   # consumer frozen: queue backs up
+            continue
+        queue.step()
+        stats["steps"] += 1
+        if manager is not None and every and stats["steps"] % every == 0:
+            if plan.torn_write_at == stats["steps"]:
+                torn_save(manager, queue.engine.steps_run,
+                          *queue.checkpoint_payload())
+                raise InjectedKill(
+                    f"killed mid-save at ingest step {stats['steps']}")
+            queue.save(manager, mode=mode)
+        if plan.kill_after_steps is not None \
+                and stats["steps"] >= plan.kill_after_steps:
+            raise InjectedKill(f"killed after ingest step {stats['steps']}")
+    return stats

@@ -345,6 +345,26 @@ class SensorFleetEngine:
         return snap
 
     def _count_quarantine(self, kind: str) -> None:
+        """Count a MID-FLIGHT quarantine (an admitted stream whose buffers
+        were corrupted under us).
+
+        Metric contract (pinned by tests/test_obs.py): a stream failure is
+        counted exactly once, under the boundary where it happened —
+
+        * ``fleet/submit_rejected_total`` + ``fleet/submit_rejected/<Exc>``:
+          validation failures at the engine's submit boundary (direct
+          ``submit`` and ``admit`` drains route here, once; the ingest
+          queue's enqueue-time rejections count under
+          ``fleet/ingest_rejected/*`` instead — the stream never reaches
+          the engine).
+        * ``fleet/quarantined_total`` + ``fleet/quarantined/<kind>``: ONLY
+          streams evicted mid-flight by ``_poison_reason`` — never
+          boundary rejections.
+        * ``fleet/admit_rejected_total``: how many streams ``admit()``
+          dropped from its pending list — a disposition count that overlaps
+          ``fleet/submit_rejected_total`` by design (same event, admission
+          view), NOT the quarantine counters.
+        """
         m = self.obs
         m.inc("fleet/quarantined_total")
         m.inc(f"fleet/quarantined/{kind}")
@@ -420,7 +440,17 @@ class SensorFleetEngine:
             m.inc("fleet/submit_full_total")
         return ok
 
-    def _submit_inner(self, stream: SensorStream) -> bool:
+    def validate_stream(self, stream: SensorStream):
+        """Validate ``stream`` at the submit boundary WITHOUT claiming a
+        slot, returning the normalised ``(qxs, h0, c0)`` arrays.
+
+        This is the O(validation) part of ``submit`` — dtype/shape/range
+        checks plus state normalisation, no device work and no slot claim —
+        factored out so the ingest layer (``repro.serving.ingest``) can
+        reject malformed streams at enqueue time, long before a slot frees
+        up.  Raises TypeError/ValueError exactly like ``submit``; does not
+        mutate the stream.
+        """
         qxs = np.asarray(stream.qxs)
         if not np.issubdtype(qxs.dtype, np.integer):
             if np.issubdtype(qxs.dtype, np.floating) \
@@ -456,6 +486,10 @@ class SensorFleetEngine:
             c0 = None
         else:
             c0 = self._state_init(stream.rid, stream.qc0, "qc0")
+        return qxs, h0, c0
+
+    def _submit_inner(self, stream: SensorStream) -> bool:
+        qxs, h0, c0 = self.validate_stream(stream)
         free = self.free_slots()
         if not free:
             return False
@@ -509,7 +543,13 @@ class SensorFleetEngine:
     def admit(self, pending: list) -> None:
         """Drain ``pending`` (in place) into free slots, quarantining
         malformed streams instead of raising — the graceful bulk-admission
-        face of ``submit`` (one poison request must not kill the fleet)."""
+        face of ``submit`` (one poison request must not kill the fleet).
+
+        A rejected stream is counted ONCE, by ``submit``'s boundary
+        counters (``fleet/submit_rejected/*``); admit only adds
+        ``fleet/admit_rejected_total`` (its own disposition count) and
+        never touches the quarantine counters, which are reserved for
+        mid-flight corruption (see ``_count_quarantine``)."""
         m = self.obs
         m.gauge("fleet/admit_queue_depth", len(pending))
         try:
@@ -521,7 +561,7 @@ class SensorFleetEngine:
                     bad = pending.pop(0)
                     bad.error = f"{type(e).__name__}: {e}"
                     self.quarantined.append(bad)
-                    self._count_quarantine(type(e).__name__)
+                    m.inc("fleet/admit_rejected_total")
                     continue
                 pending.pop(0)
         finally:
@@ -592,6 +632,9 @@ class SensorFleetEngine:
                     s.qh = qh_np[:, slot].copy()
                     s.qc = None if qc_np is None else qc_np[:, slot].copy()
                 s.done = True
+            # freed slots must show immediately: between steps the gauge is
+            # the live occupancy, not the pre-kernel batch size
+            m.gauge("fleet/slot_occupancy", len(self.active) / self.slots)
 
     def run(self, streams: list[SensorStream]) -> list[SensorStream]:
         """Drive ``streams`` to completion with continuous batching.
@@ -660,7 +703,7 @@ class SensorFleetEngine:
 
     def save(self, manager, step: int | None = None, *, mode: str = "sync",
              attempts: int = 3, base_delay: float = 0.05,
-             sleep=time.sleep) -> int:
+             sleep=time.sleep, payload: tuple | None = None) -> int:
         """Checkpoint the in-flight serving state through ``manager``
         (``repro.checkpoint.CheckpointManager``: atomic tmp-rename writes,
         manifest validation).
@@ -670,6 +713,10 @@ class SensorFleetEngine:
         synchronous path rides a bounded retry-with-backoff
         (``serving.faults.retry_io``) so one flaky I/O burst doesn't drop
         the fleet.  Returns the step number written.
+
+        ``payload=`` overrides the ``(tree, extra)`` written — wrappers
+        that extend the serving state (``IngestQueue`` rides its in-queue
+        streams alongside) reuse the same retry/async/metrics machinery.
         """
         from repro.serving.faults import retry_io
 
@@ -678,7 +725,8 @@ class SensorFleetEngine:
         step = self.steps_run if step is None else step
         with m.time("fleet/ckpt_save_us"), tr.span("fleet/ckpt_save",
                                                    step=step, mode=mode):
-            tree, extra = self.checkpoint_payload()
+            tree, extra = (self.checkpoint_payload() if payload is None
+                           else payload)
             if mode == "async":
                 manager.save_async(step, tree, extra=extra)
             elif mode == "sync":

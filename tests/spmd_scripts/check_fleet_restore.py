@@ -288,8 +288,60 @@ def check_async_checkpoint_restore():
         _assert_resumed_matches(golden, eng, pending, f"async->{ndev}dev")
 
 
+def check_ingest_kill_restore_reshard():
+    """ISSUE 10: a fleet fronted by the ``IngestQueue`` is killed with
+    streams still ENQUEUED (admitted to the queue, never to a slot); the
+    checkpoint carries the in-queue streams, restore onto D' devices
+    rebuilds queue + engine, and the drained continuation is integer-equal
+    to the uninterrupted golden run — nothing in the admission backlog is
+    lost or reordered."""
+    from repro.serving.faults import IngestFaultPlan, serve_through_ingest
+    from repro.serving.ingest import IngestQueue
+
+    qps, luts = _stack_setup(2, key=21)
+    golden = _golden_run(qps, luts, n_layers=2, with_state=(1,))
+    for ndev in RESHARD_TO:
+        with tempfile.TemporaryDirectory() as td:
+            mgr = CheckpointManager(td, keep=3)
+            eng = SensorFleetEngine(qps, FMT, luts, batch_slots=SLOTS,
+                                    chunk=4, backend="fxp", interpret=True,
+                                    mesh=_mesh_for(NDEV))
+            queue = IngestQueue(eng, capacity=len(LENS), policy="reject")
+            arrivals = [(1, s) for s in
+                        _make_streams(LENS, n_layers=2, with_state=(1,))]
+            try:
+                serve_through_ingest(queue, arrivals, mgr, every=1,
+                                     plan=IngestFaultPlan(kill_after_steps=1))
+            except InjectedKill:
+                pass
+            else:
+                raise AssertionError("the injected kill never fired")
+            mgr.wait()
+            q2 = IngestQueue.restore(mgr, qps, FMT, luts,
+                                     mesh=_mesh_for(ndev), interpret=True)
+            assert q2.depth > 0, "kill must land with streams still enqueued"
+            owned = list(q2.engine.active.values()) + \
+                [s for s, _ in q2._queue]
+            while q2.depth or q2.engine.active:
+                q2.step()
+            golden_by_rid = {g.rid: g for g in golden}
+            for s in owned:
+                assert s.done, f"ingest reshard: stream {s.rid} unfinished"
+                g = golden_by_rid[s.rid]
+                np.testing.assert_array_equal(
+                    s.h_seq, g.h_seq,
+                    err_msg=f"ingest reshard {NDEV}->{ndev}: "
+                            f"stream {s.rid} h_seq")
+                np.testing.assert_array_equal(s.qh, g.qh)
+                np.testing.assert_array_equal(s.qc, g.qc)
+            if args.verbose:
+                print(f"  ingest D={NDEV} -> D'={ndev}: {len(owned)} streams "
+                      "(incl. enqueued) resumed integer-identical", flush=True)
+
+
 _check(check_kill_restore_reshard_battery)
 _check(check_gru_kill_restore_reshard)
+_check(check_ingest_kill_restore_reshard)
 _check(check_elastic_policy_restore)
 _check(check_torn_write_fallback_reshard)
 _check(check_async_checkpoint_restore)

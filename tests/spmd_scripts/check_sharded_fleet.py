@@ -310,6 +310,44 @@ def check_golden_replay_sharded():
                                       err_msg=f"golden stream {s.rid} qc")
 
 
+def check_golden_replay_sharded_via_ingest():
+    """ISSUE 10 acceptance, cross-device half: the committed fixture replayed
+    through the ``IngestQueue`` in front of the SHARDED engine — queue-drained
+    admission must leave every stream's integers exactly as the committed
+    golden (the unsharded ingest replay rides tests/test_ingest.py)."""
+    from repro.serving.ingest import IngestQueue
+
+    g = json.loads(GOLDEN.read_text())
+    fmt = FxpFormat(**g["fmt"])
+    luts = {}
+    for name in ("sigmoid", "tanh"):
+        e = g["lut"][name]
+        spec = LutSpec(name, g["lut"]["depth"], e["lo"], e["hi"])
+        luts[name] = (jnp.asarray(np.asarray(e["table"], np.float32)), spec)
+    qps = [LSTMParams(w=jnp.asarray(w, jnp.int32), b=jnp.asarray(b, jnp.int32))
+           for w, b in zip(g["qw"], g["qb"])]
+    streams = [SensorStream(
+        rid=s["rid"], qxs=np.asarray(s["qxs"], np.int32),
+        qh0=None if s["qh0"] is None else np.asarray(s["qh0"], np.int32),
+        qc0=None if s["qc0"] is None else np.asarray(s["qc0"], np.int32),
+    ) for s in g["streams"]]
+    eng = SensorFleetEngine(qps, fmt, luts,
+                            batch_slots=g["engine"]["batch_slots"],
+                            chunk=g["engine"]["chunk"], backend="fxp",
+                            mesh=MESH, interpret=True)
+    # capacity below the stream count so the queue exercises real
+    # backpressure (reject + caller retry) while draining FIFO
+    IngestQueue(eng, capacity=4, policy="reject").run(streams)
+    for s, out in zip(streams, g["outputs"]):
+        np.testing.assert_array_equal(
+            s.h_seq, np.asarray(out["h_seq"], np.int32),
+            err_msg=f"golden stream {s.rid} h_seq (ingest, sharded x{NDEV})")
+        np.testing.assert_array_equal(s.qh, np.asarray(out["qh"], np.int32),
+                                      err_msg=f"golden stream {s.rid} qh")
+        np.testing.assert_array_equal(s.qc, np.asarray(out["qc"], np.int32),
+                                      err_msg=f"golden stream {s.rid} qc")
+
+
 def check_schedule(path):
     """One hypothesis-drawn schedule: sharded vs unsharded vs solo oracle."""
     sched = json.loads(pathlib.Path(path).read_text())
@@ -343,6 +381,7 @@ else:
     _check(check_mid_flight_join_leave_placement)
     _check(check_gru_stacked_churn)
     _check(check_golden_replay_sharded)
+    _check(check_golden_replay_sharded_via_ingest)
 
 if _failures:
     print(f"\n{len(_failures)} check(s) failed: {', '.join(_failures)}",

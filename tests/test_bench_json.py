@@ -107,6 +107,8 @@ def test_timeit_stats_shape():
 
     st = timeit_stats(fn, n=5, warmup=2)
     assert len(calls) == 7                      # warmup + samples
-    assert set(st) == {"us_per_call", "p50_us", "p95_us", "cv", "n"}
-    assert st["us_per_call"] == st["p50_us"] <= st["p95_us"]
+    assert set(st) == {"us_per_call", "p50_us", "p95_us", "p99_us",
+                       "cv", "n"}
+    assert (st["us_per_call"] == st["p50_us"]
+            <= st["p95_us"] <= st["p99_us"])
     assert st["cv"] >= 0.0 and st["n"] == 5

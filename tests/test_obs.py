@@ -333,6 +333,11 @@ def test_engine_bit_identical_with_and_without_obs():
 
 
 def test_engine_quarantine_counts_by_reason():
+    """The single-count rejection contract (see ``_count_quarantine``):
+    a stream malformed at the submit boundary counts ONCE under
+    ``fleet/submit_rejected/*`` — admit() adds its own disposition count
+    but never inflates the quarantine counters, which are reserved for
+    mid-flight corruption."""
     qps, luts = _qps(), make_lut_pair(64)
     reg = MetricsRegistry()
     eng = _engine(qps, luts, metrics=reg)
@@ -341,12 +346,44 @@ def test_engine_quarantine_counts_by_reason():
     eng.admit([good[0], bad])
     eng.run([])
     snap = reg.snapshot()
-    assert snap["counters"]["fleet/quarantined_total"] == 1
-    quarantined = {k: v for k, v in snap["counters"].items()
-                   if k.startswith("fleet/quarantined/") and v}
-    assert quarantined == {"fleet/quarantined/TypeError": 1}
+    # boundary rejection: submit counters only, exactly once
+    assert snap["counters"]["fleet/submit_rejected_total"] == 1
+    assert snap["counters"]["fleet/submit_rejected/TypeError"] == 1
+    assert snap["counters"]["fleet/admit_rejected_total"] == 1
+    assert snap["counters"].get("fleet/quarantined_total", 0) == 0
     assert good[0].done
     assert eng.quarantined == [bad] and bad.error
+
+    # mid-flight corruption: quarantine counters only (by reason kind)
+    from repro.serving.faults import poison_mid_flight
+    eng2 = _engine(qps, luts, metrics=(reg2 := MetricsRegistry()))
+    victim, survivor = _streams([8, 8], seed=1)
+    eng2.admit([victim, survivor])
+    eng2.step()
+    poison_mid_flight(victim, N_IN)
+    eng2.run([])
+    snap2 = reg2.snapshot()["counters"]
+    assert snap2["fleet/quarantined_total"] == 1
+    assert snap2["fleet/quarantined/qxs_shape"] == 1
+    assert snap2.get("fleet/submit_rejected_total", 0) == 0
+    assert survivor.done
+
+
+def test_slot_occupancy_gauge_updates_when_slots_free():
+    """Regression (ISSUE 10): the gauge must reflect freed slots after a
+    step, not the pre-kernel batch size — an idle fleet reports 0.0."""
+    qps, luts = _qps(), make_lut_pair(64)
+    reg = MetricsRegistry()
+    eng = _engine(qps, luts, metrics=reg)      # 4 slots
+    short, long = _streams([4, 12])
+    eng.admit([short, long])
+    assert reg.snapshot()["gauges"]["fleet/slot_occupancy"] == 2 / 4
+    eng.step()                                 # t_step=4: short finishes
+    assert short.done and not long.done
+    assert reg.snapshot()["gauges"]["fleet/slot_occupancy"] == 1 / 4
+    eng.run([])                                # drain: all slots free
+    assert long.done
+    assert reg.snapshot()["gauges"]["fleet/slot_occupancy"] == 0.0
 
 
 # -- persistence: counters survive kill -> restore -> resume ------------------
